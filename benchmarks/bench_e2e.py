@@ -1,0 +1,53 @@
+"""Paper Fig. 6: normalized latency vs request rate, 4 systems x 2 datasets.
+
+Also covers Fig. 2 (FCFS vs ALISE on ShareGPT) as the orca-vs-alise columns.
+``derived`` = normalized latency in ms/token at each (system, dataset, rate).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, note
+from repro.core.simulator import build_predictor, run_sim
+from repro.core.trace import TraceConfig
+
+RATES = {"alpaca": (4.0, 8.0, 12.0, 16.0, 24.0),
+         "sharegpt": (0.5, 1.0, 2.0, 3.0, 4.0)}
+SYSTEMS = ("orca", "vllm", "alise", "oracle")
+DURATION = 60.0
+
+
+def run(model: str = "opt-13b") -> dict:
+    results = {}
+    for dataset, rates in RATES.items():
+        for rate in rates:
+            row = {}
+            for system in SYSTEMS:
+                t0 = time.perf_counter()
+                r = run_sim(model=model, strategy=system, dataset=dataset,
+                            rate=rate, duration=DURATION, seed=0)
+                wall_us = (time.perf_counter() - t0) * 1e6
+                nl_ms = r.normalized_latency * 1e3
+                row[system] = nl_ms
+                emit(f"e2e/{dataset}/{system}/rate{rate}", wall_us,
+                     f"norm_latency_ms={nl_ms:.2f};done={r.completed}/{r.total};"
+                     f"preempt={r.preemptions}")
+            results[(dataset, rate)] = row
+            if row["alise"] > 0:
+                note(f"[fig6] {dataset} rate={rate:5.1f} | "
+                     + " ".join(f"{s}={row[s]:8.2f}ms" for s in SYSTEMS)
+                     + f" | alise/vllm={row['vllm']/max(row['alise'],1e-9):.2f}x")
+    # headline: max speedup vs vLLM at iso-rate
+    for dataset in RATES:
+        sp = max(results[(dataset, r)]["vllm"]
+                 / max(results[(dataset, r)]["alise"], 1e-9)
+                 for r in RATES[dataset])
+        emit(f"e2e/{dataset}/max_speedup_vs_vllm", 0.0, f"{sp:.2f}x")
+        note(f"[fig6] {dataset}: max ALISE-vs-vLLM normalized-latency "
+             f"advantage = {sp:.2f}x (paper: up to "
+             f"{'1.8x' if dataset == 'alpaca' else '2.1x'})")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,33 @@
+"""Paper Fig. 2 (motivation): end-to-end latency, FCFS vs ALISE speculative
+scheduling, OPT-13B on ShareGPT with rising request rates."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, note
+from repro.core.simulator import run_sim
+
+RATES = (0.5, 1.0, 2.0, 3.0, 4.0, 5.0)
+
+
+def run(model: str = "opt-13b") -> dict:
+    out = {}
+    for rate in RATES:
+        t0 = time.perf_counter()
+        fcfs = run_sim(model=model, strategy="orca", dataset="sharegpt",
+                       rate=rate, duration=60.0, seed=0)
+        alise = run_sim(model=model, strategy="alise", dataset="sharegpt",
+                        rate=rate, duration=60.0, seed=0)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        out[rate] = (fcfs.mean_latency, alise.mean_latency)
+        emit(f"hol/rate{rate}", wall_us,
+             f"fcfs_s={fcfs.mean_latency:.2f};alise_s={alise.mean_latency:.2f};"
+             f"ratio={fcfs.mean_latency/max(alise.mean_latency,1e-9):.2f}")
+        note(f"[fig2] rate={rate:4.1f} FCFS={fcfs.mean_latency:7.2f}s "
+             f"ALISE={alise.mean_latency:7.2f}s "
+             f"({fcfs.mean_latency/max(alise.mean_latency,1e-9):.2f}x)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Paper Table 2: retrieval-based vs proxy-based length prediction —
+accuracy, prediction error, prediction latency, and downstream throughput."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, note
+from repro.core.simulator import ServingSimulator, SimConfig, build_predictor
+from repro.core.trace import TraceConfig, generate_trace
+
+BINS = np.array([0, 32, 64, 128, 256, 512, 1024, 2048, 10**9])
+
+
+def _eval_predictor(kind: str, dataset: str, n_eval: int = 400, seed: int = 0):
+    tc = TraceConfig(dataset=dataset, rate=10, duration=1e9,
+                     max_requests=n_eval, seed=seed + 1)
+    trace = generate_trace(tc)
+    pred = build_predictor(kind, tc, 1024, seed=seed)
+    errs, accs, lats = [], [], []
+    for r in trace.requests:
+        p = pred.predict(r.prompt_tokens, true_len=r.true_out_len)
+        errs.append(abs(p.length - r.true_out_len) / r.true_out_len)
+        accs.append(int(np.digitize(p.length, BINS)
+                        == np.digitize(r.true_out_len, BINS)))
+        lats.append(p.latency_s)
+        pred.update(r.prompt_tokens, r.true_out_len)
+    return (float(np.mean(accs)), float(np.mean(errs)),
+            float(np.mean(lats)) * 1e3, pred)
+
+
+def run(model: str = "opt-13b") -> dict:
+    out = {}
+    for dataset in ("alpaca", "sharegpt"):
+        for kind in ("proxy", "retrieval"):
+            acc, err, lat_ms, pred = _eval_predictor(kind, dataset)
+            # downstream throughput: same trace served with this predictor
+            tc = TraceConfig(dataset=dataset,
+                             rate=24.0 if dataset == "alpaca" else 4.0,
+                             duration=60.0, seed=0)
+            trace = generate_trace(tc)
+            sim = ServingSimulator(SimConfig(model=model, strategy="alise"),
+                                   trace, predictor=pred)
+            res = sim.run()
+            out[(dataset, kind)] = dict(acc=acc, err=err, lat_ms=lat_ms,
+                                        norm_ms=res.normalized_latency * 1e3)
+            emit(f"predictor/{dataset}/{kind}", lat_ms * 1e3,
+                 f"accuracy={acc:.3f};pred_error={err:.3f};"
+                 f"norm_latency_ms={res.normalized_latency*1e3:.2f}")
+        a, b = out[(dataset, "retrieval")], out[(dataset, "proxy")]
+        note(f"[tab2] {dataset}: retrieval acc={a['acc']:.3f} err={a['err']:.3f} "
+             f"lat={a['lat_ms']:.2f}ms | proxy acc={b['acc']:.3f} "
+             f"err={b['err']:.3f} lat={b['lat_ms']:.2f}ms | "
+             f"throughput gain={b['norm_ms']/max(a['norm_ms'],1e-9):.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Roofline table from the dry-run cache: per (arch x shape x mesh) the three
+terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS and the roofline
+fraction (deliverable g).  Prefers the analytic terms (runs/roofline.jsonl,
+regenerated on the fly if stale) and also emits every measured §Perf opt
+variant so before/after pairs live in bench_output.txt."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit, note
+
+DEFAULT = Path("runs/dryrun.jsonl")
+ANALYTIC = Path("runs/roofline.jsonl")
+
+
+def load(path: Path = DEFAULT):
+    rows = []
+    if not path.exists():
+        note(f"[roofline] {path} missing — run `python -m repro.launch.dryrun`")
+        return rows
+    seen = {}
+    for line in path.read_text().splitlines():
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+               json.dumps(r.get("opt") or {}, sort_keys=True))
+        seen[key] = r          # last write wins (re-runs supersede)
+    return list(seen.values())
+
+
+def run(path: Path = DEFAULT) -> list:
+    if path.exists():
+        from repro.launch.roofline import rebuild_table
+        rebuild_table(path, ANALYTIC)       # refresh analytic terms
+    rows = load(ANALYTIC if ANALYTIC.exists() else path)
+    ok = [r for r in rows if "roofline_analytic" in r or "roofline" in r]
+    note(f"[roofline] {len(ok)} compiled cells, "
+         f"{sum(1 for r in rows if r.get('skipped'))} documented skips, "
+         f"{sum(1 for r in rows if 'error' in r)} errors")
+    for r in sorted(ok, key=lambda x: (x["shape"], x["arch"], x["mesh"],
+                                       json.dumps(x.get("opt") or {}))):
+        rf = r.get("roofline_analytic") or r["roofline"]
+        bound_us = rf["bound_s"] * 1e6
+        opt = r.get("opt") or {}
+        tag = ("/opt:" + ",".join(f"{k}={v}" for k, v in sorted(opt.items()))
+               if opt else "")
+        frac = rf.get("roofline_fraction")
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{tag}", bound_us,
+             f"dominant={rf['dominant']};compute_s={rf['compute_s']:.4g};"
+             f"memory_s={rf['memory_s']:.4g};"
+             f"collective_s={rf['collective_s']:.4g};"
+             f"useful_flops_ratio={rf['useful_flops_ratio']:.3f}"
+             + (f";roofline_fraction={frac:.3f}" if frac is not None else ""))
+    return ok
+
+
+if __name__ == "__main__":
+    run()

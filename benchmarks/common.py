@@ -1,0 +1,30 @@
+"""Shared benchmark helpers.  Output protocol: ``name,us_per_call,derived``
+CSV rows (one per measurement), plus human-readable tables to stderr."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Callable
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+    sys.stdout.flush()
+
+
+def note(msg: str) -> None:
+    print(msg, file=sys.stderr)
+    sys.stderr.flush()
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time of fn(*args) in microseconds."""
+    import numpy as np
+    for _ in range(warmup):
+        fn(*args)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)

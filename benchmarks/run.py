@@ -1,0 +1,53 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only SECTION]
+
+Emits ``name,us_per_call,derived`` CSV on stdout; commentary on stderr.
+Sections: e2e (Fig. 2+6), memory (Fig. 8), predictor (Table 2),
+latency (Fig. 9), models (Table 3), kernels (§3.3), roofline (§g),
+cluster (beyond-paper).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import note
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of sections")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_cluster, bench_e2e, bench_hol,
+                            bench_kernels, bench_latency, bench_memory,
+                            bench_models, bench_predictor, bench_roofline)
+    sections = {
+        "hol": bench_hol.run,
+        "e2e": bench_e2e.run,
+        "memory": bench_memory.run,
+        "predictor": bench_predictor.run,
+        "latency": bench_latency.run,
+        "models": bench_models.run,
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,
+        "cluster": bench_cluster.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(sections))
+    print("name,us_per_call,derived")
+    for name in chosen:
+        note(f"=== bench section: {name} ===")
+        t0 = time.time()
+        try:
+            sections[name]()
+        except Exception as e:  # keep the harness going; report the failure
+            note(f"[{name}] FAILED: {e!r}")
+            print(f"{name}/FAILED,0.0,{e!r}")
+        note(f"=== {name} done in {time.time()-t0:.1f}s ===")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Scheduler shootout on a real JAX model: ORCA-FCFS vs vLLM-FCFS vs ALISE.
+
+    PYTHONPATH=src python examples/scheduler_comparison.py
+
+Uses a heterogeneous burst (2 long jobs arrive first, 6 short jobs right
+behind them) on a 2-slot engine — the paper's HoL-blocking scenario (Fig. 2)
+in miniature.  ALISE preempts the long jobs and finishes the shorts first;
+the FCFS baselines make the shorts wait.
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.engine import EngineConfig, ServingEngine
+from repro.core.predictor import OraclePredictor
+from repro.core.quantization import kv_bytes_per_token
+from repro.core.request import Request, reset_request_counter
+from repro.models.model import Model
+
+
+def burst(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    reset_request_counter()
+    reqs = []
+    for out in (40, 40, 3, 3, 3, 3, 3, 3):
+        plen = int(rng.integers(6, 12))
+        reqs.append(Request(prompt_len=plen, arrival_time=0.0,
+                            true_out_len=out,
+                            prompt_tokens=rng.integers(
+                                2, cfg.vocab_size, plen).tolist()))
+    return reqs
+
+
+def main():
+    cfg = get_smoke_config("granite-3-8b")
+    model = Model(cfg, attn_chunk=32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    bpt = kv_bytes_per_token(cfg.num_layers, cfg.num_kv_heads, cfg.hd)
+
+    print(f"{'system':10s} {'mean lat':>9s} {'short-job lat':>14s} "
+          f"{'long-job lat':>13s} {'preempts':>9s}")
+    for strategy in ("orca", "vllm", "alise"):
+        reqs = burst(cfg)
+        eng = ServingEngine(model, params, EngineConfig(
+            max_slots=2, max_seq_len=64, max_new_tokens=48,
+            strategy=strategy, quantize_offload=True,
+            hbm_bytes=2 * 55 * bpt), predictor=OraclePredictor())
+        # stagger: longs first, then shorts (HoL setup)
+        t = 0.0
+        for r in reqs[:2]:
+            eng.submit(r, t)
+        for _ in range(4):
+            eng.step(t)
+            t += 0.05
+        for r in reqs[2:]:
+            eng.submit(r, t)
+        for _ in range(1000):
+            if not eng.sched.live:
+                break
+            eng.step(t)
+            t += 0.05
+        lat = np.array([r.e2e_latency for r in reqs])
+        shorts = np.array([r.e2e_latency for r in reqs if r.true_out_len <= 3])
+        longs = np.array([r.e2e_latency for r in reqs if r.true_out_len > 3])
+        print(f"{strategy:10s} {lat.mean():8.2f}s {shorts.mean():13.2f}s "
+              f"{longs.mean():12.2f}s {sum(r.preempt_count for r in reqs):9d}")
+    print("\nALISE should cut the short-job latency sharply (HoL fix) at a "
+          "small cost to the long jobs.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""ALISE paper core: speculative scheduling + adaptive KV memory management."""

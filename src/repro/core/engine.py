@@ -1,0 +1,380 @@
+"""Real-execution serving engine: continuous batching + ALISE scheduling over
+an actual JAX model (paper §3.3).
+
+The engine drives the same Scheduler / TieredKVManager as the simulator, but
+executes true ``Model.prefill`` / ``Model.decode_step`` calls:
+
+  * slot-based decode batch (fixed shapes => one compiled decode_step);
+  * request-level KV swapping between the device cache ("HBM") and a host
+    numpy pool ("DRAM"), INT8-quantized on offload per the paper's Eq. 8;
+  * recompute strategy re-runs prefill over prompt+generated tokens;
+  * greedy/temperature sampling; EOS or length termination;
+  * per-iteration wall-time profiling used to fit the Eq. 3-5 latency model.
+
+Correctness invariant (tested): with greedy sampling and quantization off,
+generated tokens are bit-identical no matter how jobs are preempted/swapped.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.latency_model import LatencyModel
+from repro.core.memory_manager import MemoryConfig, TieredKVManager
+from repro.core.predictor import LengthPredictor, RetrievalPredictor
+from repro.core.quantization import dequantize_np, kv_bytes_per_token, quantize_np
+from repro.core.request import KVLocation, Request, RequestState
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.models.model import Model
+
+
+@dataclass
+class EngineConfig:
+    max_slots: int = 8
+    max_seq_len: int = 256
+    max_new_tokens: int = 128
+    eos_token: int = 1
+    greedy: bool = True
+    temperature: float = 1.0
+    quantize_offload: bool = True
+    hbm_bytes: Optional[float] = None      # default: fits ~max_slots*max_seq
+    swap_bw: float = 32e9
+    strategy: str = "alise"
+    n_queues: int = 4
+    base_quantum: float = 0.25
+    quantum_growth: float = 4.0
+    age_threshold: float = 2.0
+    respect_true_len: bool = True          # stop at trace's true_out_len
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, cfg: EngineConfig,
+                 predictor: Optional[LengthPredictor] = None,
+                 latency: Optional[LatencyModel] = None):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        acfg = model.cfg
+        bpt = kv_bytes_per_token(acfg.num_layers, acfg.num_kv_heads, acfg.hd)
+        hbm = cfg.hbm_bytes or (cfg.max_slots * cfg.max_seq_len * bpt)
+        mem_cfg = MemoryConfig(
+            hbm_bytes=hbm, dram_bytes=1e12, bytes_per_token_fp=bpt,
+            swap_bw=cfg.swap_bw, quantize_offload=cfg.quantize_offload,
+            reserve_policy="reserve_max" if cfg.strategy == "orca" else "ondemand",
+            reserve_max_tokens=cfg.max_new_tokens)
+        self.mem = TieredKVManager(mem_cfg)
+        self.predictor = predictor or RetrievalPredictor(seed=cfg.seed)
+        self.latency = latency or LatencyModel(t0=1e-4, alpha=1e-6, beta=1e-2)
+        sched_cfg = SchedulerConfig(
+            max_batch=cfg.max_slots, n_queues=cfg.n_queues,
+            base_quantum=cfg.base_quantum, quantum_growth=cfg.quantum_growth,
+            age_threshold=cfg.age_threshold, strategy=cfg.strategy,
+            max_new_tokens=cfg.max_new_tokens)
+        self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
+
+        # --- device state: slotted decode cache
+        self.cache = model.init_cache(cfg.max_slots, cfg.max_seq_len)
+        self.slot_req: List[Optional[int]] = [None] * cfg.max_slots
+        self.host_pool: Dict[int, dict] = {}       # req_id -> offloaded KV
+        self._axes = self._cache_batch_axes()
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(model.prefill)
+        self.iter_times: List[tuple] = []          # (ctx_tokens, batch, seconds)
+        self.prefill_times: List[tuple] = []
+        self._generated_of: Dict[int, List[int]] = {}
+
+    # ----------------------------------------------------------- cache ops
+    def _cache_batch_axes(self) -> Dict[str, int]:
+        fam = self.model.cfg.family
+        axes = {"lengths": 0}
+        if fam == "ssm":
+            axes.update(conv=1, ssm=1)
+        elif fam == "hybrid":
+            axes.update(k=1, v=1, conv=2, ssm=2)
+        else:
+            axes.update(k=1, v=1)
+            if self.model.cfg.is_encoder_decoder:
+                axes.update(xk=1, xv=1)
+        return axes
+
+    def _slot_get(self, slot: int) -> Dict[str, np.ndarray]:
+        out = {}
+        for key, arr in self.cache.items():
+            ax = self._axes[key]
+            out[key] = np.asarray(jax.device_get(
+                jnp.take(arr, slot, axis=ax)))
+        return out
+
+    def _slot_put(self, slot: int, data: Dict[str, np.ndarray]) -> None:
+        new = {}
+        for key, arr in self.cache.items():
+            ax = self._axes[key]
+            idx = [slice(None)] * arr.ndim
+            idx[ax] = slot
+            new[key] = arr.at[tuple(idx)].set(jnp.asarray(data[key], arr.dtype))
+        self.cache = new
+
+    def _slot_clear(self, slot: int) -> None:
+        idx_len = self.cache["lengths"].at[slot].set(0)
+        self.cache = {**self.cache, "lengths": idx_len}
+        self.slot_req[slot] = None
+
+    def _free_slot(self) -> Optional[int]:
+        for i, rid in enumerate(self.slot_req):
+            if rid is None:
+                return i
+        return None
+
+    # -------------------------------------------------------------- prefill
+    def _run_prefill(self, req: Request, tokens: List[int]) -> int:
+        """Prefill `tokens`, place KV into a free slot; returns sampled token."""
+        slot = self._free_slot()
+        assert slot is not None, "caller must check slot availability"
+        t0 = time.perf_counter()
+        S = len(tokens)
+        fam = self.model.cfg.family
+        if fam in ("ssm", "hybrid"):
+            # SSM state depends on every step: no padding allowed
+            toks = jnp.asarray(tokens, jnp.int32)[None, :]
+            batch = {"tokens": toks}
+        else:
+            bucket = max(32, 1 << (S - 1).bit_length())   # pow2 buckets
+            padded = tokens + [0] * (bucket - S)
+            batch = {"tokens": jnp.asarray(padded, jnp.int32)[None, :],
+                     "last_index": jnp.asarray([S - 1], jnp.int32)}
+        logits, pcache = self._prefill(self.params, batch)
+        nxt = self._sample(logits[0])
+        # write the prefill cache into the slot
+        S = len(tokens)
+        data = {}
+        for key, arr in self.cache.items():
+            ax = self._axes[key]
+            slot_shape = list(arr.shape)
+            del slot_shape[ax]
+            if key == "lengths":
+                data[key] = np.asarray(S, np.int32)
+                continue
+            src = np.asarray(jax.device_get(jnp.take(pcache[key], 0, axis=ax)))
+            buf = np.zeros(slot_shape, arr.dtype)
+            if key in ("k", "v"):           # seq axis: trim bucket pad, pad to Smax
+                sl = [slice(None)] * len(slot_shape)
+                sl[1] = slice(0, S)
+                buf[tuple(sl)] = src[:, :S]
+            else:
+                buf[...] = src
+            data[key] = buf
+        self._slot_put(slot, data)
+        self.slot_req[slot] = req.req_id
+        dt = time.perf_counter() - t0
+        self.prefill_times.append((S, dt))
+        return int(nxt)
+
+    def _sample(self, logits: jnp.ndarray) -> int:
+        if self.cfg.greedy:
+            return int(jnp.argmax(logits))
+        key = jax.random.PRNGKey(int(time.time_ns()) % (2**31))
+        return int(jax.random.categorical(key, logits / self.cfg.temperature))
+
+    # ------------------------------------------------------------ swapping
+    def _offload(self, req: Request) -> None:
+        slot = self.slot_req.index(req.req_id)
+        data = self._slot_get(slot)
+        length = int(data["lengths"])
+        stored = {"lengths": length}
+        for key, arr in data.items():
+            if key == "lengths":
+                continue
+            if self.cfg.quantize_offload and key in ("k", "v"):
+                trimmed = self._trim_seq(key, arr, length)
+                q, lam, z = quantize_np(trimmed, bits=8, axis=-1)
+                stored[key] = ("q8", q, lam, z, trimmed.dtype.name)
+            else:
+                stored[key] = ("raw", self._trim_seq(key, arr, length))
+        self.host_pool[req.req_id] = stored
+        self._slot_clear(slot)
+
+    def _trim_seq(self, key: str, arr: np.ndarray, length: int) -> np.ndarray:
+        if key in ("k", "v"):
+            return arr[:, :length] if arr.ndim >= 2 else arr
+        return arr
+
+    def _upload(self, req: Request) -> None:
+        slot = self._free_slot()
+        assert slot is not None
+        stored = self.host_pool.pop(req.req_id)
+        length = stored["lengths"]
+        data = {}
+        for key, arr in self.cache.items():
+            ax = self._axes[key]
+            slot_shape = list(arr.shape)
+            del slot_shape[ax]
+            if key == "lengths":
+                data[key] = np.asarray(length, np.int32)
+                continue
+            item = stored[key]
+            if item[0] == "q8":
+                _, q, lam, z, dt = item
+                src = dequantize_np(q, lam, z, dtype=np.float32)
+            else:
+                src = item[1]
+            buf = np.zeros(slot_shape, arr.dtype)
+            if key in ("k", "v"):
+                sl = [slice(None)] * len(slot_shape)
+                sl[1] = slice(0, length)
+                buf[tuple(sl)] = src
+            else:
+                buf[...] = src
+            data[key] = buf
+        self._slot_put(slot, data)
+        self.slot_req[slot] = req.req_id
+
+    # ------------------------------------------------------------ main loop
+    def submit(self, req: Request, now: float = 0.0) -> None:
+        self.sched.submit(req, now)
+        self._generated_of[req.req_id] = []
+
+    def serve(self, requests: List[Request], realtime: bool = False,
+              max_wall_s: float = 600.0) -> List[Request]:
+        """Serve all requests to completion; returns them with metrics."""
+        t_start = time.perf_counter()
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        i_arr = 0
+
+        def now() -> float:
+            return time.perf_counter() - t_start
+
+        while (i_arr < len(pending) or self.sched.live) \
+                and now() < max_wall_s:
+            t = now()
+            while i_arr < len(pending) and (
+                    not realtime or pending[i_arr].arrival_time <= t):
+                self.submit(pending[i_arr], t)
+                i_arr += 1
+            ran_any = self.step(now())
+            if not ran_any:
+                if i_arr >= len(pending) and not self.sched.live:
+                    break
+                time.sleep(0.0005)
+        return requests
+
+    def step(self, t: float) -> bool:
+        """One scheduling + execution iteration; returns whether work ran."""
+        generated_of = self._generated_of
+
+        def now() -> float:
+            return t
+
+        if True:
+            plan = self.sched.plan(now())
+
+            for r in plan.drop:            # recompute-strategy eviction
+                slot = self.slot_req.index(r.req_id)
+                self._slot_clear(slot)
+                self.mem.drop(r)
+                r.state = RequestState.QUEUED
+                r.preempt_count += 1
+            for r in plan.swap_out:
+                self._offload(r)
+                self.mem.offload(r, now())
+                r.state = RequestState.PREEMPTED
+                r.preempt_count += 1
+            for r in plan.swap_in:
+                if self._free_slot() is None:
+                    continue               # retry next iteration
+                self._upload(r)
+                self.mem.upload(r, now())
+                r.state = RequestState.PREEMPTED
+                self.sched._swap_ready_at[r.req_id] = 0.0
+
+            ran_any = False
+            # fresh prefills + recomputes
+            for r in plan.prefill + plan.recompute:
+                if self._free_slot() is None:
+                    continue               # slots (not bytes) exhausted
+                # cache invariant: the most recent sampled token's KV is not
+                # yet written (the next decode step feeds it), so a recompute
+                # prefill covers prompt + generated[:-1].
+                gen = generated_of[r.req_id]
+                toks = list(r.prompt_tokens) + (gen[:-1] if gen else [])
+                self.mem.admit(r)
+                r.state = RequestState.RUNNING
+                if r.first_scheduled_time is None:
+                    r.first_scheduled_time = now()
+                was_fresh = r.generated == 0
+                tok = self._run_prefill(r, toks)
+                ran_any = True
+                if was_fresh:              # first prefill emits a token
+                    self._accept_token(r, tok, generated_of, now())
+
+            # decode batch
+            runnable = [r for r in plan.run if r.req_id in self.slot_req]
+            if runnable:
+                t0 = time.perf_counter()
+                tokens = np.zeros((self.cfg.max_slots, 1), np.int32)
+                active = np.zeros((self.cfg.max_slots,), bool)
+                for r in runnable:
+                    slot = self.slot_req.index(r.req_id)
+                    prev = (generated_of[r.req_id][-1]
+                            if generated_of[r.req_id] else r.prompt_tokens[-1])
+                    tokens[slot, 0] = prev
+                    active[slot] = True
+                    r.state = RequestState.RUNNING
+                logits, self.cache = self._decode(
+                    self.params, self.cache, jnp.asarray(tokens))
+                # inactive slots must not advance
+                lengths = np.array(self.cache["lengths"])
+                lengths[~active] -= 1
+                self.cache = {**self.cache,
+                              "lengths": jnp.asarray(lengths)}
+                ctx_tokens = int(sum(r.context_len for r in runnable))
+                self.iter_times.append((ctx_tokens, len(runnable),
+                                        time.perf_counter() - t0))
+                for r in runnable:
+                    slot = self.slot_req.index(r.req_id)
+                    tok = self._sample(logits[slot])
+                    self._accept_token(r, tok, generated_of, now())
+                ran_any = True
+
+        return ran_any
+
+    def _accept_token(self, req: Request, tok: int, generated_of, t: float):
+        req.generated += 1
+        generated_of[req.req_id].append(tok)
+        req.output_tokens.append(tok)
+        if req.first_token_time is None:
+            req.first_token_time = t
+        if not self.mem.grow(req):
+            # engine HBM exhausted mid-iteration: offload highest-EWT resident
+            others = [r for r in self.sched.live.values()
+                      if self.mem.resident_hbm(r) and r.req_id != req.req_id]
+            if others:
+                victim = max(others, key=lambda r: r.context_len)
+                self._offload(victim)
+                self.mem.offload(victim, t)
+                victim.state = RequestState.PREEMPTED
+                victim.preempt_count += 1
+                self.mem.grow(req)
+        done = (tok == self.cfg.eos_token
+                or req.generated >= self.cfg.max_new_tokens
+                or req.context_len >= self.cfg.max_seq_len - 1
+                or (self.cfg.respect_true_len
+                    and req.generated >= req.true_out_len))
+        if done:
+            slot = self.slot_req.index(req.req_id)
+            self._slot_clear(slot)
+            self.sched.note_finished(req, t)
+        else:
+            self.sched.note_generated(req, t)
+
+    # ----------------------------------------------------------- profiling
+    def fit_latency_model(self) -> LatencyModel:
+        """Fit Eq. 3-5 coefficients from this engine's measured step times."""
+        decode = [(ctx / max(b, 1), dt / 1.0) for ctx, b, dt in self.iter_times]
+        return LatencyModel.fit(self.prefill_times, decode)

@@ -1,0 +1,223 @@
+"""Priority-based adaptive KV memory management (paper §3.2, Algorithm 2).
+
+Tracks KV residency per request across a two-tier hierarchy (HBM <-> host
+DRAM) with token-based accounting, INT8 compression of offloaded KV (paper's
+KV Compression) and an optional quantized *cold tier inside HBM* (beyond-paper
+TPU adaptation: quantize-in-place is cheaper than crossing the host link; see
+DESIGN.md §3).
+
+The manager performs the bookkeeping; *which* request to move is decided by
+the scheduler via EWT ordering and executed through :meth:`offload` /
+:meth:`upload` / :meth:`drop`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.request import KVLocation, Request
+
+
+@dataclass
+class SwapOp:
+    req_id: int
+    kind: str          # "upload" | "offload" | "quantize" | "dequantize"
+    bytes: float
+    issue_time: float
+    done_time: float = 0.0
+
+
+@dataclass
+class MemoryConfig:
+    hbm_bytes: float = 16e9              # per-replica KV budget (after weights)
+    dram_bytes: float = 256e9
+    bytes_per_token_fp: int = 2 * 40 * 40 * 128 * 2   # set per model
+    swap_bw: float = 32e9                # host link bytes/s (PCIe4 x16-class)
+    quantize_offload: bool = True        # paper: offloaded KV stored INT8
+    quant_ratio: float = 0.5             # int8 vs fp16
+    quantize_cold_hbm: bool = False      # beyond-paper HBM cold tier
+    reserve_policy: str = "ondemand"     # ondemand | reserve_max (ORCA-style)
+    reserve_max_tokens: int = 2048
+    admit_headroom: float = 0.02         # vLLM-style watermark: keep this
+                                         # fraction of HBM free at admission
+
+
+class TieredKVManager:
+    def __init__(self, cfg: MemoryConfig):
+        self.cfg = cfg
+        self.tokens: Dict[int, int] = {}            # req_id -> resident tokens
+        self.reserved: Dict[int, int] = {}          # req_id -> reserved tokens
+        self.location: Dict[int, KVLocation] = {}
+        self.used_hbm = 0.0
+        self.used_dram = 0.0
+        self.swap_log: List[SwapOp] = []
+        self._swap_free_at = 0.0                    # swap engine busy-until
+
+    # ------------------------------------------------------------- helpers
+    def _bytes(self, tokens: int, quantized: bool) -> float:
+        per = self.cfg.bytes_per_token_fp
+        return tokens * per * (self.cfg.quant_ratio if quantized else 1.0)
+
+    def _reservation(self, req: Request) -> int:
+        if self.cfg.reserve_policy == "reserve_max":
+            return req.prompt_len + self.cfg.reserve_max_tokens
+        return req.context_len + 1
+
+    def hbm_free(self) -> float:
+        return self.cfg.hbm_bytes - self.used_hbm
+
+    def hbm_bytes_of(self, req: Request) -> float:
+        quant = self.location.get(req.req_id) == KVLocation.HBM_Q8
+        return self._bytes(self.reserved.get(req.req_id, 0), quant)
+
+    def location_of(self, req: Request) -> KVLocation:
+        return self.location.get(req.req_id, KVLocation.NONE)
+
+    def resident_hbm(self, req: Request) -> bool:
+        return self.location_of(req) in (KVLocation.HBM, KVLocation.HBM_Q8)
+
+    # ---------------------------------------------------------- allocation
+    def can_admit(self, req: Request) -> bool:
+        need = self._bytes(self._reservation(req), False)
+        watermark = self.cfg.admit_headroom * self.cfg.hbm_bytes
+        return self.hbm_free() >= need + watermark
+
+    def admit(self, req: Request) -> None:
+        """Allocate HBM for a fresh prefill (QUEUED -> HBM)."""
+        assert self.location_of(req) == KVLocation.NONE
+        res = self._reservation(req)
+        self.tokens[req.req_id] = req.context_len
+        self.reserved[req.req_id] = res
+        self.location[req.req_id] = KVLocation.HBM
+        self.used_hbm += self._bytes(res, False)
+        req.kv_location = KVLocation.HBM
+
+    def grow(self, req: Request) -> bool:
+        """Account one decoded token; returns False on HBM exhaustion."""
+        rid = req.req_id
+        assert self.location_of(req) == KVLocation.HBM, req
+        self.tokens[rid] = req.context_len
+        if self.tokens[rid] < self.reserved[rid]:
+            return True
+        need = self._bytes(1, False)
+        if self.hbm_free() < need:
+            return False
+        self.reserved[rid] += 1
+        self.used_hbm += need
+        return True
+
+    # ------------------------------------------------------------ movement
+    def _swap_time(self, now: float, nbytes: float) -> float:
+        """Swap engine is a single DMA queue overlapped with compute."""
+        start = max(now, self._swap_free_at)
+        done = start + nbytes / self.cfg.swap_bw
+        self._swap_free_at = done
+        return done
+
+    def offload(self, req: Request, now: float) -> SwapOp:
+        """HBM -> DRAM (quantized per config).  Paper Alg. 2 'preemptive offload'."""
+        rid = req.req_id
+        assert self.resident_hbm(req)
+        was_quant = self.location[rid] == KVLocation.HBM_Q8
+        res = self.reserved[rid]
+        self.used_hbm -= self._bytes(res, was_quant)
+        quant = self.cfg.quantize_offload
+        nbytes = self._bytes(self.tokens[rid], quant)
+        self.used_dram += nbytes
+        self.reserved[rid] = self.tokens[rid]
+        self.location[rid] = KVLocation.DRAM
+        req.kv_location = KVLocation.DRAM
+        req.kv_quantized = quant
+        req.swap_out_bytes += nbytes
+        op = SwapOp(rid, "offload", nbytes, now, self._swap_time(now, nbytes))
+        self.swap_log.append(op)
+        return op
+
+    def upload(self, req: Request, now: float) -> SwapOp:
+        """DRAM -> HBM ('preemptive upload'); dequantizes back to fp16."""
+        rid = req.req_id
+        assert self.location_of(req) == KVLocation.DRAM
+        nbytes = self._bytes(self.tokens[rid], req.kv_quantized)
+        self.used_dram -= nbytes
+        res = self.tokens[rid] + 1
+        self.reserved[rid] = res
+        self.used_hbm += self._bytes(res, False)
+        self.location[rid] = KVLocation.HBM
+        req.kv_location = KVLocation.HBM
+        req.kv_quantized = False
+        req.swap_in_bytes += nbytes
+        op = SwapOp(rid, "upload", nbytes, now, self._swap_time(now, nbytes))
+        self.swap_log.append(op)
+        return op
+
+    def quantize_cold(self, req: Request, now: float) -> SwapOp:
+        """HBM fp16 -> HBM int8 cold tier (no host traffic; beyond-paper)."""
+        rid = req.req_id
+        assert self.location_of(req) == KVLocation.HBM
+        res = self.reserved[rid]
+        self.used_hbm -= self._bytes(res, False)
+        self.reserved[rid] = self.tokens[rid]
+        self.used_hbm += self._bytes(self.tokens[rid], True)
+        self.location[rid] = KVLocation.HBM_Q8
+        req.kv_location = KVLocation.HBM_Q8
+        req.kv_quantized = True
+        op = SwapOp(rid, "quantize", 0.0, now, now)   # on-chip, ~free
+        self.swap_log.append(op)
+        return op
+
+    def dequantize_cold(self, req: Request, now: float) -> SwapOp:
+        rid = req.req_id
+        assert self.location_of(req) == KVLocation.HBM_Q8
+        self.used_hbm -= self._bytes(self.reserved[rid], True)
+        res = self.tokens[rid] + 1
+        self.reserved[rid] = res
+        self.used_hbm += self._bytes(res, False)
+        self.location[rid] = KVLocation.HBM
+        req.kv_location = KVLocation.HBM
+        req.kv_quantized = False
+        op = SwapOp(rid, "dequantize", 0.0, now, now)
+        self.swap_log.append(op)
+        return op
+
+    def drop(self, req: Request) -> None:
+        """Delete KV entirely (Recompute-strategy eviction)."""
+        rid = req.req_id
+        loc = self.location_of(req)
+        if loc in (KVLocation.HBM, KVLocation.HBM_Q8):
+            self.used_hbm -= self._bytes(self.reserved[rid], loc == KVLocation.HBM_Q8)
+        elif loc == KVLocation.DRAM:
+            self.used_dram -= self._bytes(self.tokens[rid], req.kv_quantized)
+        self.tokens.pop(rid, None)
+        self.reserved.pop(rid, None)
+        self.location.pop(rid, None)
+        req.kv_location = KVLocation.NONE
+        req.kv_quantized = False
+        req.recompute_tokens += req.context_len
+
+    def free(self, req: Request) -> None:
+        """Release everything on finish."""
+        rid = req.req_id
+        loc = self.location_of(req)
+        if loc in (KVLocation.HBM, KVLocation.HBM_Q8):
+            self.used_hbm -= self._bytes(self.reserved[rid], loc == KVLocation.HBM_Q8)
+        elif loc == KVLocation.DRAM:
+            self.used_dram -= self._bytes(self.tokens[rid], req.kv_quantized)
+        self.tokens.pop(rid, None)
+        self.reserved.pop(rid, None)
+        self.location.pop(rid, None)
+        req.kv_location = KVLocation.NONE
+
+    # -------------------------------------------------------------- checks
+    def check_invariants(self) -> None:
+        hbm = sum(self._bytes(self.reserved[r], self.location[r] == KVLocation.HBM_Q8)
+                  for r in self.location
+                  if self.location[r] in (KVLocation.HBM, KVLocation.HBM_Q8))
+        dram = sum(self._bytes(self.tokens[r], True) if self._quant_of(r)
+                   else self._bytes(self.tokens[r], False)
+                   for r in self.location if self.location[r] == KVLocation.DRAM)
+        assert abs(hbm - self.used_hbm) < 1.0, (hbm, self.used_hbm)
+        assert abs(dram - self.used_dram) < 1.0, (dram, self.used_dram)
+        assert self.used_hbm <= self.cfg.hbm_bytes + 1.0
+
+    def _quant_of(self, rid: int) -> bool:
+        return self.cfg.quantize_offload

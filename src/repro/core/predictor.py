@@ -1,0 +1,238 @@
+"""Retrieval-based output-length prediction (paper §3.1, Algorithm 1).
+
+Pipeline:  prompt --encoder--> embedding --vector-DB top-k--> if max
+similarity >= s0: similarity-weighted average of neighbor lengths (case II);
+else: all-MLP regression decoder on the embedding (case I).  After each
+request finishes, the DB is updated with (embedding, true length).
+
+Encoder: the paper uses a frozen pre-trained BERT.  Offline here, so the
+frozen encoder is a hashed n-gram featurizer (deterministic, training-free) —
+mechanism-identical (fixed text -> vector map); see DESIGN.md §4.
+
+Baselines: ProxyPredictor (SSJF/S3-style regression model only, no DB) and
+OraclePredictor (perfect lengths).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.vector_db import VectorDB
+
+EMBED_DIM = 256
+
+
+# ------------------------------------------------------------------ encoder
+
+class HashedNgramEncoder:
+    """Frozen text encoder: *signed* hashed unigram+bigram counts, L2-normed.
+
+    Signed feature hashing (Weinberger et al.) gives collisions zero mean, so
+    the shared background vocabulary cancels out and topical tokens dominate
+    the cosine — the property the paper gets from a pre-trained BERT.
+    """
+
+    def __init__(self, dim: int = EMBED_DIM, seed: int = 0):
+        self.dim = dim
+        rng = np.random.default_rng(seed)
+        self._salt1 = int(rng.integers(1, 2**31 - 1)) | 1
+        self._salt2 = int(rng.integers(1, 2**31 - 1)) | 1
+        self._salt3 = int(rng.integers(1, 2**31 - 1)) | 1
+
+    def _feat(self, key: int) -> tuple[int, float]:
+        h = (key * self._salt1) % 2_147_483_647
+        sign = 1.0 if ((key * self._salt3) >> 3) & 1 else -1.0
+        return h % self.dim, sign
+
+    def encode(self, tokens: Sequence[int]) -> np.ndarray:
+        v = np.zeros((self.dim,), np.float32)
+        prev = -1
+        for t in tokens:
+            i, s = self._feat(t + 1)
+            v[i] += s
+            if prev >= 0:
+                i2, s2 = self._feat((prev + 1) * 65_537 + t * self._salt2)
+                v[i2] += 0.5 * s2
+            prev = t
+        n = np.linalg.norm(v)
+        return v / max(n, 1e-9)
+
+
+# -------------------------------------------------------------- MLP decoder
+
+class MLPDecoder:
+    """All-MLP regression head: embedding -> log(output length).  Numpy SGD
+    (Adam) training; inference is two matmuls, so prediction latency is the
+    ~µs the paper's Table 2 reports for the fallback path."""
+
+    def __init__(self, dim: int = EMBED_DIM, hidden: int = 256, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        self.w1 = rng.standard_normal((dim, hidden)).astype(np.float32) / np.sqrt(dim)
+        self.b1 = np.zeros((hidden,), np.float32)
+        self.w2 = rng.standard_normal((hidden, 1)).astype(np.float32) / np.sqrt(hidden)
+        self.b2 = np.zeros((1,), np.float32)
+        self._adam = [np.zeros_like(p) for p in (self.w1, self.b1, self.w2, self.b2)
+                      for _ in (0, 1)]
+        self._t = 0
+
+    def forward(self, x: np.ndarray) -> np.ndarray:
+        h = np.maximum(x @ self.w1 + self.b1, 0.0)
+        return (h @ self.w2 + self.b2)[..., 0]
+
+    def predict(self, emb: np.ndarray) -> float:
+        return float(np.exp(np.clip(self.forward(emb[None]), 0.0, 9.0))[0])
+
+    def train(self, X: np.ndarray, y_len: np.ndarray, *, epochs: int = 60,
+              batch: int = 256, lr: float = 3e-3, seed: int = 0) -> float:
+        """Fit log-length regression; returns final RMSE in log space."""
+        y = np.log(np.maximum(y_len.astype(np.float32), 1.0))
+        rng = np.random.default_rng(seed)
+        n = X.shape[0]
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        for _ in range(epochs):
+            order = rng.permutation(n)
+            for i in range(0, n, batch):
+                idx = order[i:i + batch]
+                xb, yb = X[idx], y[idx]
+                h_pre = xb @ self.w1 + self.b1
+                h = np.maximum(h_pre, 0.0)
+                pred = (h @ self.w2 + self.b2)[..., 0]
+                g_out = (pred - yb)[:, None] * (2.0 / len(idx))
+                gw2 = h.T @ g_out
+                gb2 = g_out.sum(0)
+                gh = (g_out @ self.w2.T) * (h_pre > 0)
+                gw1 = xb.T @ gh
+                gb1 = gh.sum(0)
+                self._t += 1
+                params = [self.w1, self.b1, self.w2, self.b2]
+                grads = [gw1, gb1, gw2, gb2]
+                for j, (p, g) in enumerate(zip(params, grads)):
+                    m, v = self._adam[2 * j], self._adam[2 * j + 1]
+                    m[...] = b1 * m + (1 - b1) * g
+                    v[...] = b2 * v + (1 - b2) * g * g
+                    mh = m / (1 - b1 ** self._t)
+                    vh = v / (1 - b2 ** self._t)
+                    p -= lr * mh / (np.sqrt(vh) + eps)
+        pred = self.forward(X)
+        return float(np.sqrt(np.mean((pred - y) ** 2)))
+
+
+# ----------------------------------------------------------- predictor APIs
+
+@dataclass
+class Prediction:
+    length: int
+    source: str           # "retrieval" | "mlp" | "oracle" | "default"
+    latency_s: float      # wall time spent predicting
+
+
+class LengthPredictor:
+    """Interface used by the scheduler."""
+
+    name = "base"
+
+    def predict(self, tokens: Sequence[int], true_len: Optional[int] = None) -> Prediction:
+        raise NotImplementedError
+
+    def update(self, tokens: Sequence[int], true_len: int) -> None:
+        pass
+
+
+class RetrievalPredictor(LengthPredictor):
+    """The paper's predictor: vector DB + MLP fallback (Algorithm 1)."""
+
+    name = "retrieval"
+
+    def __init__(self, threshold: float = 0.22, k: int = 8,
+                 dim: int = EMBED_DIM, use_lsh: bool = False,
+                 db_capacity: int = 65536, seed: int = 0):
+        self.encoder = HashedNgramEncoder(dim, seed)
+        self.db = VectorDB(dim, capacity=db_capacity, use_lsh=use_lsh, seed=seed)
+        self.mlp = MLPDecoder(dim, seed=seed)
+        self.threshold = threshold
+        self.k = k
+        self.stats = {"retrieval": 0, "mlp": 0}
+
+    def predict(self, tokens, true_len=None) -> Prediction:
+        t0 = time.perf_counter()
+        emb = self.encoder.encode(tokens)
+        sims, lengths = self.db.search(emb, self.k)
+        est = self.db.predict_from_neighbors(sims, lengths, self.threshold)
+        if est is None:
+            est = self.mlp.predict(emb)
+            src = "mlp"
+        else:
+            src = "retrieval"
+        self.stats[src] += 1
+        return Prediction(length=max(int(round(est)), 1), source=src,
+                          latency_s=time.perf_counter() - t0)
+
+    def update(self, tokens, true_len: int) -> None:
+        emb = self.encoder.encode(tokens)
+        self.db.add(emb, float(true_len))
+
+    def pretrain(self, token_lists: List[Sequence[int]], lengths: np.ndarray,
+                 warm_db_fraction: float = 0.5, epochs: int = 60) -> float:
+        """Fit the MLP on a history corpus and warm the DB with part of it
+        (the paper builds its DB from OpenChat and fine-tunes the decoder)."""
+        X = np.stack([self.encoder.encode(t) for t in token_lists])
+        rmse = self.mlp.train(X, np.asarray(lengths, np.float32), epochs=epochs)
+        n_db = int(len(token_lists) * warm_db_fraction)
+        for i in range(n_db):
+            self.db.add(X[i], float(lengths[i]))
+        return rmse
+
+
+class ProxyPredictor(LengthPredictor):
+    """Proxy-model baseline (SSJF / S^3): regression model only, no DB.
+
+    ``extra_latency_s`` models the heavier DistilBERT-class proxy forward pass
+    (paper Table 2 reports ~12ms vs ~4ms); we add it to the measured time when
+    simulating and spin for it in engine mode.
+    """
+
+    name = "proxy"
+
+    def __init__(self, dim: int = EMBED_DIM, extra_latency_s: float = 0.008,
+                 noise: float = 0.35, seed: int = 0):
+        self.encoder = HashedNgramEncoder(dim, seed)
+        self.mlp = MLPDecoder(dim, seed=seed)
+        self.extra_latency_s = extra_latency_s
+        self.noise = noise
+        self._rng = np.random.default_rng(seed + 1)
+
+    def predict(self, tokens, true_len=None) -> Prediction:
+        t0 = time.perf_counter()
+        emb = self.encoder.encode(tokens)
+        est = self.mlp.predict(emb)
+        # proxy models are coarser (bucket classifiers); extra multiplicative noise
+        est *= float(np.exp(self._rng.normal(0.0, self.noise)))
+        return Prediction(length=max(int(round(est)), 1), source="mlp",
+                          latency_s=time.perf_counter() - t0 + self.extra_latency_s)
+
+    def pretrain(self, token_lists, lengths, epochs: int = 60) -> float:
+        X = np.stack([self.encoder.encode(t) for t in token_lists])
+        return self.mlp.train(X, np.asarray(lengths, np.float32), epochs=epochs)
+
+
+class OraclePredictor(LengthPredictor):
+    name = "oracle"
+
+    def predict(self, tokens, true_len=None) -> Prediction:
+        assert true_len is not None, "oracle needs ground truth"
+        return Prediction(length=int(true_len), source="oracle", latency_s=0.0)
+
+
+class DefaultPredictor(LengthPredictor):
+    """FCFS systems don't predict; constant guess for bookkeeping only."""
+
+    name = "default"
+
+    def __init__(self, const: int = 128):
+        self.const = const
+
+    def predict(self, tokens, true_len=None) -> Prediction:
+        return Prediction(length=self.const, source="default", latency_s=0.0)

@@ -1,0 +1,94 @@
+"""KV-cache quantization (paper Eq. 8): channel-wise b-bit integer quantization.
+
+The paper stores preempted jobs' KV caches as INT8 and dequantizes back to the
+compute dtype on resume.  We implement the standard asymmetric affine scheme
+
+    x_q = round(x / lam + z),      x_hat = lam * (x_q - z)
+    lam = (max - min) / (2^b - 1), z   = round(-min / lam)
+
+(the paper's printed zero-point formula ``z = round(-2^b/(max-min))`` is
+dimensionally a typo for the standard form above; noted in DESIGN.md).
+
+Channel-wise: statistics are taken per channel (last axis by default), which
+is what keeps attention quality acceptable for K tensors.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class QuantizedTensor:
+    q: jnp.ndarray        # int8/int4-in-int8 codes
+    scale: jnp.ndarray    # lam, broadcastable to x
+    zero: jnp.ndarray     # z, same shape as scale
+    bits: int
+
+    @property
+    def nbytes(self) -> int:
+        return (self.q.size * self.bits) // 8 + self.scale.size * 4 + self.zero.size * 4
+
+
+def quantize(x, bits: int = 8, axis: int = -1) -> QuantizedTensor:
+    """Channel-wise asymmetric quantization along ``axis`` (kept per-channel)."""
+    xf = x.astype(jnp.float32)
+    reduce_axes = tuple(i for i in range(x.ndim) if i != (axis % x.ndim))
+    mx = xf.max(axis=reduce_axes, keepdims=True)
+    mn = xf.min(axis=reduce_axes, keepdims=True)
+    qmax = 2.0 ** bits - 1.0
+    lam = jnp.maximum((mx - mn) / qmax, 1e-8)
+    z = jnp.round(-mn / lam)
+    q = jnp.clip(jnp.round(xf / lam + z), 0, qmax)
+    store_dtype = jnp.int8 if bits <= 8 else jnp.int32
+    # int8 holds [0,255] as unsigned by offsetting into signed range
+    q = (q - 128).astype(store_dtype) if bits == 8 else q.astype(store_dtype)
+    return QuantizedTensor(q=q, scale=lam, zero=z, bits=bits)
+
+
+def dequantize(qt: QuantizedTensor, dtype=jnp.bfloat16):
+    q = qt.q.astype(jnp.float32)
+    if qt.bits == 8:
+        q = q + 128.0
+    return (qt.scale * (q - qt.zero)).astype(dtype)
+
+
+def quantize_np(x: np.ndarray, bits: int = 8, axis: int = -1):
+    """Numpy twin used for host-side (DRAM tier) storage in the engine."""
+    xf = x.astype(np.float32)
+    reduce_axes = tuple(i for i in range(x.ndim) if i != (axis % x.ndim))
+    mx = xf.max(axis=reduce_axes, keepdims=True)
+    mn = xf.min(axis=reduce_axes, keepdims=True)
+    qmax = 2.0 ** bits - 1.0
+    lam = np.maximum((mx - mn) / qmax, 1e-8)
+    z = np.round(-mn / lam)
+    q = np.clip(np.round(xf / lam + z), 0, qmax)
+    q8 = (q - 128).astype(np.int8) if bits == 8 else q.astype(np.int32)
+    return q8, lam, z
+
+
+def dequantize_np(q8: np.ndarray, lam: np.ndarray, z: np.ndarray,
+                  bits: int = 8, dtype=np.float32) -> np.ndarray:
+    q = q8.astype(np.float32)
+    if bits == 8:
+        q = q + 128.0
+    return (lam * (q - z)).astype(dtype)
+
+
+def roundtrip_rel_error(x, bits: int = 8, axis: int = -1) -> float:
+    qt = quantize(x, bits=bits, axis=axis)
+    xh = dequantize(qt, dtype=jnp.float32)
+    num = jnp.abs(xh - x.astype(jnp.float32)).max()
+    den = jnp.maximum(jnp.abs(x.astype(jnp.float32)).max(), 1e-9)
+    return float(num / den)
+
+
+def kv_bytes_per_token(num_layers: int, num_kv_heads: int, head_dim: int,
+                       quantized: bool = False) -> int:
+    """Bytes of KV per token: 2 (K,V) x layers x heads x dim x dtype bytes."""
+    per = 2 * num_layers * num_kv_heads * head_dim
+    return per * (1 if quantized else 2)   # int8 vs bf16

@@ -1,0 +1,113 @@
+"""Request lifecycle objects shared by the scheduler, simulator and engine."""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"          # never run yet (no KV)
+    RUNNING = "running"        # in the current decode batch
+    PREEMPTED = "preempted"    # has KV somewhere, not in the batch
+    SWAPPING = "swapping"      # KV transfer in flight
+    FINISHED = "finished"
+    FAILED = "failed"
+
+
+class KVLocation(enum.Enum):
+    NONE = "none"              # no KV materialized (queued or recomputed away)
+    HBM = "hbm"
+    HBM_Q8 = "hbm_q8"          # quantized cold tier in HBM (beyond-paper)
+    DRAM = "dram"              # host memory (paper's CPU offload target)
+
+
+_req_counter = itertools.count()
+
+
+@dataclass
+class Request:
+    prompt_len: int
+    arrival_time: float
+    true_out_len: int                      # ground truth (sim / oracle / replay)
+    req_id: int = field(default_factory=lambda: next(_req_counter))
+    prompt_tokens: Optional[List[int]] = None   # engine mode
+    features: Optional[object] = None           # predictor embedding (np array)
+
+    # --- prediction / scheduling state ---
+    predicted_len: Optional[int] = None
+    priority_level: int = 0
+    level_enter_time: float = 0.0          # for virtual aging
+    demotions: int = 0
+
+    # --- progress ---
+    state: RequestState = RequestState.QUEUED
+    generated: int = 0
+    kv_location: KVLocation = KVLocation.NONE
+    kv_quantized: bool = False
+    output_tokens: List[int] = field(default_factory=list)
+
+    # --- metrics ---
+    first_scheduled_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    preempt_count: int = 0
+    swap_in_bytes: float = 0.0
+    swap_out_bytes: float = 0.0
+    recompute_tokens: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def context_len(self) -> int:
+        return self.prompt_len + self.generated
+
+    @property
+    def remaining_tokens_true(self) -> int:
+        return max(self.true_out_len - self.generated, 0)
+
+    def remaining_tokens_pred(self) -> int:
+        pred = self.predicted_len if self.predicted_len is not None else 128
+        return max(pred - self.generated, 1)
+
+    @property
+    def done(self) -> bool:
+        return self.state in (RequestState.FINISHED, RequestState.FAILED)
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    @property
+    def normalized_latency(self) -> Optional[float]:
+        lat = self.e2e_latency
+        if lat is None or self.generated == 0:
+            return None
+        return lat / self.generated
+
+
+def reset_runtime_state(req: Request) -> None:
+    """Clear everything a prior run mutated (traces are reusable objects)."""
+    req.predicted_len = None
+    req.priority_level = 0
+    req.level_enter_time = 0.0
+    req.demotions = 0
+    req.state = RequestState.QUEUED
+    req.generated = 0
+    req.kv_location = KVLocation.NONE
+    req.kv_quantized = False
+    req.output_tokens = []
+    req.first_scheduled_time = None
+    req.first_token_time = None
+    req.finish_time = None
+    req.preempt_count = 0
+    req.swap_in_bytes = 0.0
+    req.swap_out_bytes = 0.0
+    req.recompute_tokens = 0
+
+
+def reset_request_counter():
+    global _req_counter
+    _req_counter = itertools.count()

@@ -1,0 +1,280 @@
+"""Schedulers: ALISE speculative MLFQ-SRTF (paper §3.1) + FCFS baselines.
+
+ALISE mechanics implemented faithfully:
+  * priority = band of estimated *remaining* execution time (Eq. 3-5 via the
+    latency model + the length predictor), re-evaluated every iteration;
+  * virtual aging: waiting jobs are promoted one level after ``age_threshold``
+    seconds at a level (prevents starvation);
+  * misprediction handling: a job that exceeds its predicted length is demoted
+    one level and its predicted length is doubled;
+  * memory integration (Algorithm 2): the desired run set is made HBM-resident
+    by EWT-ordered offloads of lower-priority jobs (Eq. 6-7), bounded by the
+    GPU job limit M; swap ops overlap with compute.
+
+Baselines:
+  * ``orca``  — iteration-level FCFS, run-to-completion, reserve-max KV;
+  * ``vllm``  — iteration-level FCFS, on-demand paged KV, preempt-latest with
+                recompute on OOM (PagedAttention-style memory, FCFS order);
+  * ``oracle``— ALISE with a perfect predictor;
+  * ablations ``alise-defer`` / ``alise-recompute`` (paper Fig. 8).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.latency_model import LatencyModel
+from repro.core.memory_manager import TieredKVManager
+from repro.core.predictor import LengthPredictor
+from repro.core.request import KVLocation, Request, RequestState
+
+
+@dataclass
+class SchedulerConfig:
+    max_batch: int = 32              # decode batch width
+    max_resident: Optional[int] = None   # GPU job limit M (paper Alg. 2);
+                                         # default: max_batch
+    n_queues: int = 4
+    base_quantum: float = 1.0        # seconds of remaining time covered by Q0
+    quantum_growth: float = 4.0      # Q_i covers base * growth^i
+    age_threshold: float = 15.0      # seconds before virtual-aging promotion (K)
+    strategy: str = "alise"          # alise | orca | vllm | oracle |
+                                     # alise-defer | alise-recompute
+    max_new_tokens: int = 2048       # hard generation cap
+
+
+@dataclass
+class Plan:
+    """One iteration's decisions (executed by the simulator or engine)."""
+    run: List[Request] = field(default_factory=list)          # decode this iter
+    prefill: List[Request] = field(default_factory=list)      # fresh prefills
+    recompute: List[Request] = field(default_factory=list)    # re-prefill (dropped KV)
+    swap_in: List[Request] = field(default_factory=list)
+    swap_out: List[Request] = field(default_factory=list)
+    drop: List[Request] = field(default_factory=list)         # recompute-strategy evictions
+    quantize_cold: List[Request] = field(default_factory=list)
+    dequantize_cold: List[Request] = field(default_factory=list)
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, predictor: LengthPredictor,
+                 latency: LatencyModel, mem: TieredKVManager):
+        self.cfg = cfg
+        self.predictor = predictor
+        self.latency = latency
+        self.mem = mem
+        self.live: Dict[int, Request] = {}
+        self.finished: List[Request] = []
+        self._swap_ready_at: Dict[int, float] = {}   # req_id -> upload done time
+        self.is_fcfs = cfg.strategy in ("orca", "vllm")
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request, now: float) -> None:
+        pred = self.predictor.predict(req.prompt_tokens or [req.prompt_len],
+                                      true_len=req.true_out_len)
+        req.predicted_len = min(pred.length, self.cfg.max_new_tokens)
+        req.state = RequestState.QUEUED
+        req.priority_level = self._level_of(req, now) if not self.is_fcfs else 0
+        req.level_enter_time = now
+        self.live[req.req_id] = req
+
+    # ------------------------------------------------------------ priority
+    def _remaining(self, req: Request) -> float:
+        prefilled = self.mem.location_of(req) != KVLocation.NONE
+        return self.latency.remaining_time(
+            req.prompt_len, req.generated, req.remaining_tokens_pred(),
+            prefilled=prefilled)
+
+    def _level_of(self, req: Request, now: float) -> int:
+        rem = self._remaining(req)
+        lvl = 0
+        bound = self.cfg.base_quantum
+        while rem > bound and lvl < self.cfg.n_queues - 1:
+            lvl += 1
+            bound *= self.cfg.quantum_growth
+        return lvl
+
+    def _apply_aging(self, req: Request, now: float) -> None:
+        """Virtual aging: promote one level per age_threshold spent waiting."""
+        while (req.priority_level > 0
+               and now - req.level_enter_time >= self.cfg.age_threshold):
+            req.priority_level -= 1
+            req.level_enter_time += self.cfg.age_threshold
+
+    def note_generated(self, req: Request, now: float) -> None:
+        """Called after each decoded token: misprediction demotion."""
+        if self.is_fcfs:
+            return
+        if req.generated >= (req.predicted_len or 1):
+            req.predicted_len = min((req.predicted_len or 1) * 2,
+                                    self.cfg.max_new_tokens)
+            req.priority_level = min(req.priority_level + 1,
+                                     self.cfg.n_queues - 1)
+            req.level_enter_time = now
+            req.demotions += 1
+
+    def note_finished(self, req: Request, now: float) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_time = now
+        self.mem.free(req)
+        self.live.pop(req.req_id, None)
+        self.finished.append(req)
+        self.predictor.update(req.prompt_tokens or [req.prompt_len],
+                              req.generated)
+
+    # ------------------------------------------------------------------ EWT
+    def _ewt_table(self, ordered: List[Request], rem: Dict[int, float],
+                   now: float) -> Dict[int, float]:
+        """Eq. 6-7 for every job: EWT(J) = min(sum of remaining times of jobs
+        ahead of J in priority order, time for aging to promote J to Q0)."""
+        table: Dict[int, float] = {}
+        ahead = 0.0
+        for r in ordered:
+            ewt = ahead
+            if r.priority_level > 0:
+                t_promote = (r.priority_level * self.cfg.age_threshold
+                             - (now - r.level_enter_time))
+                ewt = min(ahead, max(t_promote, 0.0))
+            table[r.req_id] = ewt
+            ahead += rem[r.req_id]
+        return table
+
+    def ewt(self, req: Request, ordered: List[Request], now: float = 0.0) -> float:
+        rem = {r.req_id: self._remaining(r) for r in ordered}
+        return self._ewt_table(ordered, rem, now).get(req.req_id, 0.0)
+
+    # ----------------------------------------------------------------- plan
+    def plan(self, now: float) -> Plan:
+        if self.cfg.strategy == "orca":
+            return self._plan_fcfs(now, reserve_max=True)
+        if self.cfg.strategy == "vllm":
+            return self._plan_fcfs(now, reserve_max=False)
+        return self._plan_alise(now)
+
+    # ------------------------------------------------------ FCFS baselines
+    def _plan_fcfs(self, now: float, reserve_max: bool) -> Plan:
+        plan = Plan()
+        running = [r for r in self.live.values()
+                   if r.state == RequestState.RUNNING]
+        running.sort(key=lambda r: r.arrival_time)
+        queued = sorted((r for r in self.live.values()
+                         if r.state == RequestState.QUEUED),
+                        key=lambda r: r.arrival_time)
+        # vLLM OOM handling: if a running job can't grow, preempt the latest
+        # arrival (recompute).  ORCA reserves up front so growth never fails.
+        for r in running:
+            plan.run.append(r)
+        # admit new arrivals into free slots, FCFS order, memory permitting
+        for r in queued:
+            if len(plan.run) + len(plan.prefill) >= self.cfg.max_batch:
+                break
+            if self.mem.can_admit(r):
+                plan.prefill.append(r)
+            else:
+                break   # strict FCFS: no lookahead past a blocked head
+        return plan
+
+    # --------------------------------------------------------------- ALISE
+    def _plan_alise(self, now: float) -> Plan:
+        plan = Plan()
+        strategy = self.cfg.strategy
+        live = list(self.live.values())
+
+        for r in live:
+            if r.state != RequestState.RUNNING:
+                self._apply_aging(r, now)
+
+        rem = {r.req_id: self._remaining(r) for r in live}
+        # SRTF candidate order: (level, remaining, arrival)
+        candidates = sorted(
+            live, key=lambda r: (r.priority_level, rem[r.req_id],
+                                 r.arrival_time))
+        ewt_table = self._ewt_table(candidates, rem, now)
+
+        desired: List[Request] = []
+        for r in candidates:
+            if len(desired) >= self.cfg.max_batch:
+                break
+            if r.state == RequestState.SWAPPING:
+                if now >= self._swap_ready_at.get(r.req_id, 0.0):
+                    r.state = RequestState.PREEMPTED
+                else:
+                    continue    # transfer still in flight
+            desired.append(r)
+
+        # ---- Algorithm 2: make `desired` HBM-resident via EWT-ordered swaps.
+        # Two resources bound residency: the GPU job limit M (paper's
+        # ``M = M - len(q)`` bookkeeping) and HBM bytes.
+        desired_ids = {r.req_id for r in desired}
+        residents = [r for r in live if self.mem.resident_hbm(r)
+                     and r.req_id not in desired_ids]
+        # offload candidates ordered by *descending* EWT (longest wait first)
+        residents.sort(key=lambda r: -ewt_table.get(r.req_id, 0.0))
+
+        def hbm_need(r: Request) -> float:
+            loc = self.mem.location_of(r)
+            if loc == KVLocation.HBM:
+                return 0.0
+            if loc == KVLocation.HBM_Q8:
+                return self.mem._bytes(r.context_len + 1, False) \
+                    - self.mem._bytes(r.context_len, True)
+            return self.mem._bytes(r.context_len + 1, False)
+
+        max_resident = self.cfg.max_resident or self.cfg.max_batch
+        n_resident = sum(1 for r in live if self.mem.resident_hbm(r))
+        free = self.mem.hbm_free()
+        evict_iter = iter(residents)
+        for r in desired:
+            need = hbm_need(r)
+            if need == 0.0:
+                plan.run.append(r)
+                continue
+            # free memory/slots by offloading high-EWT residents
+            while free < need or n_resident >= max_resident:
+                victim = next(evict_iter, None)
+                if victim is None:
+                    break
+                if strategy == "alise-defer":
+                    break               # never evict: defer the newcomer
+                freed = self.mem.hbm_bytes_of(victim)
+                if strategy == "alise-recompute":
+                    plan.drop.append(victim)       # delete KV, recompute later
+                else:
+                    plan.swap_out.append(victim)
+                free += freed
+                n_resident -= 1
+            if free < need or n_resident >= max_resident:
+                continue                 # cannot fit this iteration
+            free -= need
+            n_resident += 1
+            loc = self.mem.location_of(r)
+            if loc == KVLocation.NONE:
+                if r.generated > 0:      # dropped KV -> recompute prefill
+                    plan.recompute.append(r)
+                else:
+                    plan.prefill.append(r)
+            elif loc == KVLocation.DRAM:
+                plan.swap_in.append(r)
+            elif loc == KVLocation.HBM_Q8:
+                plan.dequantize_cold.append(r)
+
+        # work-conserving backfill: idle batch width goes to resident jobs
+        # that lost the SRTF race but can still make progress this iteration
+        planned = (desired_ids | {r.req_id for r in plan.swap_out}
+                   | {r.req_id for r in plan.drop})
+        if len(plan.run) < self.cfg.max_batch:
+            for r in candidates:
+                if len(plan.run) >= self.cfg.max_batch:
+                    break
+                if (r.req_id not in planned
+                        and self.mem.location_of(r) == KVLocation.HBM):
+                    plan.run.append(r)
+        return plan
+
+    # ------------------------------------------------------------- summary
+    def queue_depths(self) -> List[int]:
+        depths = [0] * self.cfg.n_queues
+        for r in self.live.values():
+            depths[min(r.priority_level, self.cfg.n_queues - 1)] += 1
+        return depths

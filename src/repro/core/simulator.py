@@ -1,0 +1,311 @@
+"""Iteration-level discrete-event simulator for LLM serving (paper §4).
+
+Drives the *same* Scheduler/TieredKVManager objects as the real engine, with
+execution time supplied by the analytical latency model (Eq. 3-5) that the
+paper itself uses — this is what produces the paper-scale end-to-end curves
+(Figs. 2/6/8/9) on a CPU-only container.
+
+Cost model for one continuous-batching iteration (ORCA-style mixed batch):
+    t_iter = sum_prefill(s_j * t0)  +  [beta + alpha * sum_decode(ctx_j)]
+i.e. prefills are compute-bound and additive; the decode batch reads weights
+once (beta) plus each job's KV (alpha per context token) — the batched analog
+of Eq. 5.  Swaps run on a DMA queue overlapped with compute; a job only
+becomes schedulable when its upload completes (paper §3.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.latency_model import LatencyModel, calibrated
+from repro.core.memory_manager import MemoryConfig, TieredKVManager
+from repro.core.predictor import (DefaultPredictor, LengthPredictor,
+                                  OraclePredictor, ProxyPredictor,
+                                  RetrievalPredictor)
+from repro.core.quantization import kv_bytes_per_token
+from repro.core.request import KVLocation, Request, RequestState
+from repro.core.scheduler import Plan, Scheduler, SchedulerConfig
+from repro.core.trace import SyntheticTrace, TraceConfig, generate_trace
+
+
+@dataclass
+class SimConfig:
+    model: str = "opt-13b"
+    strategy: str = "alise"            # alise | orca | vllm | oracle | alise-defer | alise-recompute
+    predictor: str = "retrieval"       # retrieval | proxy | oracle | default
+    hbm_bytes: float = 8e9             # KV budget (32GB V100 minus weights)
+    dram_bytes: float = 1024e9
+    swap_bw: float = 32e9
+    max_batch: int = 64
+    n_queues: int = 4
+    base_quantum: float = 1.0
+    quantum_growth: float = 4.0
+    age_threshold: float = 15.0
+    max_new_tokens: int = 2048
+    drain_timeout: float = 600.0       # extra time after last arrival
+    latency_model: Optional[LatencyModel] = None
+    pretrain_requests: int = 512       # history corpus for predictor warmup
+    seed: int = 0
+
+
+@dataclass
+class SimResult:
+    strategy: str
+    model: str
+    rate: float
+    completed: int
+    total: int
+    duration: float
+    normalized_latency: float          # paper's headline metric (s/token)
+    mean_latency: float
+    p50_latency: float
+    p99_latency: float
+    throughput: float                  # completed requests / second
+    token_throughput: float
+    mean_queueing_delay: float
+    preemptions: int
+    swap_in_gb: float
+    swap_out_gb: float
+    recompute_tokens: int
+    predictor_stats: Dict[str, float] = field(default_factory=dict)
+    requests: List[Request] = field(default_factory=list)
+
+    def row(self) -> Dict[str, float]:
+        d = self.__dict__.copy()
+        d.pop("requests")
+        d.pop("predictor_stats")
+        return d
+
+
+def build_predictor(kind: str, trace_cfg: TraceConfig, n_history: int,
+                    seed: int = 0) -> LengthPredictor:
+    """Predictors are pre-trained on a *disjoint* history trace (the paper
+    builds its DB from OpenChat and fine-tunes on the target dataset)."""
+    if kind == "oracle":
+        return OraclePredictor()
+    if kind == "default":
+        return DefaultPredictor()
+    hist_cfg = TraceConfig(dataset=trace_cfg.dataset, rate=10.0,
+                           duration=1e9, max_requests=n_history,
+                           n_clusters=trace_cfg.n_clusters,
+                           length_noise=trace_cfg.length_noise,
+                           seed=seed + 10_000)
+    hist = generate_trace(hist_cfg)
+    toks = [r.prompt_tokens for r in hist.requests]
+    lens = np.array([r.true_out_len for r in hist.requests], np.float32)
+    if kind == "proxy":
+        p = ProxyPredictor(seed=seed)
+        p.pretrain(toks, lens)
+        return p
+    p = RetrievalPredictor(seed=seed)
+    p.pretrain(toks, lens)
+    return p
+
+
+class ServingSimulator:
+    def __init__(self, cfg: SimConfig, trace: SyntheticTrace,
+                 predictor: Optional[LengthPredictor] = None):
+        self.cfg = cfg
+        self.trace = trace
+        arch = get_config(cfg.model)
+        bpt = kv_bytes_per_token(arch.num_layers, arch.num_kv_heads, arch.hd)
+        self.latency = cfg.latency_model or calibrated(cfg.model)
+
+        strategy = cfg.strategy
+        pred_kind = cfg.predictor
+        if strategy == "oracle":
+            strategy_impl, pred_kind = "alise", "oracle"
+        elif strategy in ("orca", "vllm"):
+            strategy_impl, pred_kind = strategy, "default"
+        else:
+            strategy_impl = strategy
+
+        mem_cfg = MemoryConfig(
+            hbm_bytes=cfg.hbm_bytes, dram_bytes=cfg.dram_bytes,
+            bytes_per_token_fp=bpt, swap_bw=cfg.swap_bw,
+            quantize_offload=True,
+            reserve_policy="reserve_max" if strategy_impl == "orca" else "ondemand",
+            reserve_max_tokens=cfg.max_new_tokens)
+        self.mem = TieredKVManager(mem_cfg)
+
+        self.predictor = predictor or build_predictor(
+            pred_kind, trace.cfg, cfg.pretrain_requests, cfg.seed)
+
+        sched_cfg = SchedulerConfig(
+            max_batch=cfg.max_batch, n_queues=cfg.n_queues,
+            base_quantum=cfg.base_quantum, quantum_growth=cfg.quantum_growth,
+            age_threshold=cfg.age_threshold, strategy=strategy_impl,
+            max_new_tokens=cfg.max_new_tokens)
+        self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
+        self.pred_overhead = 0.0
+
+    # ------------------------------------------------------------------ run
+    def run(self, max_iters: int = 20_000_000) -> SimResult:
+        cfg = self.cfg
+        from repro.core.request import reset_runtime_state
+        for r in self.trace.requests:
+            reset_runtime_state(r)
+        arrivals = sorted(self.trace.requests, key=lambda r: r.arrival_time)
+        n_total = len(arrivals)
+        i_arr = 0
+        now = arrivals[0].arrival_time if arrivals else 0.0
+        deadline = (self.trace.duration + cfg.drain_timeout) if arrivals else 0.0
+        iters = 0
+
+        while (i_arr < n_total or self.sched.live) and now < deadline:
+            iters += 1
+            if iters > max_iters:
+                break
+            while i_arr < n_total and arrivals[i_arr].arrival_time <= now:
+                req = arrivals[i_arr]
+                self.sched.submit(req, now)
+                # prediction latency is serving-path overhead (Table 2)
+                self.pred_overhead += getattr(self.predictor, "last_latency", 0.0)
+                i_arr += 1
+
+            plan = self.sched.plan(now)
+
+            # ---- execute memory plan (swaps overlap with compute)
+            for r in plan.drop:
+                self.mem.drop(r)
+                r.state = RequestState.QUEUED
+                r.preempt_count += 1
+            for r in plan.swap_out:
+                self.mem.offload(r, now)
+                r.state = RequestState.PREEMPTED
+                r.preempt_count += 1
+            for r in plan.dequantize_cold:
+                self.mem.dequantize_cold(r, now)
+            for r in plan.swap_in:
+                op = self.mem.upload(r, now)
+                r.state = RequestState.SWAPPING
+                self.sched._swap_ready_at[r.req_id] = op.done_time
+
+            # ---- execute compute
+            t_iter = 0.0
+            decode_ctx = 0
+            ran_any = False
+            for r in plan.prefill + plan.recompute:
+                self.mem.admit(r)
+                r.state = RequestState.RUNNING
+                if r.first_scheduled_time is None:
+                    r.first_scheduled_time = now
+                t_iter += self.latency.prefill_time(r.context_len)
+                ran_any = True
+            decoders = [r for r in plan.run
+                        if r.state == RequestState.RUNNING
+                        or r.state == RequestState.PREEMPTED]
+            for r in decoders:
+                r.state = RequestState.RUNNING
+                decode_ctx += r.context_len
+                ran_any = True
+            if decoders:
+                t_iter += self.latency.beta + self.latency.alpha * decode_ctx
+
+            if not ran_any:
+                # idle: fast-forward to the next actionable instant
+                nxt = []
+                if i_arr < n_total:
+                    nxt.append(arrivals[i_arr].arrival_time)
+                nxt.extend(t for t in self.sched._swap_ready_at.values() if t > now)
+                if not nxt:
+                    break
+                now = max(min(nxt), now + 1e-6)
+                continue
+
+            now += t_iter
+
+            # ---- token accounting
+            newly_prefilled = plan.prefill + plan.recompute
+            recompute_ids = {r.req_id for r in plan.recompute}
+            for r in newly_prefilled + decoders:
+                if self.mem.location_of(r) != KVLocation.HBM:
+                    continue    # became an OOM victim earlier this iteration
+                if r.req_id in recompute_ids and r.generated > 0:
+                    pass        # recompute rebuilds KV; no new token emitted
+                else:
+                    r.generated += 1
+                    if r.first_token_time is None:
+                        r.first_token_time = now
+                if not self.mem.grow(r):
+                    self._handle_oom(r, now)
+                    if self.mem.location_of(r) != KVLocation.HBM:
+                        continue
+                self.sched.note_generated(r, now)
+                if (r.generated >= r.true_out_len
+                        or r.generated >= cfg.max_new_tokens):
+                    self.sched.note_finished(r, now)
+
+        return self._result(now, n_total)
+
+    # ------------------------------------------------------------ OOM path
+    def _handle_oom(self, req: Request, now: float) -> None:
+        """Growth failed: vLLM preempts the latest-arrived running job with
+        recompute; ALISE offloads the highest-EWT resident."""
+        live = [r for r in self.sched.live.values()
+                if self.mem.resident_hbm(r) and r.req_id != req.req_id]
+        if not live:
+            self.mem.drop(req)
+            req.state = RequestState.QUEUED
+            req.preempt_count += 1
+            return
+        if self.sched.is_fcfs:
+            victim = max(live, key=lambda r: r.arrival_time)
+            self.mem.drop(victim)
+            victim.state = RequestState.QUEUED
+        else:
+            victim = max(live, key=lambda r: self.sched.ewt(
+                r, sorted(live, key=lambda x: (x.priority_level,)), now))
+            self.mem.offload(victim, now)
+            victim.state = RequestState.PREEMPTED
+        victim.preempt_count += 1
+        self.mem.grow(req)
+
+    # -------------------------------------------------------------- result
+    def _result(self, now: float, n_total: int) -> SimResult:
+        done = self.sched.finished
+        lat = np.array([r.e2e_latency for r in done]) if done else np.array([0.0])
+        norm = np.array([r.normalized_latency for r in done
+                         if r.normalized_latency is not None])
+        if norm.size == 0:
+            norm = np.array([0.0])
+        queue_delay = np.array(
+            [r.first_scheduled_time - r.arrival_time for r in done
+             if r.first_scheduled_time is not None]) if done else np.array([0.0])
+        toks = sum(r.generated for r in done)
+        duration = max(now - (self.trace.requests[0].arrival_time
+                              if self.trace.requests else 0.0), 1e-9)
+        stats = dict(getattr(self.predictor, "stats", {}))
+        return SimResult(
+            strategy=self.cfg.strategy, model=self.cfg.model,
+            rate=self.trace.cfg.rate, completed=len(done), total=n_total,
+            duration=duration,
+            normalized_latency=float(np.mean(norm)),
+            mean_latency=float(np.mean(lat)),
+            p50_latency=float(np.median(lat)),
+            p99_latency=float(np.percentile(lat, 99)),
+            throughput=len(done) / duration,
+            token_throughput=toks / duration,
+            mean_queueing_delay=float(np.mean(queue_delay)),
+            preemptions=sum(r.preempt_count for r in done),
+            swap_in_gb=sum(r.swap_in_bytes for r in done) / 1e9,
+            swap_out_gb=sum(r.swap_out_bytes for r in done) / 1e9,
+            recompute_tokens=sum(r.recompute_tokens for r in done),
+            predictor_stats=stats,
+            requests=done)
+
+
+def run_sim(model: str = "opt-13b", strategy: str = "alise",
+            dataset: str = "sharegpt", rate: float = 2.0,
+            duration: float = 120.0, seed: int = 0,
+            predictor: Optional[LengthPredictor] = None,
+            **overrides) -> SimResult:
+    """Convenience wrapper used by benchmarks and tests."""
+    trace = generate_trace(TraceConfig(dataset=dataset, rate=rate,
+                                       duration=duration, seed=seed))
+    sim_cfg = SimConfig(model=model, strategy=strategy, seed=seed, **overrides)
+    sim = ServingSimulator(sim_cfg, trace, predictor=predictor)
+    return sim.run()

@@ -1,0 +1,81 @@
+"""Mesh context + logical-axis sharding hints.
+
+Model code annotates activations with *logical* axes ("batch", "model",
+"expert", "seq"); the active mesh (if any) resolves them to physical mesh axes.
+Outside a mesh context every hint is a no-op, so the same model code runs on a
+single CPU device and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar("repro_mesh", default=None)
+
+Logical = Union[None, str, Sequence[str]]
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Optional[Mesh]):
+    token = _MESH.set(mesh)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield mesh
+        else:
+            yield None
+    finally:
+        _MESH.reset(token)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def resolve_axis(mesh: Mesh, logical: Logical):
+    """Map a logical axis name to physical mesh axes present on `mesh`."""
+    if logical is None:
+        return None
+    if isinstance(logical, (tuple, list)):
+        phys = sum((_as_tuple(resolve_axis(mesh, l)) for l in logical), ())
+        return phys if phys else None
+    names = mesh.axis_names
+    if logical == "batch":
+        phys = tuple(n for n in ("pod", "data") if n in names)
+        return phys if phys else None
+    if logical in ("model", "expert"):
+        return "model" if "model" in names else None
+    if logical == "seq":   # long-context sequence sharding reuses the data axis
+        return "data" if "data" in names else None
+    if logical == "fsdp":  # parameter sharding axis for ZeRO/FSDP
+        return "data" if "data" in names else None
+    if logical in names:
+        return logical
+    return None
+
+
+def _as_tuple(x):
+    if x is None:
+        return ()
+    return tuple(x) if isinstance(x, (tuple, list)) else (x,)
+
+
+def logical_to_spec(mesh: Mesh, axes: Sequence[Logical]) -> P:
+    return P(*[resolve_axis(mesh, a) for a in axes])
+
+
+def shard_hint(x, *axes: Logical):
+    """with_sharding_constraint under the active mesh; identity otherwise."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(mesh, axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *axes: Logical) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_spec(mesh, axes))

@@ -1,0 +1,194 @@
+"""Sharding rules: map every param/input/cache leaf to a PartitionSpec.
+
+Two modes:
+  * ``serving``  — Megatron-style TP over the ``model`` axis only (weights
+    replicated across ``data``/``pod``), batch over (pod, data);
+  * ``train``    — FSDP x TP: each weight's natural TP dim goes to ``model``
+    and its largest remaining dim to ``data`` (ZeRO-3-style fully sharded;
+    optimizer moments share the param spec).
+
+MoE experts shard over ``model`` (EP).  GSPMD handles non-divisible dims by
+padding (e.g. 40 heads / 16-way TP) — flagged in DESIGN.md and attacked in
+the §Perf hillclimbs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig, ShapeSpec
+
+
+def _batch_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def _pad(spec_tail, ndim):
+    """Left-pad a trailing spec with None for leading stack dims."""
+    return P(*([None] * (ndim - len(spec_tail)) + list(spec_tail)))
+
+
+def param_partition_spec(cfg: ArchConfig, path: str, shape: tuple,
+                         mode: str) -> P:
+    """Spec for one parameter leaf.  `path` is the '/'-joined key path."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+    train = mode == "train"
+    E = cfg.num_experts
+
+    def tp_last():                      # (.., D, F) -> F on model, D on data
+        return _pad(["data" if train else None, "model"], nd)
+
+    def tp_penult():                    # (.., F, D) -> F on model, D on data
+        return _pad(["model", "data" if train else None], nd)
+
+    if name == "embed":
+        return P("model", "data" if train else None)
+    if name == "lm_head":
+        return P("data" if train else None, "model")
+    if name in ("wq", "wk", "wv"):
+        return tp_last()
+    if name in ("bq", "bk", "bv"):
+        return _pad(["model"], nd)
+    if name in ("wi", "wg"):
+        if nd >= 3 and shape[-3] == E and shape[-1] == cfg.d_ff:
+            return _pad(["model", "data" if train else None, None], nd)  # MoE EP
+        return tp_last()
+    if name == "wo":
+        if nd >= 3 and shape[-3] == E and shape[-2] == cfg.d_ff:
+            return _pad(["model", None, "data" if train else None], nd)  # MoE EP
+        return tp_penult()
+    if name == "router":
+        return _pad([None, None], nd)
+    if name == "in_proj":
+        return tp_last()
+    if name == "out_proj":
+        return tp_penult()
+    if name == "conv_w":
+        return _pad([None, "model"], nd)
+    if name == "conv_b":
+        return _pad(["model"], nd)
+    if name in ("A_log", "D_skip", "dt_bias"):
+        return _pad([None], nd)
+    if name in ("scale", "bias"):       # norms (gate_norm scale is sharded)
+        if shape[-1] == cfg.d_inner and cfg.has_ssm:
+            return _pad(["model"], nd)
+        return _pad([None], nd)
+    return P(*([None] * nd))
+
+
+def param_specs(cfg: ArchConfig, params_shape, mode: str):
+    """PartitionSpec pytree matching a params (shape) pytree."""
+    def visit(kp, leaf):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        return param_partition_spec(cfg, path, leaf.shape, mode)
+    return jax.tree_util.tree_map_with_path(visit, params_shape)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> Dict[str, P]:
+    """Input specs for train/prefill batches."""
+    b = _batch_axes(mesh)
+    specs: Dict[str, P] = {}
+    if shape.kind == "train":
+        specs["targets"] = P(b, None)
+        if cfg.input_mode == "embeds" and not cfg.is_encoder_decoder:
+            specs["embeds"] = P(b, None, None)
+        else:
+            specs["tokens"] = P(b, None)
+        if cfg.is_encoder_decoder:
+            specs["enc_embeds"] = P(b, None, None)
+    elif shape.kind == "prefill":
+        if cfg.is_encoder_decoder:
+            specs["enc_embeds"] = P(b, None, None)
+            specs["tokens"] = P(b, None)
+        elif cfg.input_mode == "embeds":
+            specs["embeds"] = P(b, None, None)
+        else:
+            specs["tokens"] = P(b, None)
+    else:
+        specs["tokens"] = P(b, None)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh) -> Dict[str, P]:
+    """Decode-cache specs.  batch over (pod,data); kv heads over model.
+    For global_batch=1 (long_500k) the KV sequence dim shards over data
+    instead (flash-decoding-style context split)."""
+    b = _batch_axes(mesh)
+    B = shape.global_batch
+    seq_shard = B == 1
+    bb = None if seq_shard else b
+    sd = "data" if (seq_shard and "data" in mesh.axis_names) else None
+    specs: Dict[str, P] = {"lengths": P(bb)}
+    if cfg.family == "ssm":
+        specs["conv"] = P(None, bb, None, "model")
+        specs["ssm"] = P(None, bb, "model", None, None)
+    elif cfg.family == "hybrid":
+        specs["k"] = P(None, bb, sd, "model", None)
+        specs["v"] = P(None, bb, sd, "model", None)
+        specs["conv"] = P(None, None, bb, None, "model")
+        specs["ssm"] = P(None, None, bb, "model", None, None)
+    else:
+        specs["k"] = P(None, bb, sd, "model", None)
+        specs["v"] = P(None, bb, sd, "model", None)
+        if cfg.is_encoder_decoder:
+            specs["xk"] = P(None, bb, None, "model", None)
+            specs["xv"] = P(None, bb, None, "model", None)
+    return specs
+
+
+def _astuple(a):
+    if a is None:
+        return ()
+    return tuple(a) if isinstance(a, (tuple, list)) else (a,)
+
+
+def sanitize_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
+    """Repair a spec for jit-boundary divisibility.
+
+    GSPMD pads *internal* ops but jit inputs must divide evenly.  Axes that
+    don't divide their dim are re-homed onto the largest dim where they do
+    (e.g. kv_heads=8 on a 16-way ``model`` axis falls through to the KV
+    *sequence* dim -> flash-decoding-style context sharding; a non-multiple
+    vocab moves its axis to d_model).  Axes that fit nowhere are dropped
+    (replicated).
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dims = [list(_astuple(spec[i])) if i < len(spec) else []
+            for i in range(len(shape))]
+    orphans = []
+    for i, axes in enumerate(dims):
+        keep = []
+        for ax in axes:
+            factor = int(np.prod([sizes[a] for a in keep + [ax]]))
+            if shape[i] % factor == 0:
+                keep.append(ax)
+            else:
+                orphans.append(ax)
+        dims[i] = keep
+    for ax in orphans:
+        order = sorted(range(len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            factor = int(np.prod([sizes[a] for a in dims[i] + [ax]]))
+            if shape[i] >= factor and shape[i] % factor == 0:
+                dims[i].append(ax)
+                break
+    return P(*[tuple(d) if len(d) > 1 else (d[0] if d else None)
+               for d in dims])
+
+
+def sanitize_specs(shape_tree, spec_tree, mesh: Mesh):
+    """Tree-wide sanitize; shape_tree leaves need `.shape`."""
+    return jax.tree.map(
+        lambda leaf, s: sanitize_spec(leaf.shape, s, mesh),
+        shape_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

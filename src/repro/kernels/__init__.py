@@ -1,0 +1,1 @@
+"""Pallas TPU kernels (validated in interpret mode on CPU)."""

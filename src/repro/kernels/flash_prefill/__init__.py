@@ -1,0 +1,4 @@
+from repro.kernels.flash_prefill.ops import flash_attention
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
+
+__all__ = ["flash_attention", "flash_prefill_ref"]

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for the flash prefill kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_prefill.flash_prefill import flash_prefill
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
+
+
+@partial(jax.jit, static_argnames=("causal", "q_blk", "kv_blk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, q_blk: int = 256,
+                    kv_blk: int = 256, interpret: bool = False):
+    return flash_prefill(q, k, v, causal=causal, q_blk=q_blk, kv_blk=kv_blk,
+                         interpret=interpret)
+
+
+__all__ = ["flash_attention", "flash_prefill_ref"]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q, k, v, *, causal: bool = True):
+    """q: (B, H, S, d); k/v: (B, KVH, S, d); returns (B, H, S, d)."""
+    B, H, S, d = q.shape
+    KVH = k.shape[1]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, S, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg, kf) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", w, vf)
+    return o.reshape(B, H, S, d).astype(q.dtype)

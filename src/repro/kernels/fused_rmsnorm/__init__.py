@@ -1,0 +1,3 @@
+from repro.kernels.fused_rmsnorm.ops import fused_rmsnorm_op, rmsnorm_ref
+
+__all__ = ["fused_rmsnorm_op", "rmsnorm_ref"]

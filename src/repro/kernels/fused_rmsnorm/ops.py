@@ -1,0 +1,13 @@
+"""Jitted wrapper for fused RMSNorm."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.fused_rmsnorm.fused_rmsnorm import fused_rmsnorm
+from repro.kernels.fused_rmsnorm.ref import rmsnorm_ref
+
+fused_rmsnorm_op = partial(jax.jit, static_argnames=("eps", "blk", "interpret"))(fused_rmsnorm)
+
+__all__ = ["fused_rmsnorm_op", "rmsnorm_ref"]

@@ -1,0 +1,7 @@
+from repro.kernels.kv_quant.ops import (kv_dequantize_op, kv_dequantize_ref,
+                                        kv_quantize_op, kv_quantize_ref,
+                                        paged_attention_q8_op,
+                                        paged_attention_q8_ref)
+
+__all__ = ["kv_quantize_op", "kv_dequantize_op", "paged_attention_q8_op",
+           "kv_quantize_ref", "kv_dequantize_ref", "paged_attention_q8_ref"]

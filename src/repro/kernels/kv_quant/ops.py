@@ -1,0 +1,18 @@
+"""Jitted wrappers for KV quantization kernels."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.kv_quant.kv_quant import (kv_dequantize, kv_quantize,
+                                             paged_attention_q8)
+from repro.kernels.kv_quant.ref import (kv_dequantize_ref, kv_quantize_ref,
+                                        paged_attention_q8_ref)
+
+kv_quantize_op = partial(jax.jit, static_argnames=("blk", "interpret"))(kv_quantize)
+kv_dequantize_op = partial(jax.jit, static_argnames=("dtype", "blk", "interpret"))(kv_dequantize)
+paged_attention_q8_op = partial(jax.jit, static_argnames=("interpret",))(paged_attention_q8)
+
+__all__ = ["kv_quantize_op", "kv_dequantize_op", "paged_attention_q8_op",
+           "kv_quantize_ref", "kv_dequantize_ref", "paged_attention_q8_ref"]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for INT8 KV quantization (paper Eq. 8) and the
+quantized-KV paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_quantize_ref(x):
+    """Channel-wise (last-dim kept) asymmetric INT8 quant of a KV tensor.
+    x: (..., d) -> (q int8 (...,d), scale (...,1), zero (...,1))."""
+    xf = x.astype(jnp.float32)
+    mx = xf.max(axis=-1, keepdims=True)
+    mn = xf.min(axis=-1, keepdims=True)
+    lam = jnp.maximum((mx - mn) / 255.0, 1e-8)
+    z = jnp.round(-mn / lam)
+    q = jnp.clip(jnp.round(xf / lam + z), 0, 255) - 128
+    return q.astype(jnp.int8), lam, z
+
+
+def kv_dequantize_ref(q, lam, z, dtype=jnp.float32):
+    return (lam * (q.astype(jnp.float32) + 128.0 - z)).astype(dtype)
+
+
+def paged_attention_q8_ref(q, kq, k_lam, k_z, vq, v_lam, v_z,
+                           block_tables, lengths):
+    """Quantized-cache oracle: dequantize pages then run exact attention."""
+    from repro.kernels.paged_attention.ref import paged_attention_ref
+    k = kv_dequantize_ref(kq, k_lam, k_z)
+    v = kv_dequantize_ref(vq, v_lam, v_z)
+    return paged_attention_ref(q, k, v, block_tables, lengths)

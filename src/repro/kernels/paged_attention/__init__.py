@@ -1,0 +1,5 @@
+from repro.kernels.paged_attention.ops import (gather_pages,
+                                               paged_attention_ref,
+                                               paged_decode_attention)
+
+__all__ = ["paged_decode_attention", "paged_attention_ref", "gather_pages"]

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for paged decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention
+from repro.kernels.paged_attention.ref import gather_pages, paged_attention_ref
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_cache, v_cache, block_tables, lengths, *,
+                           interpret: bool = False):
+    return paged_attention(q, k_cache, v_cache, block_tables, lengths,
+                           interpret=interpret)
+
+
+__all__ = ["paged_decode_attention", "paged_attention_ref", "gather_pages"]

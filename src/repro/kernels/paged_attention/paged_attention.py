@@ -1,0 +1,107 @@
+"""Paged decode attention (Pallas TPU) — vLLM's PagedAttention adapted to TPU.
+
+GPU PagedAttention gathers KV pages with per-thread loads; TPUs have no
+per-lane gather, so the indirection is lifted into *scalar prefetch*: the
+block table lives in SMEM and drives the BlockSpec index_map, letting the
+DMA engine stream exactly the pages each sequence needs, double-buffered
+across the page grid axis.  This is the hardware adaptation of the paper's
+executor kernel noted in DESIGN.md §3.
+
+Grid: (B, KVH, n_pages); the page axis is innermost/sequential, carrying the
+online-softmax state in VMEM scratch.  Pages past `lengths[b]` are skipped
+entirely (pl.when) — unused pages cost no DMA or MXU cycles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tables_ref, lengths_ref,                 # scalar prefetch (SMEM)
+            q_ref, k_ref, v_ref, o_ref,              # VMEM tiles
+            m_ref, l_ref, acc_ref, *,                # scratch
+            page: int, n_pages: int, scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lengths_ref[b]
+    in_range = (pi * page) < length        # whole page past length: skip
+
+    @pl.when(in_range)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)      # (page, d)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_cache, v_cache, block_tables, lengths, *,
+                    interpret: bool = False):
+    """q: (B, H, d); caches: (num_pages, page, KVH, d);
+    block_tables: (B, max_pages) int32; lengths: (B,) -> (B, H, d)."""
+    B, H, d = q.shape
+    num_pages, page, KVH, _ = k_cache.shape
+    G = H // KVH
+    max_pages = block_tables.shape[1]
+    scale = 1.0 / (d ** 0.5)
+
+    qg = q.reshape(B, KVH, G, d)
+
+    kernel = functools.partial(_kernel, page=page, n_pages=max_pages,
+                               scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KVH, max_pages),
+        in_specs=[
+            # q tile: one (G, d) block per (b, kvh)
+            pl.BlockSpec((1, 1, G, d),
+                         lambda b, h, pi, tables, lens: (b, h, 0, 0)),
+            # k/v page: the block table picks the physical page
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b, h, pi, tables, lens: (tables[b, pi], 0, h, 0)),
+            pl.BlockSpec((1, page, 1, d),
+                         lambda b, h, pi, tables, lens: (tables[b, pi], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d),
+                               lambda b, h, pi, tables, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, qg, k_cache, v_cache)
+    return out.reshape(B, H, d)

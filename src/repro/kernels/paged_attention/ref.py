@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for paged decode attention (block-table KV)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages(cache, block_tables):
+    """cache: (num_pages, page, KVH, d); tables: (B, max_pages)
+    -> (B, max_pages*page, KVH, d)."""
+    gathered = cache[block_tables]                # (B, max_pages, page, KVH, d)
+    B, n, p, KVH, d = gathered.shape
+    return gathered.reshape(B, n * p, KVH, d)
+
+
+def paged_attention_ref(q, k_cache, v_cache, block_tables, lengths):
+    """q: (B, H, d); caches: (num_pages, page, KVH, d);
+    block_tables: (B, max_pages) int32; lengths: (B,) int32 -> (B, H, d)."""
+    B, H, d = q.shape
+    KVH = k_cache.shape[2]
+    G = H // KVH
+    k = gather_pages(k_cache, block_tables).astype(jnp.float32)
+    v = gather_pages(v_cache, block_tables).astype(jnp.float32)
+    qg = q.reshape(B, KVH, G, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k) / (d ** 0.5)
+    S = k.shape[1]
+    valid = jnp.arange(S)[None] < lengths[:, None]
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", w, v)
+    return o.reshape(B, H, d).astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.ssd_scan.ops import (ssd_chunk, ssd_chunk_ref,
+                                        ssd_chunked_fused)
+
+__all__ = ["ssd_chunk", "ssd_chunk_ref", "ssd_chunked_fused"]

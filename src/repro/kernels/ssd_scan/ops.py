@@ -1,0 +1,54 @@
+"""Fused SSD forward built on the Pallas chunk kernel: intra-chunk on the
+MXU + jnp inter-chunk recurrence.  Drop-in equivalent of
+``repro.models.mamba2.ssd_chunked``."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.ssd_scan.ref import ssd_chunk_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_chunk
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_fused(x, dt, A, Bmat, Cmat, *, chunk: int = 128,
+                      initial_state=None, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bmat/Cmat: (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    assert S % chunk == 0
+    C = S // chunk
+
+    dtf = dt.astype(jnp.float32)
+    dA = (dtf * A.astype(jnp.float32)).reshape(Bsz, C, chunk, H)
+    xbar = (x.astype(jnp.float32) * dtf[..., None]).reshape(Bsz, C, chunk, H, P)
+    Bc = Bmat.astype(jnp.float32).reshape(Bsz, C, chunk, N)
+    Cc = Cmat.astype(jnp.float32).reshape(Bsz, C, chunk, N)
+
+    y_diag, states, chunk_decay = ssd_chunk(xbar, dA, Bc, Cc,
+                                            interpret=interpret)
+
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((Bsz, H, P, N), jnp.float32))
+
+    def step(S_prev, inp):
+        lam, st = inp
+        S_new = S_prev * lam[..., None, None] + st
+        return S_new, S_prev
+
+    final_state, prev = lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2),
+                   states.transpose(1, 0, 2, 3, 4)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                   # (B,C,H,P,N)
+
+    cumA = jnp.cumsum(dA, axis=2)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, prev, jnp.exp(cumA))
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+__all__ = ["ssd_chunked_fused", "ssd_chunk", "ssd_chunk_ref"]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SSD chunk kernel: the intra-chunk terms of
+Mamba-2's chunked algorithm (repro.models.mamba2.ssd_chunked steps 1-2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mamba2 import _segsum
+
+
+def ssd_chunk_ref(xbar, dA, Bc, Cc):
+    """xbar: (B,C,Q,H,P) dt-folded values; dA: (B,C,Q,H); Bc/Cc: (B,C,Q,N).
+
+    Returns (y_diag (B,C,Q,H,P), states (B,C,H,P,N), chunk_decay (B,C,H)).
+    """
+    cumA = jnp.cumsum(dA, axis=2)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # (B,C,H,Q,Q)
+    y_diag = jnp.einsum("bcqn,bcsn,bchqs,bcshp->bcqhp", Cc, Bc, L, xbar)
+    decay_states = jnp.exp(cumA[:, :, -1:, :] - cumA)        # (B,C,Q,H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_states, xbar)
+    chunk_decay = jnp.exp(cumA[:, :, -1, :])
+    return y_diag, states, chunk_decay

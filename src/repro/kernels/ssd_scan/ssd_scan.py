@@ -1,0 +1,82 @@
+"""Mamba-2 SSD intra-chunk kernel (Pallas TPU).
+
+The chunked SSD algorithm [arXiv:2405.21060] splits into (a) a quadratic
+*intra-chunk* part — three MXU matmuls per (batch, chunk, head) tile — and
+(b) a tiny sequential inter-chunk recurrence.  This kernel computes (a) with
+the whole (Q x Q) decay matrix built in VMEM from a cumulative-sum segment
+trick, so HBM sees each x/B/C element exactly once; (b) stays in jnp
+(`ops.ssd_chunked_fused`), matching how the TPU would pipeline it.
+
+Grid: (B, C, H) with Q x P / Q x N tiles; Q=chunk (<=256) and P,N multiples
+of the 128-lane width for full MXU utilization.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(xbar_ref, dA_ref, b_ref, c_ref, y_ref, st_ref, dk_ref, *, Q: int):
+    x = xbar_ref[0, 0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dA = dA_ref[0, 0, :, 0].astype(jnp.float32)            # (Q,)
+    Bc = b_ref[0, 0].astype(jnp.float32)                   # (Q, N)
+    Cc = c_ref[0, 0].astype(jnp.float32)                   # (Q, N)
+
+    cum = jnp.cumsum(dA)                                   # (Q,)
+    # L[q, s] = exp(sum_{s<t<=q} dA_t) = exp(cum[q] - cum[s]) for s <= q
+    seg = cum[:, None] - cum[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.exp(jnp.where(si <= qi, seg, NEG_INF))
+
+    scores = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    y = jax.lax.dot(scores * L, x, preferred_element_type=jnp.float32)
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    decay = jnp.exp(cum[-1] - cum)                         # (Q,)
+    # states (P, N) = x^T @ (B * decay)
+    st = jax.lax.dot_general(x, Bc * decay[:, None],
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    st_ref[0, 0, 0] = st.astype(st_ref.dtype)
+    dk_ref[0, 0, 0] = jnp.exp(cum[-1]).astype(dk_ref.dtype)
+
+
+def ssd_chunk(xbar, dA, Bc, Cc, *, interpret: bool = False):
+    """Intra-chunk SSD.  xbar: (B,C,Q,H,P); dA: (B,C,Q,H); Bc/Cc: (B,C,Q,N).
+
+    Returns (y_diag (B,C,Q,H,P) f32, states (B,C,H,P,N) f32,
+    chunk_decay (B,C,H) f32)."""
+    B, C, Q, H, P = xbar.shape
+    N = Bc.shape[-1]
+    kernel = functools.partial(_kernel, Q=Q)
+
+    # dA needs the L trick's cumsum inside; seg exp handles the masking.
+    y, st, dk = pl.pallas_call(
+        kernel,
+        grid=(B, C, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c, h: (b, c, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, C, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, C, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, C, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xbar, dA, Bc, Cc)
+    return y, st, dk

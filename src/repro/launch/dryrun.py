@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and record memory/cost/collective analysis.
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--mesh single|multi|both] [--out runs/dryrun.jsonl] [--force]
+
+Every cell ``.lower().compile()``s through XLA's SPMD partitioner with the
+real production shardings; failures here are sharding bugs.  Results append
+to a JSONL cache so the sweep is resumable.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, ASSIGNED_ARCHS, cell_is_supported, get_config
+from repro.distributed.ctx import mesh_context
+from repro.distributed.sharding import (batch_specs, cache_specs, param_specs,
+                                        sanitize_specs, to_named)
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.training.train_step import make_train_step
+from repro.training.optimizer import init_opt_state
+
+# TPU v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s effective per link
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'bf16[128,1024]{1,0}' -> bytes."""
+    m = re.match(r"([a-z]+[0-9]*)\[([0-9,]*)\]", type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def parse_collectives(hlo_text: str, scan_trip_counts: dict) -> dict:
+    """Sum collective operand bytes from post-SPMD optimized HLO (per-device).
+
+    Collectives inside while-loop (scan) bodies execute once per layer-loop
+    trip; computations whose name marks them as scan/while bodies are scaled
+    by the arch's trip count (the documented approximation in DESIGN.md).
+    """
+    per_kind = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    current_scale = 1
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("%") and ls.endswith("{") and "(" in ls:
+            name = ls.split(" ", 1)[0]
+            current_scale = 1
+            for marker, trips in scan_trip_counts.items():
+                if marker in name:
+                    current_scale = trips
+                    break
+        for kind in _COLLECTIVES:
+            token = f" {kind}("
+            if token in ls or ls.startswith(f"{kind}("):
+                # operand types appear inside the call parens
+                args = ls.split(token, 1)[1]
+                ops = re.findall(r"([a-z]+[0-9]*\[[0-9,]*\](?:\{[0-9,]*\})?)", args)
+                nbytes = sum(_shape_bytes(o) for o in ops)
+                if nbytes == 0:   # fall back to result type
+                    head = ls.split("=", 1)[0:1]
+                    m = re.search(r"([a-z]+[0-9]*\[[0-9,]*\])", ls.split("=", 1)[-1])
+                    nbytes = _shape_bytes(m.group(1)) if m else 0
+                per_kind[kind] += nbytes * current_scale
+                counts[kind] += current_scale
+                break
+    total = sum(per_kind.values())
+    return {"per_kind_bytes": per_kind, "counts": counts,
+            "per_device_bytes": total}
+
+
+def _model_for(arch: str, shape_name: str, opt: dict) -> Model:
+    cfg = get_config(arch)
+    # 1024-wide attention chunks keep the 32k cells' working set in check
+    return Model(cfg, attn_impl="chunked",
+                 attn_chunk=opt.get("attn_chunk", 1024),
+                 ssd_chunk=256, remat=True,
+                 kv_dtype=opt.get("kv_dtype", "bfloat16"),
+                 moe_groups=opt.get("moe_groups", 1),
+                 pad_experts_to=opt.get("pad_experts_to", 0),
+                 ssm_state_dtype=opt.get("ssm_state_dtype", "float32"))
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, opt: dict = None):
+    """Build + lower + compile one cell; returns the result record."""
+    opt = opt or {}
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = _model_for(arch, shape_name, opt)
+
+    with mesh_context(mesh):
+        params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        if shape.kind == "train":
+            state_shape = jax.eval_shape(
+                lambda p: {"params": p, **init_opt_state(p)}, params_shape)
+            pspec = sanitize_specs(params_shape,
+                                   param_specs(cfg, params_shape, "train"), mesh)
+            mspec = sanitize_specs(state_shape["m"], pspec, mesh)
+            state_spec = {"params": pspec, "m": mspec, "v": mspec,
+                          "step": jax.sharding.PartitionSpec()}
+            batch_shape = model.input_specs(shape)
+            bspec = sanitize_specs(batch_shape,
+                                   batch_specs(cfg, shape, mesh), mesh)
+            step_fn = make_train_step(
+                model, grad_compression=opt.get("grad_compression", False))
+            jitted = jax.jit(step_fn,
+                             in_shardings=(to_named(mesh, state_spec),
+                                           to_named(mesh, bspec)),
+                             out_shardings=(to_named(mesh, state_spec), None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_shape, batch_shape)
+        elif shape.kind == "prefill":
+            pspec = sanitize_specs(params_shape,
+                                   param_specs(cfg, params_shape, "serving"), mesh)
+            batch_shape = model.input_specs(shape)
+            bspec = sanitize_specs(batch_shape,
+                                   batch_specs(cfg, shape, mesh), mesh)
+            jitted = jax.jit(model.prefill,
+                             in_shardings=(to_named(mesh, pspec),
+                                           to_named(mesh, bspec)))
+            lowered = jitted.lower(params_shape, batch_shape)
+        else:  # decode
+            pspec = sanitize_specs(params_shape,
+                                   param_specs(cfg, params_shape, "serving"), mesh)
+            ins = model.input_specs(shape)
+            cspec = sanitize_specs(ins["cache"],
+                                   cache_specs(cfg, shape, mesh), mesh)
+            tspec = sanitize_specs(ins["tokens"],
+                                   batch_specs(cfg, shape, mesh)["tokens"], mesh)
+            jitted = jax.jit(model.decode_step,
+                             in_shardings=(to_named(mesh, pspec),
+                                           to_named(mesh, cspec),
+                                           to_named(mesh, tspec)),
+                             out_shardings=(None, to_named(mesh, cspec)),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_shape, ins["cache"], ins["tokens"])
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    # scan trip counts for collective scaling
+    trips = {"body": _layer_trips(cfg)}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo, trips)
+    n_chips = mesh.devices.size
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    record = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": int(n_chips),
+        "compile_s": round(compile_s, 2),
+        "opt": opt,
+        "memory": {
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "cost": {"flops_per_device": flops_dev,
+                 "bytes_per_device": bytes_dev},
+        "collectives": coll,
+        "roofline": _roofline(cfg, SHAPES[shape_name], flops_dev, bytes_dev,
+                              coll["per_device_bytes"], n_chips),
+        "hlo_bytes": len(hlo),
+    }
+    return record
+
+
+def _layer_trips(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.num_layers // cfg.attn_every
+    return cfg.num_layers
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for train, 2*N_active*D for a forward-only cell."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1
+    return 2.0 * n_active * tokens
+
+
+def _roofline(cfg, shape, flops_dev, bytes_dev, coll_dev, chips):
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    hlo_total = flops_dev * chips
+    return {
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / hlo_total) if hlo_total else None,
+        "bound_s": max(t_compute, t_memory, t_coll),
+    }
+
+
+def run_cells(archs, shapes, meshes, out_path: Path, force: bool = False,
+              opt: dict = None):
+    opt = opt or {}
+    opt_key = json.dumps(opt, sort_keys=True)
+    done = set()
+    if out_path.exists() and not force:
+        for line in out_path.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                done.add((r["arch"], r["shape"], r["mesh"],
+                          json.dumps(r.get("opt") or {}, sort_keys=True)))
+            except Exception:
+                pass
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    mesh_objs = {}
+    if "single" in meshes:
+        mesh_objs["16x16"] = make_production_mesh(multi_pod=False)
+    if "multi" in meshes:
+        mesh_objs["2x16x16"] = make_production_mesh(multi_pod=True)
+
+    with out_path.open("a") as fh:
+        for arch in archs:
+            cfg = get_config(arch)
+            for shape_name in shapes:
+                ok, reason = cell_is_supported(cfg, SHAPES[shape_name])
+                for mesh_name, mesh in mesh_objs.items():
+                    key = (arch, shape_name, mesh_name, opt_key)
+                    if key in done:
+                        print(f"[skip-cached] {key}")
+                        continue
+                    if not ok:
+                        rec = {"arch": arch, "shape": shape_name,
+                               "mesh": mesh_name, "skipped": True,
+                               "reason": reason, "opt": opt}
+                        fh.write(json.dumps(rec) + "\n")
+                        fh.flush()
+                        print(f"[skip] {arch} {shape_name}: {reason}")
+                        continue
+                    print(f"[lower] {arch} {shape_name} {mesh_name} opt={opt} ...",
+                          flush=True)
+                    t0 = time.time()
+                    try:
+                        rec = lower_cell(arch, shape_name, mesh, opt=opt)
+                        rec["wall_s"] = round(time.time() - t0, 1)
+                        print(f"  ok in {rec['wall_s']}s compile={rec['compile_s']}s "
+                              f"dominant={rec['roofline']['dominant']}", flush=True)
+                    except Exception as e:
+                        rec = {"arch": arch, "shape": shape_name,
+                               "mesh": mesh_name, "error": str(e)[:2000],
+                               "traceback": traceback.format_exc()[-4000:],
+                               "opt": opt, "wall_s": round(time.time() - t0, 1)}
+                        print(f"  FAILED: {e}", flush=True)
+                    fh.write(json.dumps(rec) + "\n")
+                    fh.flush()
+
+
+def _parse_opt(s: str) -> dict:
+    out = {}
+    if not s:
+        return out
+    for kv in s.split(","):
+        k, v = kv.split("=")
+        try:
+            out[k] = int(v)
+        except ValueError:
+            out[k] = v if v not in ("true", "false") else (v == "true")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="runs/dryrun.jsonl")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", default="", help="k=v,... perf-variant options "
+                    "(kv_dtype, moe_groups, pad_experts_to, attn_chunk)")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    run_cells(archs, shapes, meshes, Path(args.out), force=args.force,
+              opt=_parse_opt(args.opt))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Training launcher: real steps on this host's devices, dry-run shardings on
+production meshes, checkpoint/restart built in.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b --smoke \
+        --steps 100 --ckpt runs/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.distributed.ctx import mesh_context
+from repro.models.model import Model
+from repro.training.checkpoint import (latest_step, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 50,
+          batch_size: int = 8, seq_len: int = 64, ckpt_dir: str = None,
+          ckpt_every: int = 25, lr: float = 3e-4, log_every: int = 10,
+          grad_compression: bool = False, param_dtype: str = "float32"):
+    cfg = (get_smoke_config(arch) if smoke else get_config(arch))
+    cfg = cfg.scaled(param_dtype=param_dtype)
+    model = Model(cfg, attn_chunk=max(seq_len // 2, 16),
+                  ssd_chunk=min(64, seq_len), remat=False)
+    step_fn = jax.jit(make_train_step(
+        model, AdamWConfig(lr=lr), grad_compression=grad_compression),
+        donate_argnums=(0,))
+    data = SyntheticLM(cfg, DataConfig(batch_size=batch_size, seq_len=seq_len))
+
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    start = 0
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        state, start = restore_checkpoint(ckpt_dir, state)
+        print(f"[train] restored checkpoint at step {start}")
+
+    losses = []
+    t0 = time.time()
+    it = data.iterate(start_step=start)
+    for step in range(start, steps):
+        batch = next(it)
+        if cfg.input_mode == "embeds" and not cfg.is_encoder_decoder:
+            emb = jax.nn.one_hot(batch["tokens"] % cfg.d_model, cfg.d_model)
+            batch = {"embeds": emb, "targets": batch["targets"]}
+        elif cfg.is_encoder_decoder:
+            emb = jax.nn.one_hot(batch["tokens"] % cfg.d_model, cfg.d_model)
+            batch = {"enc_embeds": emb, "tokens": batch["tokens"],
+                     "targets": batch["targets"]}
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if (step + 1) % log_every == 0:
+            dt = (time.time() - t0) / max(step + 1 - start, 1)
+            print(f"[train] step {step+1:5d} loss {loss:8.4f} "
+                  f"grad_norm {float(metrics['grad_norm']):7.3f} "
+                  f"({dt*1e3:.0f} ms/step)", flush=True)
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, state, step + 1)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, state, steps)
+    return state, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+    _, losses = train(args.arch, smoke=args.smoke, steps=args.steps,
+                      batch_size=args.batch_size, seq_len=args.seq_len,
+                      ckpt_dir=args.ckpt,
+                      grad_compression=args.grad_compression)
+    print(f"[train] first loss {losses[0]:.4f} -> last loss {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,324 @@
+"""Composable model layers: norms, RoPE, GQA attention (train / chunked /
+decode), dense FFN, capacity-based MoE.
+
+Everything is a pure function over an explicit param pytree so the same code
+path is used by smoke tests (1 CPU device) and the 512-chip dry-run (pjit).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.ctx import shard_hint
+from repro.models.config import ArchConfig
+
+# --------------------------------------------------------------------- init
+
+def _dense_init(rng, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / (fan_in ** 0.5)
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def init_norm(cfg: ArchConfig, dim: int, dtype):
+    p = {"scale": jnp.ones((dim,), dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype)
+    return p
+
+
+def apply_norm(cfg: ArchConfig, p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        xf = xf - xf.mean(-1, keepdims=True)
+    var = (xf * xf).mean(-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, hd) with matching positions (..., S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+
+def init_attention(cfg: ArchConfig, rng, dtype):
+    D, H, KVH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": _dense_init(ks[0], (D, H * hd), dtype=dtype),
+        "wk": _dense_init(ks[1], (D, KVH * hd), dtype=dtype),
+        "wv": _dense_init(ks[2], (D, KVH * hd), dtype=dtype),
+        "wo": _dense_init(ks[3], (H * hd, D), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KVH * hd,), dtype)
+        p["bv"] = jnp.zeros((KVH * hd,), dtype)
+    return p
+
+
+def _project_qkv(cfg: ArchConfig, p, x, positions, rope: bool = True):
+    B, S, _ = x.shape
+    H, KVH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KVH, hd)
+    v = v.reshape(B, S, KVH, hd)
+    if rope:
+        q = apply_rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta).swapaxes(1, 2)
+    return q, k, v
+
+
+def full_attention(cfg: ArchConfig, q, k, v, *, causal: bool,
+                   q_positions=None, kv_positions=None):
+    """Reference (materialized-scores) attention.  q:(B,S,H,hd) k/v:(B,T,KVH,hd)."""
+    B, S, H, hd = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, S, KVH, G, hd)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = q_positions if q_positions is not None else jnp.arange(S)[None].repeat(B, 0)
+        kpos = kv_positions if kv_positions is not None else jnp.arange(T)[None].repeat(B, 0)
+        mask = kpos[:, None, None, None, :] <= qpos[:, None, None, :, None]
+        s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def chunked_attention(cfg: ArchConfig, q, k, v, *, causal: bool,
+                      q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Memory-efficient (flash-style online-softmax) attention in pure jnp.
+
+    Scans over query chunks; within each, scans kv chunks with a running
+    (max, sum, acc) triple — the lowered HLO never materializes the SxT score
+    matrix, which is what makes the 32k-prefill cells feasible.
+    """
+    B, S, H, hd = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    S_orig, T_orig = S, T
+    if S % q_chunk:                      # pad queries to a chunk multiple
+        q = jnp.pad(q, [(0, 0), (0, -S % q_chunk), (0, 0), (0, 0)])
+        S = q.shape[1]
+    if T % kv_chunk:                     # pad keys/values; masked out below
+        pad = [(0, 0), (0, -T % kv_chunk), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+        T = k.shape[1]
+    nq, nk = S // q_chunk, T // kv_chunk
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(B, nq, q_chunk, KVH, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, KVH, G, Cq, hd)
+    kc = k.reshape(B, nk, kv_chunk, KVH, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, kv_chunk, KVH, hd).transpose(1, 0, 3, 2, 4)
+    # (nk, B, KVH, Ck, hd)
+
+    def per_q_chunk(qi, qb):
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, kb, vb = inp
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            ok = kpos[None, None, None, None, :] < T_orig   # mask kv padding
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                ok = ok & (kpos[None, None, None, None, :]
+                           <= qpos[None, None, None, :, None])
+            s = jnp.where(ok, s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KVH, G, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0),
+                                  (jnp.arange(nk), kc, vc))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = lax.map(lambda args: per_q_chunk(*args), (jnp.arange(nq), qg))
+    # (nq, B, KVH, G, Cq, hd) -> (B, S, H, hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H, hd)
+    return out[:, :S_orig].astype(q.dtype)
+
+
+def decode_attention(cfg: ArchConfig, q, k_cache, v_cache, lengths):
+    """Single-token decode.  q:(B,H,hd), caches:(B,Smax,KVH,hd), lengths:(B,)
+    = number of valid cached tokens (including the token just written)."""
+    B, H, hd = q.shape
+    Smax, KVH = k_cache.shape[1], k_cache.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, hd)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    valid = jnp.arange(Smax)[None, :] < lengths[:, None]          # (B, Smax)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- FFN
+
+def init_ffn(cfg: ArchConfig, rng, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    p = {"wi": _dense_init(ks[0], (D, F), dtype=dtype),
+         "wo": _dense_init(ks[1], (F, D), dtype=dtype)}
+    if cfg.act == "swiglu":
+        p["wg"] = _dense_init(ks[2], (D, F), dtype=dtype)
+    return p
+
+
+def _act(cfg: ArchConfig, h, g=None):
+    if cfg.act == "swiglu":
+        return jax.nn.silu(g) * h
+    if cfg.act == "gelu":
+        return jax.nn.gelu(h)
+    return jax.nn.relu(h)
+
+
+def apply_ffn(cfg: ArchConfig, p, x):
+    h = x @ p["wi"]
+    g = x @ p["wg"] if cfg.act == "swiglu" else None
+    h = _act(cfg, h, g)
+    h = shard_hint(h, "batch", None, "model")
+    return h @ p["wo"]
+
+
+# --------------------------------------------------------------------- MoE
+
+def init_moe(cfg: ArchConfig, rng, dtype, pad_experts_to: int = 0):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    E_alloc = max(E, pad_experts_to)
+    ks = jax.random.split(rng, 4)
+    p = {
+        "router": _dense_init(ks[0], (D, E_alloc), scale=0.02, dtype=jnp.float32),
+        "wi": _dense_init(ks[1], (E_alloc, D, F), dtype=dtype),
+        "wo": _dense_init(ks[2], (E_alloc, F, D), dtype=dtype),
+    }
+    if cfg.act == "swiglu":
+        p["wg"] = _dense_init(ks[3], (E_alloc, D, F), dtype=dtype)
+    return p
+
+
+def _route(cfg: ArchConfig, p, xf):
+    """Router: logits over real experts (padded slots masked to -inf)."""
+    E = cfg.num_experts
+    logits = xf.astype(jnp.float32) @ p["router"]
+    E_alloc = logits.shape[-1]
+    if E_alloc > E:
+        pad_mask = jnp.arange(E_alloc) >= E
+        logits = jnp.where(pad_mask, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = lax.top_k(probs, cfg.top_k)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    density = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E_alloc), axis=tuple(
+        range(gate_idx.ndim - 1)))
+    density_proxy = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux_loss = E * jnp.sum(density * density_proxy)
+    return gate_w, gate_idx, aux_loss, E_alloc
+
+
+def _dispatch_compute_combine(cfg, p, xg, gate_w, gate_idx, E_alloc, capacity):
+    """Grouped dispatch: cumsum + scatter stay local to each group (GShard).
+
+    xg: (G, Tg, D); gate_*: (G, Tg, K).  Returns (G, Tg, D).
+    """
+    G, Tg, D = xg.shape
+    K = cfg.top_k
+
+    flat_idx = gate_idx.reshape(G, Tg * K)
+    onehot = jax.nn.one_hot(flat_idx, E_alloc, dtype=jnp.float32)  # (G,TK,E)
+    pos_in_e = (jnp.cumsum(onehot, axis=1) * onehot).sum(-1) - 1.0
+    pos_in_e = pos_in_e.astype(jnp.int32)
+    keep = pos_in_e < capacity
+    dest = jnp.where(keep, flat_idx * capacity + pos_in_e,
+                     E_alloc * capacity)
+
+    xk = jnp.repeat(xg, K, axis=1)                                 # (G,TK,D)
+
+    def scatter_one(xr, dr):
+        return jnp.zeros((E_alloc * capacity + 1, D), xg.dtype).at[dr].set(xr)
+
+    buf = jax.vmap(scatter_one)(xk, dest)[:, :-1]
+    buf = buf.reshape(G, E_alloc, capacity, D)
+    buf = shard_hint(buf, "batch", "expert", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wi"])
+    if cfg.act == "swiglu":
+        g = jnp.einsum("gecd,edf->gecf", buf, p["wg"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = _act(cfg, h)
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    out = shard_hint(out, "batch", "expert", None, None)
+
+    outf = out.reshape(G, E_alloc * capacity, D)
+    safe = jnp.clip(dest, 0, E_alloc * capacity - 1)
+    gathered = jnp.take_along_axis(outf, safe[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    y = (gathered.reshape(G, Tg, K, D)
+         * gate_w[..., None].astype(xg.dtype)).sum(axis=2)
+    return y
+
+
+def apply_moe(cfg: ArchConfig, p, x, *, groups: int = 1):
+    """Capacity-based top-k MoE (GShard-style).
+
+    ``groups=1`` is the naive global dispatch (baseline); ``groups=G`` splits
+    tokens into G batch-aligned groups whose cumsum/scatter are shard-local —
+    the §Perf optimization that removes the cross-shard collective-permute
+    chain and turns dispatch into an all-to-all.  Tokens above per-group
+    expert capacity are dropped (residual passes through).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    G = groups if (groups > 1 and T % groups == 0) else 1
+    Tg = T // G
+    xg = x.reshape(G, Tg, D)
+
+    gate_w, gate_idx, aux_loss, E_alloc = _route(cfg, p, xg)
+    capacity = max(int(cfg.capacity_factor * Tg * K / E), 1)
+    y = _dispatch_compute_combine(cfg, p, xg, gate_w, gate_idx, E_alloc,
+                                  capacity)
+    return y.reshape(B, S, D), aux_loss

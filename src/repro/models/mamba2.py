@@ -1,0 +1,194 @@
+"""Mamba-2 (SSD — state-space duality) block in pure JAX.
+
+Implements the chunked SSD algorithm [arXiv:2405.21060] for train/prefill and
+the O(1) recurrent step for decode.  ngroups=1 (B/C shared across heads).
+
+Shapes:  x (B,S,H,P), dt (B,S,H), A (H,), Bmat/Cmat (B,S,N).
+State:   ssm (B,H,P,N) float32, conv (B,W-1,di+2N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.ctx import shard_hint
+from repro.models.config import ArchConfig
+from repro.models.layers import _dense_init, apply_norm, init_norm
+
+
+# ------------------------------------------------------------------ SSD core
+
+def _segsum(dA):
+    """dA: (..., Q) -> (..., Q, Q) lower-triangular segment sums.
+
+    out[..., i, j] = sum_{j < t <= i} dA[..., t]   (−inf above diagonal).
+    """
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bmat, Cmat, *, chunk: int, initial_state=None):
+    """Chunked SSD scan.  Returns (y, final_state).
+
+    x: (B,S,H,P) values; dt: (B,S,H) positive step sizes; A: (H,) negative;
+    Bmat/Cmat: (B,S,N).  final_state: (B,H,P,N) float32.
+    """
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    if S % chunk:   # largest divisor of S that is <= chunk (exactness > speed)
+        chunk = next(c for c in range(min(chunk, S), 0, -1) if S % c == 0)
+    C = S // chunk
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = dtf * A.astype(jnp.float32)                      # (B,S,H)
+    xbar = xf * dtf[..., None]                            # fold dt into x
+
+    # chunked views
+    xc = xbar.reshape(Bsz, C, chunk, H, P)
+    dAc = dA.reshape(Bsz, C, chunk, H)
+    Bc = Bmat.astype(jnp.float32).reshape(Bsz, C, chunk, N)
+    Cc = Cmat.astype(jnp.float32).reshape(Bsz, C, chunk, N)
+
+    cumA = jnp.cumsum(dAc, axis=2)                        # (B,C,Q,H)
+
+    # 1) intra-chunk (quadratic within chunk, like windowed attention)
+    L = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))       # (B,C,H,Q,Q)
+    y_diag = jnp.einsum("bcqn,bcsn,bchqs,bcshp->bcqhp", Cc, Bc, L, xc)
+
+    # 2) per-chunk final states
+    decay_states = jnp.exp(cumA[:, :, -1:, :] - cumA)     # (B,C,Q,H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_states, xc)
+
+    # 3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(cumA[:, :, -1, :])              # (B,C,H)
+    s0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((Bsz, H, P, N), jnp.float32))
+
+    def step(S_prev, inp):
+        lam, st = inp                                     # (B,H), (B,H,P,N)
+        S_new = S_prev * lam[..., None, None] + st
+        return S_new, S_prev                              # emit pre-chunk state
+
+    lam_c = chunk_decay.transpose(1, 0, 2)                # (C,B,H)
+    st_c = states.transpose(1, 0, 2, 3, 4)                # (C,B,H,P,N)
+    final_state, prev_states = lax.scan(step, s0, (lam_c, st_c))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,C,H,P,N)
+
+    # 4) inter-chunk contribution to outputs
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", Cc, prev_states, jnp.exp(cumA))
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, A, Bmat, Cmat):
+    """One recurrent step.  x:(B,H,P) dt:(B,H) Bmat/Cmat:(B,N) state:(B,H,P,N)."""
+    dA = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))     # (B,H)
+    dBx = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(jnp.float32),
+                     Bmat.astype(jnp.float32), x.astype(jnp.float32))
+    new_state = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bn,bhpn->bhp", Cmat.astype(jnp.float32), new_state)
+    return y.astype(x.dtype), new_state
+
+
+# -------------------------------------------------------------- Mamba2 block
+
+def init_mamba_block(cfg: ArchConfig, rng, dtype):
+    D, di, N, H, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.conv_width)
+    ks = jax.random.split(rng, 4)
+    conv_ch = di + 2 * N
+    return {
+        "in_proj": _dense_init(ks[0], (D, 2 * di + 2 * N + H), dtype=dtype),
+        "conv_w": (_dense_init(ks[1], (W, conv_ch), scale=0.5, dtype=dtype)),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log) = -1
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": init_norm(cfg, di, dtype),
+        "out_proj": _dense_init(ks[3], (di, D), dtype=dtype),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    assert dt.shape[-1] == H
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, initial=None):
+    """Depthwise causal conv.  xBC:(B,S,Ch), w:(W,Ch).  initial:(B,W-1,Ch)."""
+    W = w.shape[0]
+    pad = (initial if initial is not None
+           else jnp.zeros((xBC.shape[0], W - 1, xBC.shape[-1]), xBC.dtype))
+    xp = jnp.concatenate([pad, xBC], axis=1)              # (B, S+W-1, Ch)
+    out = sum(xp[:, i:i + xBC.shape[1], :] * w[i][None, None, :] for i in range(W))
+    new_state = xp[:, -(W - 1):, :] if W > 1 else pad[:, :0]
+    return jax.nn.silu(out + b), new_state
+
+
+def mamba_block(cfg: ArchConfig, p, x, *, chunk: int = 256,
+                initial=None, return_state: bool = False):
+    """Full-sequence Mamba-2 mixer.  x: (B,S,D) -> (B,S,D)."""
+    Bsz, S, D = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    conv_init = initial["conv"] if initial is not None else None
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_init)
+    xs = xBC[..., :di].reshape(Bsz, S, H, P)
+    Bmat = xBC[..., di:di + N]
+    Cmat = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ssm_init = initial["ssm"] if initial is not None else None
+    y, ssm_state = ssd_chunked(xs, dt, A, Bmat, Cmat, chunk=min(chunk, S),
+                               initial_state=ssm_init)
+    y = y + xs * p["D_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, S, di)
+    y = apply_norm(cfg, p["gate_norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"conv": conv_state, "ssm": ssm_state}
+    return out
+
+
+def mamba_decode_step(cfg: ArchConfig, p, x, state):
+    """One-token decode.  x: (B,D); state: {conv:(B,W-1,Ch), ssm:(B,H,P,N)}."""
+    Bsz, D = x.shape
+    di, N, H, P, W = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_headdim, cfg.conv_width)
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    # conv: shift register
+    conv = state["conv"]
+    window = jnp.concatenate([conv, xBC[:, None, :]], axis=1)     # (B,W,Ch)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    new_conv = window[:, 1:, :]
+    xs = xBC[..., :di].reshape(Bsz, H, P)
+    Bmat = xBC[..., di:di + N]
+    Cmat = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm = ssd_decode_step(state["ssm"], xs, dt, A, Bmat, Cmat)
+    y = y + xs * p["D_skip"][None, :, None].astype(y.dtype)
+    y = y.reshape(Bsz, di)
+    y = apply_norm(cfg, p["gate_norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": new_ssm}
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    di, N, H, P, W = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                      cfg.ssm_headdim, cfg.conv_width)
+    return {"conv": jnp.zeros((batch, W - 1, di + 2 * N), dtype),
+            "ssm": jnp.zeros((batch, H, P, N), jnp.float32)}

@@ -1,0 +1,560 @@
+"""Model assembly: decoder-only / MoE / SSM / hybrid / encoder-decoder stacks
+with scan-over-layers, remat, and train / prefill / decode entry points.
+
+All assigned architectures run through this one implementation, selected by
+:class:`ArchConfig`.  Params are explicit pytrees; layers are stacked along a
+leading axis and iterated with ``lax.scan`` so the lowered HLO stays small for
+72-layer / 398B-parameter configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.ctx import shard_hint
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.utils import dtype_of
+
+Params = Any
+Cache = Any
+
+MOE_AUX_COEF = 0.01
+ZLOSS_COEF = 1e-4
+
+
+# ----------------------------------------------------------------- sublayers
+
+def _init_sublayer(cfg: ArchConfig, rng, kind: str, ffn_kind: str, dtype,
+                   pad_experts_to: int = 0):
+    ks = jax.random.split(rng, 4)
+    p: Dict[str, Any] = {"ln1": L.init_norm(cfg, cfg.d_model, dtype)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(cfg, ks[0], dtype)
+    else:
+        p["ssm"] = M.init_mamba_block(cfg, ks[0], dtype)
+    if ffn_kind == "dense":
+        p["ln2"] = L.init_norm(cfg, cfg.d_model, dtype)
+        p["ffn"] = L.init_ffn(cfg, ks[1], dtype)
+    elif ffn_kind == "moe":
+        p["ln2"] = L.init_norm(cfg, cfg.d_model, dtype)
+        p["ffn"] = L.init_moe(cfg, ks[1], dtype, pad_experts_to=pad_experts_to)
+    return p
+
+
+def _apply_ffn_part(cfg: ArchConfig, p, x, ffn_kind: str, moe_groups: int = 1):
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_kind == "none":
+        return x, aux
+    h = L.apply_norm(cfg, p["ln2"], x)
+    if ffn_kind == "moe":
+        out, aux = L.apply_moe(cfg, p["ffn"], h, groups=moe_groups)
+    else:
+        out = L.apply_ffn(cfg, p["ffn"], h)
+    return x + out, aux
+
+
+def _apply_sublayer_full(cfg: ArchConfig, p, x, positions, kind: str,
+                         ffn_kind: str, *, causal: bool, want_cache: bool,
+                         attn_impl: str, attn_chunk: int, ssd_chunk: int,
+                         moe_groups: int = 1):
+    """Full-sequence (train/prefill) sublayer.  Returns (x, cache, aux)."""
+    h = L.apply_norm(cfg, p["ln1"], x)
+    cache = None
+    if kind == "attn":
+        q, k, v = L._project_qkv(cfg, p["attn"], h, positions)
+        if attn_impl == "chunked":
+            attn = L.chunked_attention(cfg, q, k, v, causal=causal,
+                                       q_chunk=attn_chunk, kv_chunk=attn_chunk)
+        else:
+            attn = L.full_attention(cfg, q, k, v, causal=causal)
+        B, S = x.shape[:2]
+        out = attn.reshape(B, S, -1) @ p["attn"]["wo"]
+        if want_cache:
+            cache = {"k": k, "v": v}
+    else:
+        if want_cache:
+            out, state = M.mamba_block(cfg, p["ssm"], h, chunk=ssd_chunk,
+                                       return_state=True)
+            cache = state
+        else:
+            out = M.mamba_block(cfg, p["ssm"], h, chunk=ssd_chunk)
+    x = x + out
+    x, aux = _apply_ffn_part(cfg, p, x, ffn_kind, moe_groups)
+    x = shard_hint(x, "batch", None, None)
+    return x, cache, aux
+
+
+def _attn_decode(cfg: ArchConfig, p_attn, h, k_cache, v_cache, lengths):
+    """h: (B,1,D).  Writes new kv at index `lengths`, attends to lengths+1."""
+    B = h.shape[0]
+    q, k, v = L._project_qkv(cfg, p_attn, h, lengths[:, None])
+    rows = jnp.arange(B)
+    k_cache = k_cache.at[rows, lengths].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[rows, lengths].set(v[:, 0].astype(v_cache.dtype))
+    attn = L.decode_attention(cfg, q[:, 0], k_cache, v_cache, lengths + 1)
+    out = attn.reshape(B, -1) @ p_attn["wo"]
+    return out[:, None, :], k_cache, v_cache
+
+
+def _apply_sublayer_decode(cfg: ArchConfig, p, x, lengths, kind: str,
+                           ffn_kind: str, cache, moe_groups: int = 1):
+    """Single-token decode sublayer.  x: (B,1,D)."""
+    h = L.apply_norm(cfg, p["ln1"], x)
+    if kind == "attn":
+        out, k_c, v_c = _attn_decode(cfg, p["attn"], h, cache["k"], cache["v"], lengths)
+        new_cache = {"k": k_c, "v": v_c}
+    else:
+        out2d, new_cache = M.mamba_decode_step(cfg, p["ssm"], h[:, 0, :], cache)
+        out = out2d[:, None, :]
+    x = x + out
+    x, _ = _apply_ffn_part(cfg, p, x, ffn_kind, moe_groups)
+    return x, new_cache
+
+
+# ------------------------------------------------------------------- hybrid
+
+# Jamba group layout (group_size = attn_every = 8):
+#   j: 0        1        2        3         4        5        6        7
+#   mixer: ssm  ssm      ssm      attn      ssm      ssm      ssm      ssm
+#   ffn:  dense moe      dense    moe       dense    moe      dense    moe
+# Stacks: "sd" = ssm+dense (j 0,2,4,6), "sm" = ssm+moe (j 1,5,7), "am" = attn+moe (j 3)
+
+_HYBRID_ORDER = [("sd", 0), ("sm", 0), ("sd", 1), ("am", 0),
+                 ("sd", 2), ("sm", 1), ("sd", 3), ("sm", 2)]
+_HYBRID_SSM_J = [0, 1, 2, 4, 5, 6, 7]          # j indices that are ssm mixers
+
+
+def _hybrid_group_structure(cfg: ArchConfig):
+    gs = cfg.attn_every
+    assert gs == 8 and cfg.num_layers % gs == 0, "hybrid assumes Jamba 8-layer groups"
+    return cfg.num_layers // gs
+
+
+# -------------------------------------------------------------------- model
+
+class Model:
+    """Architecture-neutral model wrapper (pure functions + explicit params)."""
+
+    def __init__(self, cfg: ArchConfig, *, attn_impl: str = "chunked",
+                 attn_chunk: int = 1024, ssd_chunk: int = 256,
+                 remat: bool = True, kv_dtype: str = "bfloat16",
+                 moe_groups: int = 1, pad_experts_to: int = 0,
+                 ssm_state_dtype: str = "float32"):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.attn_chunk = attn_chunk
+        self.ssd_chunk = ssd_chunk
+        self.remat = remat
+        self.kv_dtype = kv_dtype
+        self.moe_groups = moe_groups
+        self.pad_experts_to = pad_experts_to
+        self.ssm_state_dtype = ssm_state_dtype
+        self.dtype = dtype_of(cfg.param_dtype)
+
+    # ------------------------------------------------------------- params
+    def init(self, rng) -> Params:
+        cfg, dtype = self.cfg, self.dtype
+        k_emb, k_layers, k_head, k_enc, k_x = jax.random.split(rng, 5)
+        params: Dict[str, Any] = {
+            "embed": L._dense_init(k_emb, (cfg.vocab_size, cfg.d_model),
+                                   scale=0.02, dtype=dtype),
+            "final_norm": L.init_norm(cfg, cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L._dense_init(k_head, (cfg.d_model, cfg.vocab_size),
+                                              dtype=dtype)
+        params["layers"] = self._init_decoder_stack(k_layers)
+        if cfg.is_encoder_decoder:
+            enc_rngs = jax.random.split(k_enc, cfg.num_encoder_layers)
+            params["encoder"] = jax.vmap(
+                lambda r: _init_sublayer(cfg, r, "attn", "dense", dtype))(enc_rngs)
+            xat_rngs = jax.random.split(k_x, cfg.num_layers)
+            params["cross"] = jax.vmap(
+                lambda r: {"lnx": L.init_norm(cfg, cfg.d_model, dtype),
+                           "xattn": L.init_attention(cfg, r, dtype)})(xat_rngs)
+            params["enc_final_norm"] = L.init_norm(cfg, cfg.d_model, dtype)
+        return params
+
+    def _init_decoder_stack(self, rng):
+        cfg, dtype = self.cfg, self.dtype
+        if cfg.family == "hybrid":
+            n_groups = _hybrid_group_structure(cfg)
+
+            def init_group(r):
+                r_sd, r_sm, r_am = jax.random.split(r, 3)
+                pet = self.pad_experts_to
+                return {
+                    "sd": jax.vmap(lambda rr: _init_sublayer(cfg, rr, "ssm", "dense", dtype))(
+                        jax.random.split(r_sd, 4)),
+                    "sm": jax.vmap(lambda rr: _init_sublayer(cfg, rr, "ssm", "moe", dtype,
+                                                             pet))(
+                        jax.random.split(r_sm, 3)),
+                    "am": _init_sublayer(cfg, r_am, "attn", "moe", dtype, pet),
+                }
+            return jax.vmap(init_group)(jax.random.split(rng, n_groups))
+        kind = cfg.layer_kind(0)
+        ffn_kind = cfg.ffn_kind(0)
+        rngs = jax.random.split(rng, cfg.num_layers)
+        pet = self.pad_experts_to
+        return jax.vmap(lambda r: _init_sublayer(cfg, r, kind, ffn_kind,
+                                                 dtype, pet))(rngs)
+
+    # --------------------------------------------------------------- embed
+    def _embed_in(self, params, tokens=None, embeds=None):
+        if embeds is not None:
+            return embeds.astype(self.dtype)
+        return jnp.take(params["embed"], tokens, axis=0)
+
+    def _logits(self, params, h):
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        return h @ head
+
+    # ------------------------------------------------------------- encoder
+    def _encode(self, params, enc_embeds):
+        cfg = self.cfg
+        x = enc_embeds.astype(self.dtype)
+        positions = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+
+        def body(h, p_l):
+            h, _, aux = _apply_sublayer_full(
+                cfg, p_l, h, positions, "attn", "dense", causal=False,
+                want_cache=False, attn_impl=self.attn_impl,
+                attn_chunk=self.attn_chunk, ssd_chunk=self.ssd_chunk)
+            return h, aux
+        fn = jax.checkpoint(body) if self.remat else body
+        x, _ = lax.scan(fn, x, params["encoder"])
+        return L.apply_norm(cfg, params["enc_final_norm"], x)
+
+    def _cross_kv(self, params, enc_out):
+        """Precompute decoder cross-attention K/V from encoder output."""
+        cfg = self.cfg
+
+        def per_layer(p_x):
+            B, T, _ = enc_out.shape
+            k = (enc_out @ p_x["xattn"]["wk"]).reshape(B, T, cfg.num_kv_heads, cfg.hd)
+            v = (enc_out @ p_x["xattn"]["wv"]).reshape(B, T, cfg.num_kv_heads, cfg.hd)
+            return {"xk": k.astype(dtype_of(self.kv_dtype)),
+                    "xv": v.astype(dtype_of(self.kv_dtype))}
+        return lax.map(per_layer, params["cross"])
+
+    def _apply_cross(self, params_x, x, xk, xv):
+        """Cross-attention sublayer for one decoder layer.  x: (B,S,D)."""
+        cfg = self.cfg
+        h = L.apply_norm(cfg, params_x["lnx"], x)
+        B, S, _ = h.shape
+        q = (h @ params_x["xattn"]["wq"]).reshape(B, S, cfg.num_heads, cfg.hd)
+        attn = L.full_attention(cfg, q, xk.astype(self.dtype),
+                                xv.astype(self.dtype), causal=False)
+        return x + attn.reshape(B, S, -1) @ params_x["xattn"]["wo"]
+
+    # ------------------------------------------------------------ training
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+        """batch: tokens (B,S) | embeds (B,S,D) [+ enc_embeds], targets (B,S)."""
+        cfg = self.cfg
+        x = self._embed_in(params, batch.get("tokens"), batch.get("embeds"))
+        x = shard_hint(x, "batch", None, None)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        enc_ctx = None
+        if cfg.is_encoder_decoder:
+            enc_out = self._encode(params, batch["enc_embeds"])
+            enc_ctx = self._cross_kv(params, enc_out)
+
+        x, aux, _ = self._run_stack_full(params, x, positions, want_cache=False,
+                                         enc_ctx=enc_ctx)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = self._logits(params, x).astype(jnp.float32)
+
+        targets = batch["targets"]
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        ce = (logz - tgt_logit).mean()
+        zloss = ZLOSS_COEF * (logz ** 2).mean()
+        total = ce + zloss + MOE_AUX_COEF * aux
+        return total, {"ce": ce, "zloss": zloss, "moe_aux": aux}
+
+    # ----------------------------------------------------- full-seq stacks
+    def _run_stack_full(self, params, x, positions, *, want_cache: bool,
+                        enc_ctx=None):
+        """Run the decoder stack; returns (x, moe_aux, caches-or-None)."""
+        cfg = self.cfg
+        if cfg.family == "hybrid":
+            return self._run_hybrid_full(params, x, positions, want_cache)
+
+        kind, ffn_kind = cfg.layer_kind(0), cfg.ffn_kind(0)
+
+        if cfg.is_encoder_decoder:
+            def body(h, inp):
+                p_l, p_x, xk, xv = inp
+                h, cache, _ = _apply_sublayer_full(
+                    cfg, p_l, h, positions, kind, "none", causal=True,
+                    want_cache=want_cache, attn_impl=self.attn_impl,
+                    attn_chunk=self.attn_chunk, ssd_chunk=self.ssd_chunk)
+                h = self._apply_cross(p_x, h, xk, xv)
+                h, aux = _apply_ffn_part(cfg, p_l, h, ffn_kind,
+                                         self.moe_groups)
+                return h, (cache, aux)
+            fn = jax.checkpoint(body) if self.remat else body
+            x, (caches, auxs) = lax.scan(
+                fn, x, (params["layers"], params["cross"],
+                        enc_ctx["xk"], enc_ctx["xv"]))
+            return x, auxs.sum(), (caches if want_cache else None)
+
+        def body(h, p_l):
+            h, cache, aux = _apply_sublayer_full(
+                cfg, p_l, h, positions, kind, ffn_kind, causal=True,
+                want_cache=want_cache, attn_impl=self.attn_impl,
+                attn_chunk=self.attn_chunk, ssd_chunk=self.ssd_chunk,
+                moe_groups=self.moe_groups)
+            return h, (cache, aux)
+        fn = jax.checkpoint(body) if self.remat else body
+        x, (caches, auxs) = lax.scan(fn, x, params["layers"])
+        return x, auxs.sum(), (caches if want_cache else None)
+
+    def _run_hybrid_full(self, params, x, positions, want_cache: bool):
+        cfg = self.cfg
+
+        def group_body(h, p_g):
+            caches = {"k": None, "v": None, "conv": [], "ssm": []}
+            aux_total = jnp.zeros((), jnp.float32)
+            for stack, idx in _HYBRID_ORDER:
+                if stack == "am":
+                    p_sub = p_g["am"]
+                    kind, fk = "attn", "moe"
+                else:
+                    p_sub = jax.tree.map(lambda a: a[idx], p_g[stack])
+                    kind, fk = "ssm", ("dense" if stack == "sd" else "moe")
+                h, cache, aux = _apply_sublayer_full(
+                    cfg, p_sub, h, positions, kind, fk, causal=True,
+                    want_cache=want_cache, attn_impl=self.attn_impl,
+                    attn_chunk=self.attn_chunk, ssd_chunk=self.ssd_chunk,
+                    moe_groups=self.moe_groups)
+                aux_total = aux_total + aux
+                if want_cache and cache is not None:
+                    if kind == "attn":
+                        caches["k"], caches["v"] = cache["k"], cache["v"]
+                    else:
+                        caches["conv"].append(cache["conv"])
+                        caches["ssm"].append(cache["ssm"])
+            if want_cache:
+                out_cache = {"k": caches["k"], "v": caches["v"],
+                             "conv": jnp.stack(caches["conv"]),
+                             "ssm": jnp.stack(caches["ssm"])}
+            else:
+                out_cache = jnp.zeros((), jnp.float32)   # dummy, uniform pytree
+            return h, (out_cache, aux_total)
+
+        fn = jax.checkpoint(group_body) if self.remat else group_body
+        x, (caches, auxs) = lax.scan(fn, x, params["layers"])
+        return x, auxs.sum(), (caches if want_cache else None)
+
+    # ------------------------------------------------------------- prefill
+    def prefill(self, params, batch):
+        """Process the prompt; return (last_token_logits, cache).
+
+        batch: tokens (B,S) or embeds (B,S,D); enc-dec additionally
+        enc_embeds (B,T,D) with a 1-token decoder start.
+        """
+        cfg = self.cfg
+        x = self._embed_in(params, batch.get("tokens"), batch.get("embeds"))
+        x = shard_hint(x, "batch", None, None)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+        enc_ctx = None
+        if cfg.is_encoder_decoder:
+            enc_out = self._encode(params, batch["enc_embeds"])
+            enc_ctx = self._cross_kv(params, enc_out)
+
+        x, _aux, caches = self._run_stack_full(params, x, positions,
+                                               want_cache=True, enc_ctx=enc_ctx)
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        # right-padded prompts select their true last token via last_index
+        last = batch.get("last_index")
+        if last is not None:
+            x_last = jnp.take_along_axis(x, last[:, None, None].astype(jnp.int32)
+                                         .repeat(x.shape[-1], -1), axis=1)[:, 0]
+        else:
+            x_last = x[:, -1, :]
+        logits = self._logits(params, x_last)
+        cache = self._pack_cache(caches, enc_ctx, batch_size=B, cur_len=S)
+        return logits.astype(jnp.float32), cache
+
+    def _pack_cache(self, caches, enc_ctx, batch_size: int, cur_len: int):
+        kvd = dtype_of(self.kv_dtype)
+        cache: Dict[str, Any] = {
+            "lengths": jnp.full((batch_size,), cur_len, jnp.int32)}
+        if self.cfg.family == "ssm":
+            cache["conv"] = caches["conv"]
+            cache["ssm"] = caches["ssm"]
+        elif self.cfg.family == "hybrid":
+            cache["k"] = caches["k"].astype(kvd)
+            cache["v"] = caches["v"].astype(kvd)
+            cache["conv"] = caches["conv"]
+            cache["ssm"] = caches["ssm"]
+        else:
+            cache["k"] = caches["k"].astype(kvd)
+            cache["v"] = caches["v"].astype(kvd)
+        if enc_ctx is not None:
+            cache["xk"], cache["xv"] = enc_ctx["xk"], enc_ctx["xv"]
+        return cache
+
+    # -------------------------------------------------------------- decode
+    def decode_step(self, params, cache, tokens):
+        """One decode iteration.  tokens: (B,1) int32.  Returns (logits, cache).
+
+        ``cache["lengths"]`` (B,) counts valid tokens; new KV is written at
+        index lengths (caches must be allocated with Smax > lengths).
+        """
+        cfg = self.cfg
+        lengths = cache["lengths"]
+        x = self._embed_in(params, tokens)
+        x = shard_hint(x, "batch", None, None)
+
+        if cfg.family == "ssm":
+            def body(h, inp):
+                p_l, conv, ssm = inp
+                h, new_state = _apply_sublayer_decode(
+                    cfg, p_l, h, lengths, "ssm", cfg.ffn_kind(0),
+                    {"conv": conv, "ssm": ssm})
+                return h, (new_state["conv"], new_state["ssm"])
+            x, (conv, ssm) = lax.scan(body, x, (params["layers"],
+                                                cache["conv"], cache["ssm"]))
+            new_cache = {**cache, "conv": conv, "ssm": ssm,
+                         "lengths": lengths + 1}
+        elif cfg.family == "hybrid":
+            x, new_cache = self._decode_hybrid(params, cache, x, lengths)
+        elif cfg.is_encoder_decoder:
+            kind, ffn_kind = "attn", cfg.ffn_kind(0)
+
+            def body(h, inp):
+                p_l, p_x, k_c, v_c, xk, xv = inp
+                h1 = L.apply_norm(cfg, p_l["ln1"], h)
+                out, k_c, v_c = _attn_decode(cfg, p_l["attn"], h1, k_c, v_c, lengths)
+                h = h + out
+                h = self._apply_cross(p_x, h, xk, xv)
+                h, _ = _apply_ffn_part(cfg, p_l, h, ffn_kind)
+                return h, (k_c, v_c)
+            x, (k, v) = lax.scan(body, x, (params["layers"], params["cross"],
+                                           cache["k"], cache["v"],
+                                           cache["xk"], cache["xv"]))
+            new_cache = {**cache, "k": k, "v": v, "lengths": lengths + 1}
+        else:
+            kind, ffn_kind = cfg.layer_kind(0), cfg.ffn_kind(0)
+
+            def body(h, inp):
+                p_l, k_c, v_c = inp
+                h, nc = _apply_sublayer_decode(cfg, p_l, h, lengths, kind,
+                                               ffn_kind, {"k": k_c, "v": v_c})
+                return h, (nc["k"], nc["v"])
+            x, (k, v) = lax.scan(body, x, (params["layers"],
+                                           cache["k"], cache["v"]))
+            new_cache = {**cache, "k": k, "v": v, "lengths": lengths + 1}
+
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = self._logits(params, x[:, -1, :])
+        return logits.astype(jnp.float32), new_cache
+
+    def _decode_hybrid(self, params, cache, x, lengths):
+        cfg = self.cfg
+
+        def group_body(h, inp):
+            p_g, k_c, v_c, conv_c, ssm_c = inp
+            new_conv, new_ssm = [], []
+            ssm_i = 0
+            for stack, idx in _HYBRID_ORDER:
+                if stack == "am":
+                    h, nc = _apply_sublayer_decode(cfg, p_g["am"], h, lengths,
+                                                   "attn", "moe",
+                                                   {"k": k_c, "v": v_c})
+                    k_c, v_c = nc["k"], nc["v"]
+                else:
+                    p_sub = jax.tree.map(lambda a: a[idx], p_g[stack])
+                    fk = "dense" if stack == "sd" else "moe"
+                    h, nc = _apply_sublayer_decode(
+                        cfg, p_sub, h, lengths, "ssm", fk,
+                        {"conv": conv_c[ssm_i], "ssm": ssm_c[ssm_i]})
+                    new_conv.append(nc["conv"])
+                    new_ssm.append(nc["ssm"])
+                    ssm_i += 1
+            return h, (k_c, v_c, jnp.stack(new_conv), jnp.stack(new_ssm))
+
+        x, (k, v, conv, ssm) = lax.scan(
+            group_body, x, (params["layers"], cache["k"], cache["v"],
+                            cache["conv"], cache["ssm"]))
+        new_cache = {**cache, "k": k, "v": v, "conv": conv, "ssm": ssm,
+                     "lengths": lengths + 1}
+        return x, new_cache
+
+    # --------------------------------------------------------- cache specs
+    def cache_shapes(self, batch: int, max_len: int) -> Dict[str, Any]:
+        """Shape/dtype template (as ShapeDtypeStructs) for a decode cache."""
+        cfg = self.cfg
+        kvd = dtype_of(self.kv_dtype)
+        sds = jax.ShapeDtypeStruct
+        KVH, hd = cfg.num_kv_heads, cfg.hd
+        out: Dict[str, Any] = {"lengths": sds((batch,), jnp.int32)}
+        if cfg.family == "ssm":
+            n = cfg.num_layers
+            out["conv"] = sds((n, batch, cfg.conv_width - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), self.dtype)
+            out["ssm"] = sds((n, batch, cfg.ssm_heads, cfg.ssm_headdim,
+                              cfg.ssm_state), dtype_of(self.ssm_state_dtype))
+        elif cfg.family == "hybrid":
+            g = _hybrid_group_structure(cfg)
+            out["k"] = sds((g, batch, max_len, KVH, hd), kvd)
+            out["v"] = sds((g, batch, max_len, KVH, hd), kvd)
+            out["conv"] = sds((g, 7, batch, cfg.conv_width - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), self.dtype)
+            out["ssm"] = sds((g, 7, batch, cfg.ssm_heads, cfg.ssm_headdim,
+                              cfg.ssm_state), dtype_of(self.ssm_state_dtype))
+        else:
+            n = cfg.num_layers
+            out["k"] = sds((n, batch, max_len, KVH, hd), kvd)
+            out["v"] = sds((n, batch, max_len, KVH, hd), kvd)
+            if cfg.is_encoder_decoder:
+                out["xk"] = sds((n, batch, cfg.cross_kv_len, KVH, hd), kvd)
+                out["xv"] = sds((n, batch, cfg.cross_kv_len, KVH, hd), kvd)
+        return out
+
+    def init_cache(self, batch: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                            self.cache_shapes(batch, max_len))
+
+    # --------------------------------------------------------- input specs
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cfg = self.cfg
+        sds = jax.ShapeDtypeStruct
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            batch: Dict[str, Any] = {"targets": sds((B, S), jnp.int32)}
+            if cfg.input_mode == "embeds" and not cfg.is_encoder_decoder:
+                batch["embeds"] = sds((B, S, cfg.d_model), self.dtype)
+            else:
+                batch["tokens"] = sds((B, S), jnp.int32)
+            if cfg.is_encoder_decoder:
+                batch["enc_embeds"] = sds((B, S, cfg.d_model), self.dtype)
+            return batch
+        if shape.kind == "prefill":
+            batch = {}
+            if cfg.is_encoder_decoder:
+                batch["enc_embeds"] = sds((B, S, cfg.d_model), self.dtype)
+                batch["tokens"] = sds((B, 1), jnp.int32)
+            elif cfg.input_mode == "embeds":
+                batch["embeds"] = sds((B, S, cfg.d_model), self.dtype)
+            else:
+                batch["tokens"] = sds((B, S), jnp.int32)
+            return batch
+        # decode: one new token against a cache of S tokens (S-1 filled)
+        return {"tokens": sds((B, 1), jnp.int32),
+                "cache": self.cache_shapes(B, S)}

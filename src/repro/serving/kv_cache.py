@@ -1,0 +1,109 @@
+"""Paged KV cache pool (vLLM-style block manager) wired to the Pallas
+paged-attention kernels.
+
+This is the block-granular allocator the vLLM baseline uses and the substrate
+ALISE's request-level swapping sits on: pages for a request can be freed,
+offloaded (optionally INT8), and re-materialized without moving other
+requests' pages.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass
+class PagedKVConfig:
+    num_pages: int = 256
+    page_size: int = 16
+    num_kv_heads: int = 8
+    head_dim: int = 64
+    num_layers: int = 4
+    dtype: str = "float32"
+
+
+class PagedKVPool:
+    """Physical page pool + per-request page tables (one layer set each)."""
+
+    def __init__(self, cfg: PagedKVConfig):
+        self.cfg = cfg
+        shape = (cfg.num_layers, cfg.num_pages, cfg.page_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, cfg.dtype)
+        self.v = jnp.zeros(shape, cfg.dtype)
+        self.free_pages: List[int] = list(range(cfg.num_pages))
+        self.page_table: Dict[int, List[int]] = {}       # req -> pages
+        self.lengths: Dict[int, int] = {}
+
+    # ------------------------------------------------------------ allocator
+    def pages_needed(self, tokens: int) -> int:
+        return -(-tokens // self.cfg.page_size)
+
+    def can_allocate(self, tokens: int) -> bool:
+        return len(self.free_pages) >= self.pages_needed(tokens)
+
+    def allocate(self, req_id: int, tokens: int) -> List[int]:
+        n = self.pages_needed(tokens)
+        assert len(self.free_pages) >= n, "page pool exhausted"
+        pages = [self.free_pages.pop() for _ in range(n)]
+        self.page_table[req_id] = pages
+        self.lengths[req_id] = tokens
+        return pages
+
+    def extend(self, req_id: int, new_tokens: int = 1) -> Optional[int]:
+        """Grow a sequence; returns a newly-allocated page id or None."""
+        length = self.lengths[req_id] + new_tokens
+        need = self.pages_needed(length)
+        new_page = None
+        if need > len(self.page_table[req_id]):
+            assert self.free_pages, "page pool exhausted"
+            new_page = self.free_pages.pop()
+            self.page_table[req_id].append(new_page)
+        self.lengths[req_id] = length
+        return new_page
+
+    def free(self, req_id: int) -> None:
+        self.free_pages.extend(self.page_table.pop(req_id, []))
+        self.lengths.pop(req_id, None)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free_pages) / self.cfg.num_pages
+
+    # ------------------------------------------------------------- KV write
+    def write_tokens(self, req_id: int, layer: int, pos: int, k_new, v_new):
+        """Write one token's KV at logical position pos.  k_new: (KVH, d)."""
+        pages = self.page_table[req_id]
+        page = pages[pos // self.cfg.page_size]
+        off = pos % self.cfg.page_size
+        self.k = self.k.at[layer, page, off].set(k_new.astype(self.k.dtype))
+        self.v = self.v.at[layer, page, off].set(v_new.astype(self.v.dtype))
+
+    def block_table_array(self, req_ids: List[int]) -> tuple:
+        """(tables (B, max_pages) int32, lengths (B,) int32) padded."""
+        max_pages = max((len(self.page_table[r]) for r in req_ids), default=1)
+        tables = np.zeros((len(req_ids), max_pages), np.int32)
+        lens = np.zeros((len(req_ids),), np.int32)
+        for i, r in enumerate(req_ids):
+            pages = self.page_table[r]
+            tables[i, :len(pages)] = pages
+            lens[i] = self.lengths[r]
+        return jnp.asarray(tables), jnp.asarray(lens)
+
+    # ----------------------------------------------------------- swap paths
+    def snapshot(self, req_id: int) -> dict:
+        """Copy a request's pages to host (offload unit)."""
+        pages = self.page_table[req_id]
+        idx = jnp.asarray(pages)
+        return {"k": np.asarray(self.k[:, idx]),
+                "v": np.asarray(self.v[:, idx]),
+                "tokens": self.lengths[req_id]}
+
+    def restore(self, req_id: int, snap: dict) -> None:
+        pages = self.allocate(req_id, snap["tokens"])
+        idx = jnp.asarray(pages)
+        self.k = self.k.at[:, idx].set(jnp.asarray(snap["k"]))
+        self.v = self.v.at[:, idx].set(jnp.asarray(snap["v"]))

@@ -1,0 +1,17 @@
+"""Token samplers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
+    if top_k > 0:
+        vals, _ = jax.lax.top_k(logits, top_k)
+        cutoff = vals[..., -1:]
+        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return jax.random.categorical(key, logits / max(temp, 1e-6)).astype(jnp.int32)

@@ -1,0 +1,68 @@
+"""Synthetic LM data pipeline: deterministic, shardable, restart-safe.
+
+Batches are a pure function of (seed, step) so a restarted job resumes the
+exact data order from its checkpoint step — the data-side half of
+fault-tolerant training.  With a mesh, batches are placed sharded over the
+(pod, data) axes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ArchConfig
+
+
+@dataclass
+class DataConfig:
+    batch_size: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    # synthetic structure: orderless-markov bigram-ish stream so loss falls
+    n_patterns: int = 97
+
+
+class SyntheticLM:
+    """Learnable synthetic stream: next token = f(prev token) + noise."""
+
+    def __init__(self, cfg: ArchConfig, data_cfg: DataConfig):
+        self.cfg = cfg
+        self.dc = data_cfg
+        rng = np.random.default_rng(data_cfg.seed)
+        v = cfg.vocab_size
+        self.succ = rng.integers(0, v, size=(v,), dtype=np.int64)
+
+    def batch_at(self, step: int) -> dict:
+        dc = self.dc
+        rng = np.random.default_rng((dc.seed, step))
+        B, S = dc.batch_size, dc.seq_len
+        toks = np.empty((B, S + 1), np.int64)
+        toks[:, 0] = rng.integers(0, self.cfg.vocab_size, B)
+        noise = rng.random((B, S)) < 0.1
+        rand = rng.integers(0, self.cfg.vocab_size, (B, S))
+        for t in range(S):
+            nxt = self.succ[toks[:, t]]
+            toks[:, t + 1] = np.where(noise[:, t], rand[:, t], nxt)
+        return {"tokens": toks[:, :-1].astype(np.int32),
+                "targets": toks[:, 1:].astype(np.int32)}
+
+    def iterate(self, start_step: int = 0,
+                mesh: Optional[Mesh] = None) -> Iterator[dict]:
+        step = start_step
+        sharding = None
+        if mesh is not None:
+            axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            sharding = NamedSharding(mesh, P(axes if axes else None, None))
+        while True:
+            b = self.batch_at(step)
+            if sharding is not None:
+                b = {k: jax.device_put(v, sharding) for k, v in b.items()}
+            else:
+                b = {k: jnp.asarray(v) for k, v in b.items()}
+            yield b
+            step += 1

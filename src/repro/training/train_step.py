@@ -1,0 +1,58 @@
+"""Train/serve step builders shared by the launcher, smoke tests and dry-run."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.collectives import compress_grads_int8
+from repro.models.model import Model
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(model: Model, opt_cfg: Optional[AdamWConfig] = None,
+                    grad_compression: bool = False):
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    state = {"params", "m", "v", "step"}.  Gradients reduce over the data/pod
+    axes implicitly through pjit; optional INT8 compression (error feedback
+    lives in the optimizer moments' normal accumulation) is applied to the
+    gradient tree before the optimizer when ``grad_compression``.
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            loss, metrics = model.loss(params, batch)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state["params"])
+        if grad_compression:
+            grads = compress_grads_int8(grads)
+        opt_state = {"m": state["m"], "v": state["v"], "step": state["step"]}
+        new_params, new_opt, opt_metrics = adamw_update(
+            opt_cfg, state["params"], grads, opt_state)
+        new_state = {"params": new_params, **new_opt}
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, rng) -> Dict[str, Any]:
+    params = model.init(rng)
+    return {"params": params, **init_opt_state(params)}
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: Model):
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return decode_step

@@ -1,0 +1,25 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see 1 CPU device; the
+512-device setting belongs exclusively to launch/dryrun.py."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.request import Request, reset_request_counter
+
+
+@pytest.fixture(autouse=True)
+def _fresh_request_ids():
+    reset_request_counter()
+    yield
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_request(prompt_len=8, arrival=0.0, out_len=10, seed=0, vocab=512):
+    r = np.random.default_rng(seed)
+    return Request(prompt_len=prompt_len, arrival_time=arrival,
+                   true_out_len=out_len,
+                   prompt_tokens=r.integers(2, vocab, prompt_len).tolist())

@@ -1,0 +1,75 @@
+"""Checkpoint/restart + elastic reshard + deterministic data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models.model import Model
+from repro.training.checkpoint import (latest_step, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import init_train_state, make_train_step
+
+
+def _setup():
+    cfg = get_smoke_config("stablelm-3b").scaled(param_dtype="float32")
+    model = Model(cfg, attn_chunk=16, remat=False)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=1e-3)))
+    data = SyntheticLM(cfg, DataConfig(batch_size=4, seq_len=32))
+    return cfg, model, state, step, data
+
+
+def test_checkpoint_restart_bitwise(tmp_path):
+    cfg, model, state, step_fn, data = _setup()
+    # run 6 continuous steps
+    s = state
+    for i in range(6):
+        s, m = step_fn(s, data.batch_at(i))
+    loss_cont = float(m["loss"])
+
+    # run 3, save, restore, run 3 more
+    s2 = state
+    for i in range(3):
+        s2, _ = step_fn(s2, data.batch_at(i))
+    save_checkpoint(tmp_path, s2, 3)
+    assert latest_step(tmp_path) == 3
+    s3, start = restore_checkpoint(tmp_path, state)
+    assert start == 3
+    for i in range(3, 6):
+        s3, m3 = step_fn(s3, data.batch_at(i))
+    assert float(m3["loss"]) == pytest.approx(loss_cont, rel=1e-5)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(s3)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)
+
+
+def test_checkpoint_atomic_overwrite(tmp_path):
+    cfg, model, state, step_fn, data = _setup()
+    save_checkpoint(tmp_path, state, 1)
+    save_checkpoint(tmp_path, state, 2)
+    assert latest_step(tmp_path) == 2
+    restored, step = restore_checkpoint(tmp_path, state, step=1)
+    assert step == 1
+
+
+def test_data_pipeline_deterministic_by_step():
+    cfg = get_smoke_config("stablelm-3b")
+    d1 = SyntheticLM(cfg, DataConfig(batch_size=4, seq_len=32, seed=7))
+    d2 = SyntheticLM(cfg, DataConfig(batch_size=4, seq_len=32, seed=7))
+    b1, b2 = d1.batch_at(17), d2.batch_at(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch_at(18)["tokens"], b1["tokens"])
+
+
+def test_data_pipeline_learnable():
+    """The bigram stream is learnable: targets follow succ table 90%."""
+    cfg = get_smoke_config("stablelm-3b")
+    data = SyntheticLM(cfg, DataConfig(batch_size=8, seq_len=64))
+    b = data.batch_at(0)
+    toks, tgts = b["tokens"], b["targets"]
+    pred = data.succ[toks]
+    agree = (pred == tgts).mean()
+    assert agree > 0.8

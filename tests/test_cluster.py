@@ -1,0 +1,50 @@
+"""Cluster-scale routing, failure replay, elastic scaling."""
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterConfig, ClusterRouter
+from repro.core.simulator import build_predictor
+from repro.core.trace import TraceConfig, generate_trace
+
+
+@pytest.fixture(scope="module")
+def trace_and_pred():
+    tc = TraceConfig(dataset="sharegpt", rate=12.0, duration=40.0, seed=3)
+    return generate_trace(tc), build_predictor("retrieval", tc, 256)
+
+
+def test_all_routers_complete(trace_and_pred):
+    trace, pred = trace_and_pred
+    for router in ("round_robin", "join_shortest_queue", "ewt"):
+        res = ClusterRouter(ClusterConfig(n_replicas=4, router=router),
+                            pred).run(trace)
+        assert res.completed == res.total, router
+        assert res.normalized_latency > 0
+
+
+def test_ewt_routing_not_worse_than_round_robin(trace_and_pred):
+    trace, pred = trace_and_pred
+    rr = ClusterRouter(ClusterConfig(n_replicas=4, router="round_robin"),
+                       pred).run(trace)
+    ewt = ClusterRouter(ClusterConfig(n_replicas=4, router="ewt"),
+                        pred).run(trace)
+    assert ewt.normalized_latency <= rr.normalized_latency * 1.10
+
+
+def test_failure_replay_completes_all(trace_and_pred):
+    trace, pred = trace_and_pred
+    res = ClusterRouter(ClusterConfig(n_replicas=4, router="ewt",
+                                      fail_at=10.0, recover_at=25.0),
+                        pred).run(trace)
+    assert res.replayed > 0          # work was actually in flight
+    assert res.completed == res.total  # nothing lost
+
+
+def test_elastic_scale_up(trace_and_pred):
+    trace, pred = trace_and_pred
+    router = ClusterRouter(ClusterConfig(n_replicas=2, router="ewt"), pred)
+    router.scale_up(2)
+    assert len(router.replicas) == 4
+    res = router.run(trace)
+    assert res.completed == res.total
+    assert sum(1 for n in res.replica_load if n > 0) >= 3

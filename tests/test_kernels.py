@@ -1,0 +1,150 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_prefill import flash_attention, flash_prefill_ref
+from repro.kernels.fused_rmsnorm import fused_rmsnorm_op, rmsnorm_ref
+from repro.kernels.kv_quant import (kv_dequantize_op, kv_quantize_op,
+                                    kv_quantize_ref, paged_attention_q8_op,
+                                    paged_attention_q8_ref)
+from repro.kernels.paged_attention import (paged_attention_ref,
+                                           paged_decode_attention)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return 5e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+# ------------------------------------------------------------ flash prefill
+
+@pytest.mark.parametrize("B,H,KVH,S,d", [
+    (1, 4, 4, 64, 64), (2, 8, 2, 128, 64), (1, 8, 1, 256, 128),
+    (2, 4, 4, 96, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_prefill_sweep(B, H, KVH, S, d, dtype, causal):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, S, d), dtype)
+    k = jax.random.normal(ks[1], (B, KVH, S, d), dtype)
+    v = jax.random.normal(ks[2], (B, KVH, S, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, q_blk=32, kv_blk=32,
+                          interpret=True)
+    ref = flash_prefill_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_flash_prefill_block_shape_independence():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64))
+    k = jax.random.normal(ks[1], (1, 2, 128, 64))
+    v = jax.random.normal(ks[2], (1, 2, 128, 64))
+    outs = [np.asarray(flash_attention(q, k, v, q_blk=b, kv_blk=b2,
+                                       interpret=True))
+            for b, b2 in [(32, 32), (64, 32), (32, 64), (128, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5)
+
+
+# ---------------------------------------------------------- paged attention
+
+@pytest.mark.parametrize("B,H,KVH,d,page,npages,maxp", [
+    (2, 4, 2, 64, 16, 16, 4), (4, 8, 8, 128, 32, 64, 4),
+    (1, 8, 1, 64, 8, 8, 8), (3, 6, 2, 128, 16, 32, 6),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, H, KVH, d, page, npages, maxp, dtype):
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, H, d), dtype)
+    kc = jax.random.normal(ks[1], (npages, page, KVH, d), dtype)
+    vc = jax.random.normal(ks[2], (npages, page, KVH, d), dtype)
+    tables = jax.random.randint(ks[3], (B, maxp), 0, npages)
+    lengths = jax.random.randint(ks[4], (B,), 1, maxp * page + 1)
+    out = paged_decode_attention(q, kc, vc, tables, lengths, interpret=True)
+    ref = paged_attention_ref(q, kc, vc, tables, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))
+
+
+def test_paged_attention_respects_lengths():
+    """Tokens past `lengths` must not influence the result."""
+    ks = jax.random.split(KEY, 4)
+    B, H, KVH, d, page, npg, maxp = 1, 2, 2, 64, 8, 8, 4
+    q = jax.random.normal(ks[0], (B, H, d))
+    kc = jax.random.normal(ks[1], (npg, page, KVH, d))
+    vc = jax.random.normal(ks[2], (npg, page, KVH, d))
+    tables = jnp.arange(maxp, dtype=jnp.int32)[None]
+    lengths = jnp.asarray([11], jnp.int32)
+    out1 = paged_decode_attention(q, kc, vc, tables, lengths, interpret=True)
+    kc2 = kc.at[2:].set(999.0)      # pages beyond token 11
+    vc2 = vc.at[2:].set(999.0)
+    out2 = paged_decode_attention(q, kc2, vc2, tables, lengths, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
+
+
+# ----------------------------------------------------------------- kv quant
+
+@pytest.mark.parametrize("T,d", [(128, 64), (256, 128), (512, 64)])
+def test_kv_quant_roundtrip_sweep(T, d):
+    x = jax.random.normal(KEY, (T, d)) * 4.0
+    q, lam, z = kv_quantize_op(x, interpret=True)
+    qr, lamr, zr = kv_quantize_ref(x)
+    assert np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32)).max() <= 1
+    xh = kv_dequantize_op(q, lam, z, dtype=jnp.float32, interpret=True)
+    rel = np.abs(np.asarray(xh) - np.asarray(x)).max() / np.abs(np.asarray(x)).max()
+    assert rel < 0.02
+
+
+def test_paged_q8_matches_oracle():
+    ks = jax.random.split(KEY, 5)
+    B, H, KVH, d, page, npg, maxp = 2, 8, 2, 64, 16, 32, 4
+    q = jax.random.normal(ks[0], (B, H, d))
+    k = jax.random.normal(ks[1], (npg, page, KVH, d))
+    v = jax.random.normal(ks[2], (npg, page, KVH, d))
+    kq, klam, kz = kv_quantize_ref(k)
+    vq, vlam, vz = kv_quantize_ref(v)
+    tables = jax.random.randint(ks[3], (B, maxp), 0, npg)
+    lengths = jax.random.randint(ks[4], (B,), 1, maxp * page + 1)
+    out = paged_attention_q8_op(q, kq, klam, kz, vq, vlam, vz, tables,
+                                lengths, interpret=True)
+    ref = paged_attention_q8_ref(q, kq, klam, kz, vq, vlam, vz, tables,
+                                 lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_paged_q8_close_to_fp_attention():
+    """INT8 KV attention stays near the fp oracle (quality bound)."""
+    ks = jax.random.split(KEY, 5)
+    B, H, KVH, d, page, npg, maxp = 2, 4, 2, 64, 16, 32, 4
+    q = jax.random.normal(ks[0], (B, H, d))
+    k = jax.random.normal(ks[1], (npg, page, KVH, d))
+    v = jax.random.normal(ks[2], (npg, page, KVH, d))
+    kq, klam, kz = kv_quantize_ref(k)
+    vq, vlam, vz = kv_quantize_ref(v)
+    tables = jax.random.randint(ks[3], (B, maxp), 0, npg)
+    lengths = jnp.full((B,), maxp * page, jnp.int32)
+    q8 = paged_attention_q8_op(q, kq, klam, kz, vq, vlam, vz, tables,
+                               lengths, interpret=True)
+    fp = paged_attention_ref(q, k, v, tables, lengths)
+    assert np.abs(np.asarray(q8) - np.asarray(fp)).max() < 0.05
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+@pytest.mark.parametrize("T,d", [(128, 256), (256, 512), (64, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(T, d, dtype):
+    x = jax.random.normal(KEY, (T, d), dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), (d,), jnp.float32)
+    out = fused_rmsnorm_op(x, s, interpret=True)
+    ref = rmsnorm_ref(x, s)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=_tol(dtype), rtol=_tol(dtype))

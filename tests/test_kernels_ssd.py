@@ -1,0 +1,95 @@
+"""SSD chunk kernel sweeps vs oracles, and fused path vs the model's jnp SSD."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ssd_scan import ssd_chunk, ssd_chunk_ref, ssd_chunked_fused
+from repro.models.mamba2 import ssd_chunked, ssd_decode_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _inputs(B, C, Q, H, P, N, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 4)
+    xbar = jax.random.normal(ks[0], (B, C, Q, H, P), dtype)
+    dA = (-jnp.abs(jax.random.normal(ks[1], (B, C, Q, H))) * 0.1).astype(dtype)
+    Bc = jax.random.normal(ks[2], (B, C, Q, N), dtype)
+    Cc = jax.random.normal(ks[3], (B, C, Q, N), dtype)
+    return xbar, dA, Bc, Cc
+
+
+@pytest.mark.parametrize("B,C,Q,H,P,N", [
+    (1, 2, 16, 2, 16, 16), (2, 4, 32, 4, 16, 16), (1, 2, 64, 2, 32, 8),
+])
+def test_ssd_chunk_sweep(B, C, Q, H, P, N):
+    xbar, dA, Bc, Cc = _inputs(B, C, Q, H, P, N)
+    y, st, dk = ssd_chunk(xbar, dA, Bc, Cc, interpret=True)
+    yr, str_, dkr = ssd_chunk_ref(xbar, dA, Bc, Cc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(str_),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dkr), rtol=1e-5)
+
+
+def test_fused_matches_model_ssd():
+    B, S, H, P, N, Q = 2, 128, 4, 16, 16, 32
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(9), (H,)) * 0.2)
+    Bm = jax.random.normal(ks[2], (B, S, N))
+    Cm = jax.random.normal(ks[3], (B, S, N))
+    y1, s1 = ssd_chunked_fused(x, dt, A, Bm, Cm, chunk=Q, interpret=True)
+    y2, s2 = ssd_chunked(x, dt, A, Bm, Cm, chunk=Q)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_initial_state_continuation():
+    """Splitting a sequence in two with state carry == processing it whole."""
+    B, S, H, P, N, Q = 1, 128, 2, 16, 8, 32
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(9), (H,)) * 0.2)
+    Bm = jax.random.normal(ks[2], (B, S, N))
+    Cm = jax.random.normal(ks[3], (B, S, N))
+    y_full, s_full = ssd_chunked_fused(x, dt, A, Bm, Cm, chunk=Q,
+                                       interpret=True)
+    half = S // 2
+    y1, s1 = ssd_chunked_fused(x[:, :half], dt[:, :half], A, Bm[:, :half],
+                               Cm[:, :half], chunk=Q, interpret=True)
+    y2, s2 = ssd_chunked_fused(x[:, half:], dt[:, half:], A, Bm[:, half:],
+                               Cm[:, half:], chunk=Q, interpret=True,
+                               initial_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_matches_pure_recurrence():
+    """SSD chunked == token-by-token recurrent scan (the decode path)."""
+    B, S, H, P, N = 1, 32, 2, 8, 8
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(9), (H,)) * 0.2)
+    Bm = jax.random.normal(ks[2], (B, S, N))
+    Cm = jax.random.normal(ks[3], (B, S, N))
+    y_chunk, s_chunk = ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    state = jnp.zeros((B, H, P, N))
+    ys = []
+    for t in range(S):
+        y_t, state = ssd_decode_step(state, x[:, t], dt[:, t], A,
+                                     Bm[:, t], Cm[:, t])
+        ys.append(y_t)
+    y_rec = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_rec),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(state),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,38 @@
+"""Eq. 3-5 latency model fitting."""
+import numpy as np
+import pytest
+
+from repro.core.latency_model import LatencyModel, calibrated
+
+
+def test_fit_recovers_coefficients():
+    true = LatencyModel(t0=1e-4, alpha=2e-6, beta=0.03)
+    rng = np.random.default_rng(0)
+    prefills = [(s, true.prefill_time(s) * (1 + 0.01 * rng.standard_normal()))
+                for s in [64, 128, 256, 512, 1024, 2048]]
+    decodes = [(s, true.decode_iter_time(s) * (1 + 0.01 * rng.standard_normal()))
+               for s in [64, 128, 256, 512, 1024, 2048, 4096]]
+    fit = LatencyModel.fit(prefills, decodes)
+    assert fit.t0 == pytest.approx(true.t0, rel=0.05)
+    assert fit.alpha == pytest.approx(true.alpha, rel=0.2)
+    assert fit.beta == pytest.approx(true.beta, rel=0.05)
+    assert fit.fit_error(prefills, decodes) < 0.05
+
+
+def test_total_time_decomposition():
+    m = LatencyModel(t0=1e-4, alpha=1e-6, beta=0.01)
+    assert m.total_time(100, 50) == pytest.approx(
+        m.prefill_time(100) + m.decode_time(100, 50))
+
+
+def test_remaining_time_includes_prefill_when_cold():
+    m = LatencyModel(t0=1e-4, alpha=1e-6, beta=0.01)
+    cold = m.remaining_time(100, 0, 50, prefilled=False)
+    warm = m.remaining_time(100, 0, 50, prefilled=True)
+    assert cold - warm == pytest.approx(m.prefill_time(100))
+
+
+def test_calibrated_scales_with_model_size():
+    small, big = calibrated("opt-2.7b"), calibrated("opt-13b")
+    assert big.beta > small.beta
+    assert big.t0 > small.t0

@@ -1,0 +1,118 @@
+"""TieredKVManager unit + hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.memory_manager import MemoryConfig, TieredKVManager
+from repro.core.request import KVLocation, Request
+
+BPT = 100
+
+
+def mk_mem(hbm_tokens=100, quant=True):
+    return TieredKVManager(MemoryConfig(
+        hbm_bytes=hbm_tokens * BPT, dram_bytes=1e9, bytes_per_token_fp=BPT,
+        quantize_offload=quant, admit_headroom=0.0))
+
+
+def mk_req(prompt=10, out=10):
+    return Request(prompt_len=prompt, arrival_time=0.0, true_out_len=out)
+
+
+def test_admit_grow_free_accounting():
+    mem = mk_mem(100)
+    r = mk_req(prompt=10)
+    assert mem.can_admit(r)
+    mem.admit(r)
+    assert mem.used_hbm == 11 * BPT          # prompt + 1 headroom
+    r.generated = 1
+    assert mem.grow(r)
+    mem.free(r)
+    assert mem.used_hbm == 0
+
+
+def test_offload_quantizes_to_half_bytes():
+    mem = mk_mem(100, quant=True)
+    r = mk_req(prompt=20)
+    mem.admit(r)
+    op = mem.offload(r, now=0.0)
+    assert r.kv_location == KVLocation.DRAM
+    assert r.kv_quantized
+    assert op.bytes == pytest.approx(20 * BPT * 0.5)
+    assert mem.used_hbm == 0
+    op2 = mem.upload(r, now=1.0)
+    assert r.kv_location == KVLocation.HBM
+    assert not r.kv_quantized
+    assert mem.used_dram == 0
+
+
+def test_swap_ops_serialize_on_dma_queue():
+    mem = mk_mem(1000)
+    a, b = mk_req(prompt=100), mk_req(prompt=100)
+    mem.admit(a)
+    mem.admit(b)
+    op1 = mem.offload(a, now=0.0)
+    op2 = mem.offload(b, now=0.0)
+    assert op2.done_time >= op1.done_time    # single swap engine
+
+
+def test_cold_tier_roundtrip():
+    mem = TieredKVManager(MemoryConfig(
+        hbm_bytes=100 * BPT, bytes_per_token_fp=BPT,
+        quantize_cold_hbm=True, admit_headroom=0.0))
+    r = mk_req(prompt=20)
+    mem.admit(r)
+    before = mem.used_hbm
+    mem.quantize_cold(r, 0.0)
+    assert r.kv_location == KVLocation.HBM_Q8
+    assert mem.used_hbm < before             # int8 tier frees HBM in place
+    mem.dequantize_cold(r, 0.0)
+    assert r.kv_location == KVLocation.HBM
+
+
+def test_reserve_max_policy_reserves_full_window():
+    mem = TieredKVManager(MemoryConfig(
+        hbm_bytes=10_000 * BPT, bytes_per_token_fp=BPT,
+        reserve_policy="reserve_max", reserve_max_tokens=512,
+        admit_headroom=0.0))
+    r = mk_req(prompt=10)
+    mem.admit(r)
+    assert mem.used_hbm == (10 + 512) * BPT  # ORCA-style reservation
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 40),                 # prompt len
+                          st.sampled_from(["admit", "offload", "upload",
+                                           "drop", "free"])),
+                min_size=1, max_size=40))
+def test_property_accounting_never_leaks(ops):
+    """Any op sequence keeps byte accounting exact and non-negative."""
+    mem = mk_mem(hbm_tokens=100_000)
+    reqs = {}
+    for i, (plen, op) in enumerate(ops):
+        if op == "admit":
+            r = Request(prompt_len=plen, arrival_time=0.0, true_out_len=5)
+            reqs[r.req_id] = r
+            if mem.can_admit(r):
+                mem.admit(r)
+        else:
+            live = [r for r in reqs.values()
+                    if mem.location_of(r) != KVLocation.NONE]
+            if not live:
+                continue
+            r = live[0]
+            if op == "offload" and mem.resident_hbm(r):
+                mem.offload(r, float(i))
+            elif op == "upload" and r.kv_location == KVLocation.DRAM:
+                mem.upload(r, float(i))
+            elif op == "drop":
+                mem.drop(r)
+            elif op == "free":
+                mem.free(r)
+                reqs.pop(r.req_id)
+        mem.check_invariants()
+        assert mem.used_hbm >= -1e-6 and mem.used_dram >= -1e-6
+    for r in list(reqs.values()):
+        mem.free(r)
+    assert mem.used_hbm == pytest.approx(0.0, abs=1e-6)
+    assert mem.used_dram == pytest.approx(0.0, abs=1e-6)

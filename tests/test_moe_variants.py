@@ -1,0 +1,77 @@
+"""Grouped / padded-expert MoE variants: math consistency with the baseline.
+
+These options exist for sharding performance (EXPERIMENTS.md §Perf B/C);
+they must not change the model's semantics beyond capacity-drop boundaries.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import layers as L
+from repro.models.model import Model
+
+
+def _moe_cfg(E=4, K=2, cf=None):
+    cfg = get_smoke_config("dbrx-132b")
+    return dataclasses.replace(cfg, num_experts=E, top_k=K,
+                               capacity_factor=cf if cf else float(E))
+
+
+def test_grouped_equals_global_when_dropless():
+    """With dropless capacity, grouping must not change the output."""
+    cfg = _moe_cfg()
+    rng = jax.random.PRNGKey(0)
+    p = L.init_moe(cfg, rng, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+    y1, aux1 = L.apply_moe(cfg, p, x, groups=1)
+    y2, aux2 = L.apply_moe(cfg, p, x, groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+    assert float(aux1) == pytest.approx(float(aux2), rel=1e-5)
+
+
+def test_padded_experts_never_routed():
+    """Dead (padded) expert slots must receive zero routing weight."""
+    cfg = _moe_cfg(E=3, K=2)
+    p = L.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32, pad_experts_to=8)
+    assert p["wi"].shape[0] == 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    gate_w, gate_idx, _, E_alloc = L._route(cfg, p, x.reshape(-1, cfg.d_model))
+    assert E_alloc == 8
+    assert int(jnp.max(gate_idx)) < cfg.num_experts
+
+
+def test_padded_equals_unpadded_math():
+    """Padding the allocation must not change the routed computation."""
+    cfg = _moe_cfg(E=4, K=2)
+    rng = jax.random.PRNGKey(0)
+    p = L.init_moe(cfg, rng, jnp.float32)
+    p_pad = {
+        "router": jnp.pad(p["router"], [(0, 0), (0, 4)], constant_values=-1e9),
+        "wi": jnp.pad(p["wi"], [(0, 4), (0, 0), (0, 0)]),
+        "wg": jnp.pad(p["wg"], [(0, 4), (0, 0), (0, 0)]),
+        "wo": jnp.pad(p["wo"], [(0, 4), (0, 0), (0, 0)]),
+    }
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y1, _ = L.apply_moe(cfg, p, x)
+    y2, _ = L.apply_moe(cfg, p_pad, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_model_trains_without_nans():
+    cfg = get_smoke_config("granite-moe-3b-a800m")
+    model = Model(cfg, attn_chunk=16, remat=False, moe_groups=2,
+                  pad_experts_to=8)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 32), jnp.int32),
+             "targets": jnp.zeros((2, 32), jnp.int32)}
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()

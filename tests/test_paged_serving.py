@@ -1,0 +1,83 @@
+"""Integration: PagedKVPool + Pallas paged attention = exact decode attention.
+
+This validates the vLLM-baseline substrate end-to-end: paged allocation,
+per-token KV writes, block-table construction, attention through the kernel,
+request-level snapshot/restore (the swap unit ALISE moves between tiers).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention import paged_decode_attention
+from repro.serving.kv_cache import PagedKVConfig, PagedKVPool
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _fill(pool, req_id, n_tokens, layer=0, seed=1):
+    rng = np.random.default_rng(seed + req_id)
+    ks = rng.standard_normal((n_tokens, pool.cfg.num_kv_heads,
+                              pool.cfg.head_dim)).astype(np.float32)
+    vs = rng.standard_normal((n_tokens, pool.cfg.num_kv_heads,
+                              pool.cfg.head_dim)).astype(np.float32)
+    pool.allocate(req_id, n_tokens)
+    for t in range(n_tokens):
+        pool.write_tokens(req_id, layer, t, jnp.asarray(ks[t]),
+                          jnp.asarray(vs[t]))
+    return ks, vs
+
+
+def test_paged_pool_attention_matches_dense():
+    cfg = PagedKVConfig(num_pages=32, page_size=8, num_kv_heads=2,
+                        head_dim=64, num_layers=1)
+    pool = PagedKVPool(cfg)
+    lengths = [13, 21, 5]
+    dense_k, dense_v = {}, {}
+    for rid, n in enumerate(lengths):
+        dense_k[rid], dense_v[rid] = _fill(pool, rid, n)
+
+    B, H = len(lengths), 4
+    q = jax.random.normal(KEY, (B, H, cfg.head_dim))
+    tables, lens = pool.block_table_array(list(range(B)))
+    out = paged_decode_attention(q, pool.k[0], pool.v[0], tables, lens,
+                                 interpret=True)
+
+    # dense reference per request
+    for rid, n in enumerate(lengths):
+        k = jnp.asarray(dense_k[rid])[None]          # (1, n, KVH, d)
+        v = jnp.asarray(dense_v[rid])[None]
+        G = H // cfg.num_kv_heads
+        qg = q[rid].reshape(cfg.num_kv_heads, G, cfg.head_dim)
+        s = jnp.einsum("kgd,tkd->kgt", qg, k[0]) / (cfg.head_dim ** 0.5)
+        w = jax.nn.softmax(s, axis=-1)
+        ref = jnp.einsum("kgt,tkd->kgd", w, v[0]).reshape(H, cfg.head_dim)
+        np.testing.assert_allclose(np.asarray(out[rid]), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_snapshot_restore_roundtrip_exact():
+    cfg = PagedKVConfig(num_pages=16, page_size=8, num_kv_heads=2,
+                        head_dim=32, num_layers=2)
+    pool = PagedKVPool(cfg)
+    _fill(pool, 0, 19)
+    before = pool.snapshot(0)
+    pool.free(0)
+    assert pool.utilization() == 0.0
+    pool.restore(0, before)
+    after = pool.snapshot(0)
+    np.testing.assert_array_equal(before["k"], after["k"])
+    np.testing.assert_array_equal(before["v"], after["v"])
+    assert before["tokens"] == after["tokens"]
+
+
+def test_extend_allocates_new_page_on_boundary():
+    cfg = PagedKVConfig(num_pages=8, page_size=4, num_kv_heads=1,
+                        head_dim=8, num_layers=1)
+    pool = PagedKVPool(cfg)
+    pool.allocate(0, 4)                       # exactly one page
+    assert len(pool.page_table[0]) == 1
+    new_page = pool.extend(0)
+    assert new_page is not None               # crossed the boundary
+    assert len(pool.page_table[0]) == 2
+    assert pool.extend(0) is None             # still inside page 2

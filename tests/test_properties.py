@@ -1,0 +1,99 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.latency_model import LatencyModel
+from repro.core.memory_manager import MemoryConfig, TieredKVManager
+from repro.core.predictor import HashedNgramEncoder, OraclePredictor
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.simulator import SimConfig, ServingSimulator
+from repro.core.trace import SyntheticTrace, TraceConfig
+from repro.serving.kv_cache import PagedKVConfig, PagedKVPool
+
+LM = LatencyModel(t0=1e-4, alpha=1e-6, beta=0.01)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 400),     # out_len
+                          st.floats(0.0, 20.0)),   # arrival
+                min_size=1, max_size=30),
+       st.integers(0, 1000))
+def test_no_starvation_everything_finishes(jobs, seed):
+    """Aging guarantees every job eventually completes under ALISE."""
+    reqs = [Request(prompt_len=8, arrival_time=a, true_out_len=o,
+                    prompt_tokens=list(range(8)))
+            for o, a in jobs]
+    trace = SyntheticTrace(requests=reqs, cfg=TraceConfig(rate=1.0,
+                                                          duration=25.0))
+    sim = ServingSimulator(
+        SimConfig(strategy="alise", predictor="oracle", hbm_bytes=2e9,
+                  max_batch=8, drain_timeout=1e5, seed=seed), trace)
+    res = sim.run()
+    assert res.completed == len(reqs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(1, 300), min_size=2, max_size=20))
+def test_ewt_monotone_in_priority_order(outs):
+    """EWT is non-decreasing along the scheduler's candidate order."""
+    mem = TieredKVManager(MemoryConfig(hbm_bytes=1e9, bytes_per_token_fp=100))
+    sched = Scheduler(SchedulerConfig(strategy="alise"), OraclePredictor(),
+                      LM, mem)
+    reqs = [Request(prompt_len=8, arrival_time=0.0, true_out_len=o,
+                    prompt_tokens=list(range(8))) for o in outs]
+    for r in reqs:
+        sched.submit(r, 0.0)
+    rem = {r.req_id: sched._remaining(r) for r in reqs}
+    ordered = sorted(reqs, key=lambda r: (r.priority_level, rem[r.req_id],
+                                          r.arrival_time))
+    table = sched._ewt_table(ordered, rem, 0.0)
+    ahead = [table[r.req_id] for r in ordered if r.priority_level == 0]
+    assert all(a <= b + 1e-9 for a, b in zip(ahead, ahead[1:]))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 64),
+                          st.booleans()), min_size=1, max_size=50),
+       st.integers(0, 100))
+def test_paged_pool_conservation(ops, seed):
+    """Allocate/extend/free never lose or duplicate pages."""
+    cfg = PagedKVConfig(num_pages=64, page_size=8, num_layers=1,
+                        num_kv_heads=1, head_dim=8)
+    pool = PagedKVPool(cfg)
+    live = {}
+    rid = 0
+    for tokens, do_free in ops:
+        if do_free and live:
+            r = next(iter(live))
+            pool.free(r)
+            live.pop(r)
+        elif pool.can_allocate(tokens):
+            pool.allocate(rid, tokens)
+            live[rid] = tokens
+            rid += 1
+        used = sum(len(p) for p in pool.page_table.values())
+        assert used + len(pool.free_pages) == cfg.num_pages
+        assert len(set(pool.free_pages)) == len(pool.free_pages)
+        allocated = [p for ps in pool.page_table.values() for p in ps]
+        assert len(set(allocated)) == len(allocated)
+        assert not (set(allocated) & set(pool.free_pages))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 511), min_size=1, max_size=64),
+       st.lists(st.integers(0, 511), min_size=1, max_size=64))
+def test_encoder_similarity_bounds(a, b):
+    enc = HashedNgramEncoder(64)
+    va, vb = enc.encode(a), enc.encode(b)
+    sim = float(va @ vb)
+    assert -1.0001 <= sim <= 1.0001
+    assert enc.encode(a) @ va == pytest.approx(1.0, abs=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 60), st.integers(1, 400))
+def test_latency_model_monotone(s, n):
+    assert LM.total_time(s + 1, n) >= LM.total_time(s, n)
+    assert LM.total_time(s, n + 1) >= LM.total_time(s, n)

@@ -1,0 +1,49 @@
+"""Eq. 8 quantization tests (jnp + numpy twins) + hypothesis bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (dequantize, dequantize_np,
+                                     kv_bytes_per_token, quantize,
+                                     quantize_np, roundtrip_rel_error)
+
+
+def test_roundtrip_int8_error_small():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 128)) * 5.0
+    assert roundtrip_rel_error(x, bits=8) < 0.01
+
+
+def test_channelwise_scales_shape():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16, 32))
+    qt = quantize(x, bits=8, axis=-1)
+    assert qt.scale.shape == (1, 1, 32)
+    assert qt.q.dtype == jnp.int8
+
+
+def test_numpy_twin_matches_jnp():
+    x = np.random.default_rng(0).standard_normal((32, 64)).astype(np.float32)
+    q8, lam, z = quantize_np(x)
+    qt = quantize(jnp.asarray(x))
+    assert np.abs(q8.astype(np.int32)
+                  - np.asarray(qt.q, np.int32)).max() <= 1
+    xh_np = dequantize_np(q8, lam, z)
+    xh_j = np.asarray(dequantize(qt, jnp.float32))
+    assert np.abs(xh_np - xh_j).max() < 1e-2
+
+
+def test_kv_bytes_per_token_halves_when_quantized():
+    full = kv_bytes_per_token(40, 8, 128, quantized=False)
+    q = kv_bytes_per_token(40, 8, 128, quantized=True)
+    assert q * 2 == full
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+def test_property_roundtrip_bounded_by_step(seed, scale):
+    """|x - dequant(quant(x))| <= lam/2 + eps, per channel."""
+    x = np.random.default_rng(seed).standard_normal((17, 9)) * scale
+    q8, lam, z = quantize_np(x.astype(np.float32))
+    xh = dequantize_np(q8, lam, z)
+    assert (np.abs(xh - x) <= lam / 2 + 1e-4 * scale + 1e-6).all()

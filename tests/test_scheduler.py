@@ -1,0 +1,151 @@
+"""Unit tests for the ALISE scheduler (priority, aging, demotion, Alg. 2)."""
+import numpy as np
+import pytest
+
+from repro.core.latency_model import LatencyModel
+from repro.core.memory_manager import MemoryConfig, TieredKVManager
+from repro.core.predictor import OraclePredictor
+from repro.core.request import KVLocation, Request, RequestState
+from repro.core.scheduler import Scheduler, SchedulerConfig
+
+LM = LatencyModel(t0=1e-4, alpha=1e-6, beta=0.01)
+
+
+def mk_sched(strategy="alise", hbm_tokens=1000, max_batch=4, bpt=100,
+             age_threshold=5.0, max_resident=None):
+    mem = TieredKVManager(MemoryConfig(hbm_bytes=hbm_tokens * bpt,
+                                       bytes_per_token_fp=bpt,
+                                       admit_headroom=0.0))
+    cfg = SchedulerConfig(max_batch=max_batch, strategy=strategy,
+                          age_threshold=age_threshold,
+                          base_quantum=0.1, quantum_growth=4.0,
+                          max_resident=max_resident)
+    return Scheduler(cfg, OraclePredictor(), LM, mem), mem
+
+
+def mk_req(out_len, prompt=8, arrival=0.0):
+    return Request(prompt_len=prompt, arrival_time=arrival,
+                   true_out_len=out_len, prompt_tokens=list(range(prompt)))
+
+
+def test_srtf_orders_short_first():
+    sched, mem = mk_sched()
+    long_r, short_r = mk_req(500), mk_req(5)
+    sched.submit(long_r, 0.0)
+    sched.submit(short_r, 0.0)
+    plan = sched.plan(0.0)
+    assert plan.prefill[0].req_id == short_r.req_id
+
+
+def test_fcfs_orders_by_arrival():
+    sched, mem = mk_sched(strategy="vllm")
+    long_r, short_r = mk_req(500, arrival=0.0), mk_req(5, arrival=1.0)
+    sched.submit(long_r, 0.0)
+    sched.submit(short_r, 1.0)
+    plan = sched.plan(1.0)
+    assert plan.prefill[0].req_id == long_r.req_id
+
+
+def test_priority_levels_band_by_remaining_time():
+    sched, _ = mk_sched()
+    short_r, long_r = mk_req(3), mk_req(2000)
+    sched.submit(short_r, 0.0)
+    sched.submit(long_r, 0.0)
+    assert short_r.priority_level < long_r.priority_level
+
+
+def test_virtual_aging_promotes():
+    sched, _ = mk_sched(age_threshold=5.0)
+    r = mk_req(2000)
+    sched.submit(r, 0.0)
+    lvl0 = r.priority_level
+    assert lvl0 > 0
+    sched.plan(5.1)
+    assert r.priority_level == lvl0 - 1
+    sched.plan(5.1 + 5.0 * lvl0)
+    assert r.priority_level == 0
+
+
+def test_misprediction_demotes_and_doubles():
+    sched, mem = mk_sched()
+    r = mk_req(out_len=100)
+    sched.submit(r, 0.0)
+    r.predicted_len = 4
+    mem.admit(r)
+    r.generated = 4
+    lvl = r.priority_level
+    sched.note_generated(r, 1.0)
+    assert r.predicted_len == 8
+    assert r.priority_level == min(lvl + 1, sched.cfg.n_queues - 1)
+    assert r.demotions == 1
+
+
+def test_alg2_evicts_highest_ewt_for_short_job():
+    sched, mem = mk_sched(hbm_tokens=50, max_batch=2, max_resident=2)
+    a, b = mk_req(500, prompt=20), mk_req(400, prompt=20)
+    for r in (a, b):
+        sched.submit(r, 0.0)
+        mem.admit(r)
+        r.state = RequestState.RUNNING
+    short = mk_req(2, prompt=4)
+    sched.submit(short, 0.0)
+    plan = sched.plan(0.0)
+    # the shorter job must displace a long resident (job limit M = 2)
+    assert [r.req_id for r in plan.prefill] == [short.req_id]
+    assert len(plan.swap_out) >= 1
+    evicted = plan.swap_out[0]
+    assert evicted.req_id in (a.req_id, b.req_id)
+
+
+def test_defer_strategy_never_evicts():
+    sched, mem = mk_sched(strategy="alise-defer", hbm_tokens=50,
+                          max_batch=2, max_resident=2)
+    a, b = mk_req(500, prompt=20), mk_req(400, prompt=20)
+    for r in (a, b):
+        sched.submit(r, 0.0)
+        mem.admit(r)
+        r.state = RequestState.RUNNING
+    short = mk_req(2, prompt=4)
+    sched.submit(short, 0.0)
+    plan = sched.plan(0.0)
+    assert not plan.swap_out and not plan.drop
+    assert short not in plan.prefill
+
+
+def test_recompute_strategy_drops_instead_of_swapping():
+    sched, mem = mk_sched(strategy="alise-recompute", hbm_tokens=50,
+                          max_batch=2, max_resident=2)
+    a, b = mk_req(500, prompt=20), mk_req(400, prompt=20)
+    for r in (a, b):
+        sched.submit(r, 0.0)
+        mem.admit(r)
+        r.state = RequestState.RUNNING
+    short = mk_req(2, prompt=4)
+    sched.submit(short, 0.0)
+    plan = sched.plan(0.0)
+    assert plan.drop and not plan.swap_out
+
+
+def test_ewt_eq7_promote_time_bound():
+    sched, _ = mk_sched(age_threshold=10.0)
+    jobs = [mk_req(2000), mk_req(1500), mk_req(1000)]
+    for j in jobs:
+        sched.submit(j, 0.0)
+    ordered = sorted(jobs, key=lambda r: (r.priority_level,
+                                          sched._remaining(r)))
+    last = ordered[-1]
+    ewt = sched.ewt(last, ordered, now=0.0)
+    ahead = sum(sched._remaining(r) for r in ordered[:-1])
+    promote = last.priority_level * 10.0
+    assert ewt == pytest.approx(min(ahead, promote), rel=1e-6)
+
+
+def test_backfill_is_work_conserving():
+    sched, mem = mk_sched(max_batch=3)
+    runners = [mk_req(50), mk_req(60), mk_req(70)]
+    for r in runners:
+        sched.submit(r, 0.0)
+        mem.admit(r)
+        r.state = RequestState.RUNNING
+    plan = sched.plan(0.0)
+    assert len(plan.run) == 3

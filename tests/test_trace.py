@@ -1,0 +1,49 @@
+"""Synthetic trace generator properties."""
+import numpy as np
+import pytest
+
+from repro.core.trace import TraceConfig, generate_trace, trace_stats
+
+
+def test_poisson_rate_approximate():
+    tr = generate_trace(TraceConfig(dataset="alpaca", rate=10.0,
+                                    duration=300.0, seed=0))
+    assert len(tr.requests) == pytest.approx(3000, rel=0.1)
+
+
+def test_sharegpt_longer_and_heavier_tailed_than_alpaca():
+    a = trace_stats(generate_trace(TraceConfig("alpaca", 10, 300, seed=1)))
+    s = trace_stats(generate_trace(TraceConfig("sharegpt", 10, 300, seed=1)))
+    assert s["input_mean"] > a["input_mean"]
+    assert s["output_mean"] > a["output_mean"]
+    assert s["output_p99"] > a["output_p99"]
+
+
+def test_cluster_semantics_shared_across_seeds():
+    """Two traces of the same dataset share cluster -> length mapping."""
+    t1 = generate_trace(TraceConfig("sharegpt", 10, 1e9, max_requests=200,
+                                    seed=1))
+    t2 = generate_trace(TraceConfig("sharegpt", 10, 1e9, max_requests=200,
+                                    seed=2))
+
+    def cluster_of(r):
+        sig = [t for t in r.prompt_tokens if t < 4096]
+        return int(np.bincount([t // 64 for t in sig]).argmax())
+
+    med1, med2 = {}, {}
+    for tr, med in ((t1, med1), (t2, med2)):
+        for r in tr.requests:
+            med.setdefault(cluster_of(r), []).append(r.true_out_len)
+    common = set(med1) & set(med2)
+    assert len(common) >= 10
+    m1 = np.array([np.median(med1[c]) for c in sorted(common)])
+    m2 = np.array([np.median(med2[c]) for c in sorted(common)])
+    corr = np.corrcoef(np.log(m1), np.log(m2))[0, 1]
+    assert corr > 0.8
+
+
+def test_arrivals_sorted_and_positive():
+    tr = generate_trace(TraceConfig("alpaca", 5, 60, seed=3))
+    times = [r.arrival_time for r in tr.requests]
+    assert all(t >= 0 for t in times)
+    assert times == sorted(times)
