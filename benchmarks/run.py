@@ -5,7 +5,7 @@
 Emits ``name,us_per_call,derived`` CSV on stdout; commentary on stderr.
 Sections: e2e (Fig. 2+6), memory (Fig. 8), predictor (Table 2),
 latency (Fig. 9), models (Table 3), kernels (§3.3), roofline (§g),
-cluster (beyond-paper).
+cluster (beyond-paper), gateway (online serving front-end, beyond-paper).
 """
 from __future__ import annotations
 
@@ -22,9 +22,10 @@ def main() -> None:
                     help="comma-separated subset of sections")
     args = ap.parse_args()
 
-    from benchmarks import (bench_cluster, bench_e2e, bench_hol,
-                            bench_kernels, bench_latency, bench_memory,
-                            bench_models, bench_predictor, bench_roofline)
+    from benchmarks import (bench_cluster, bench_e2e, bench_gateway,
+                            bench_hol, bench_kernels, bench_latency,
+                            bench_memory, bench_models, bench_predictor,
+                            bench_roofline)
     sections = {
         "hol": bench_hol.run,
         "e2e": bench_e2e.run,
@@ -35,6 +36,7 @@ def main() -> None:
         "kernels": bench_kernels.run,
         "roofline": bench_roofline.run,
         "cluster": bench_cluster.run,
+        "gateway": bench_gateway.run,
     }
     chosen = (args.only.split(",") if args.only else list(sections))
     print("name,us_per_call,derived")

@@ -48,6 +48,22 @@ class ClusterConfig:
     seed: int = 0
 
 
+def pick_replica(policy: str, candidates: list, rr_counter: int = 0,
+                 queue_len=None, backlog=None):
+    """Front-end placement policy shared by the simulated ClusterRouter and
+    the online serving gateway (``serving/gateway/router.py``).
+
+    ``ewt`` is speculative shortest-queue routing: place on the replica with
+    the minimum predicted completion time (cluster-level Eq. 6-7).
+    """
+    assert candidates, "no live replicas"
+    if policy == "round_robin":
+        return candidates[rr_counter % len(candidates)]
+    if policy == "join_shortest_queue":
+        return min(candidates, key=queue_len)
+    return min(candidates, key=backlog)   # "ewt"
+
+
 class Replica:
     """One model replica = one ServingSimulator advanced in lockstep."""
 
@@ -70,8 +86,7 @@ class Replica:
 
     def predicted_backlog(self) -> float:
         """Sum of predicted remaining times of everything on this replica."""
-        s = self.sim.sched
-        return sum(s._remaining(r) for r in s.live.values())
+        return self.sim.sched.predicted_backlog()
 
     def queue_len(self) -> int:
         return len(self.sim.sched.live)
@@ -177,14 +192,11 @@ class ClusterRouter:
     # -------------------------------------------------------------- routing
     def route(self, req: Request, now: float) -> Replica:
         alive = [r for r in self.replicas if r.alive]
-        assert alive, "no live replicas"
+        rep = pick_replica(self.cfg.router, alive, rr_counter=self._rr,
+                           queue_len=lambda r: r.queue_len(),
+                           backlog=lambda r: r.predicted_backlog())
         if self.cfg.router == "round_robin":
-            rep = alive[self._rr % len(alive)]
             self._rr += 1
-        elif self.cfg.router == "join_shortest_queue":
-            rep = min(alive, key=lambda r: r.queue_len())
-        else:  # ewt: minimum predicted completion time (speculative routing)
-            rep = min(alive, key=lambda r: r.predicted_backlog())
         self.journal[req.req_id] = req
         rep.enqueue(req, now)
         return rep

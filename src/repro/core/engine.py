@@ -35,6 +35,22 @@ from repro.models.model import Model
 
 
 @dataclass
+class EngineEvent:
+    """Streaming event drained via ``ServingEngine.poll_events()``.
+
+    kinds: ``token`` (one decoded token; ``index`` is its 0-based position
+    in ``output_tokens``), ``finish`` (request completed; ``reason`` one of
+    eos/length/true_len/ctx), ``cancel`` (client abort).
+    """
+    kind: str
+    req_id: int
+    t: float
+    token: Optional[int] = None
+    index: Optional[int] = None
+    reason: str = ""
+
+
+@dataclass
 class EngineConfig:
     max_slots: int = 8
     max_seq_len: int = 256
@@ -89,6 +105,11 @@ class ServingEngine:
         self.iter_times: List[tuple] = []          # (ctx_tokens, batch, seconds)
         self.prefill_times: List[tuple] = []
         self._generated_of: Dict[int, List[int]] = {}
+        # streaming events: recorded only when a front-end opts in (the
+        # gateway sets this), so plain step() drivers that never poll don't
+        # accumulate an unbounded buffer
+        self.stream_events = False
+        self._events: List[EngineEvent] = []       # drained by poll_events()
 
     # ----------------------------------------------------------- cache ops
     def _cache_batch_axes(self) -> Dict[str, int]:
@@ -237,12 +258,61 @@ class ServingEngine:
 
     # ------------------------------------------------------------ main loop
     def submit(self, req: Request, now: float = 0.0) -> None:
+        """Enqueue a request.  Re-entrant: a request released from another
+        engine (drain / re-route) resumes from its existing ``output_tokens``
+        via the recompute path, so no generated token is lost or re-emitted."""
         self.sched.submit(req, now)
-        self._generated_of[req.req_id] = []
+        self._generated_of[req.req_id] = list(req.output_tokens)
+
+    def poll_events(self) -> List[EngineEvent]:
+        """Drain streaming events produced since the last poll (recorded
+        only while ``stream_events`` is set)."""
+        evs, self._events = self._events, []
+        return evs
+
+    def release(self, req_id: int) -> Optional[Request]:
+        """Detach a live request without finishing it (drain / cancel):
+        frees its slot, host-pool KV, and memory accounting.  The returned
+        request can be re-submitted to any engine and will continue
+        deterministically from its current ``output_tokens``."""
+        req = self.sched.live.get(req_id)
+        if req is None:
+            return None
+        if req_id in self.slot_req:
+            self._slot_clear(self.slot_req.index(req_id))
+        self.host_pool.pop(req_id, None)
+        self.sched.release(req)
+        self._generated_of.pop(req_id, None)
+        req.state = RequestState.QUEUED
+        return req
+
+    def drain(self) -> List[Request]:
+        """Release every live request for re-enqueue elsewhere (replica
+        removal / elastic scale-down)."""
+        return [self.release(rid) for rid in list(self.sched.live.keys())]
+
+    def cancel(self, req_id: int, t: float = 0.0) -> bool:
+        """Client abort: free all engine state and emit a cancel event."""
+        req = self.release(req_id)
+        if req is None:
+            return False
+        req.state = RequestState.CANCELLED
+        req.finish_time = t
+        if self.stream_events:
+            self._events.append(EngineEvent("cancel", req_id, t))
+        return True
+
+    def queue_depth(self) -> int:
+        return len(self.sched.live)
+
+    def predicted_backlog(self) -> float:
+        """Predicted remaining seconds of live work (routing/admission)."""
+        return self.sched.predicted_backlog()
 
     def serve(self, requests: List[Request], realtime: bool = False,
               max_wall_s: float = 600.0) -> List[Request]:
-        """Serve all requests to completion; returns them with metrics."""
+        """Batch driver: serve all requests to completion (thin wrapper over
+        the re-entrant submit()/step()/poll_events() API)."""
         t_start = time.perf_counter()
         pending = sorted(requests, key=lambda r: r.arrival_time)
         i_arr = 0
@@ -258,6 +328,7 @@ class ServingEngine:
                 self.submit(pending[i_arr], t)
                 i_arr += 1
             ran_any = self.step(now())
+            self.poll_events()          # batch mode: nobody streams; discard
             if not ran_any:
                 if i_arr >= len(pending) and not self.sched.live:
                     break
@@ -348,6 +419,10 @@ class ServingEngine:
         req.generated += 1
         generated_of[req.req_id].append(tok)
         req.output_tokens.append(tok)
+        if self.stream_events:
+            self._events.append(EngineEvent(
+                "token", req.req_id, t, token=tok,
+                index=len(req.output_tokens) - 1))
         if req.first_token_time is None:
             req.first_token_time = t
         if not self.mem.grow(req):
@@ -361,15 +436,23 @@ class ServingEngine:
                 victim.state = RequestState.PREEMPTED
                 victim.preempt_count += 1
                 self.mem.grow(req)
-        done = (tok == self.cfg.eos_token
-                or req.generated >= self.cfg.max_new_tokens
-                or req.context_len >= self.cfg.max_seq_len - 1
-                or (self.cfg.respect_true_len
-                    and req.generated >= req.true_out_len))
-        if done:
+        reason = ""
+        if tok == self.cfg.eos_token:
+            reason = "eos"
+        elif req.generated >= self.cfg.max_new_tokens:
+            reason = "length"
+        elif req.context_len >= self.cfg.max_seq_len - 1:
+            reason = "ctx"
+        elif (self.cfg.respect_true_len
+              and req.generated >= req.true_out_len):
+            reason = "true_len"
+        if reason:
             slot = self.slot_req.index(req.req_id)
             self._slot_clear(slot)
             self.sched.note_finished(req, t)
+            if self.stream_events:
+                self._events.append(EngineEvent(
+                    "finish", req.req_id, t, reason=reason))
         else:
             self.sched.note_generated(req, t)
 

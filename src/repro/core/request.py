@@ -14,6 +14,18 @@ class RequestState(enum.Enum):
     SWAPPING = "swapping"      # KV transfer in flight
     FINISHED = "finished"
     FAILED = "failed"
+    CANCELLED = "cancelled"    # client cancelled (gateway streaming path)
+
+
+class SLOClass(enum.Enum):
+    """Service class for online serving (gateway admission + MLFQ mapping).
+
+    INTERACTIVE requests enter the scheduler's top priority band and are
+    never shed by admission control; BATCH requests take the normal
+    speculative band assignment and absorb backpressure (defer/shed) first.
+    """
+    INTERACTIVE = "interactive"
+    BATCH = "batch"
 
 
 class KVLocation(enum.Enum):
@@ -34,6 +46,7 @@ class Request:
     req_id: int = field(default_factory=lambda: next(_req_counter))
     prompt_tokens: Optional[List[int]] = None   # engine mode
     features: Optional[object] = None           # predictor embedding (np array)
+    slo_class: SLOClass = SLOClass.BATCH        # online-serving service class
 
     # --- prediction / scheduling state ---
     predicted_len: Optional[int] = None
@@ -72,7 +85,8 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return self.state in (RequestState.FINISHED, RequestState.FAILED)
+        return self.state in (RequestState.FINISHED, RequestState.FAILED,
+                              RequestState.CANCELLED)
 
     @property
     def e2e_latency(self) -> Optional[float]:

@@ -27,7 +27,7 @@ from typing import Dict, List, Optional, Tuple
 from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import TieredKVManager
 from repro.core.predictor import LengthPredictor
-from repro.core.request import KVLocation, Request, RequestState
+from repro.core.request import KVLocation, Request, RequestState, SLOClass
 
 
 @dataclass
@@ -42,6 +42,8 @@ class SchedulerConfig:
     strategy: str = "alise"          # alise | orca | vllm | oracle |
                                      # alise-defer | alise-recompute
     max_new_tokens: int = 2048       # hard generation cap
+    interactive_level_cap: int = 1   # deepest band an INTERACTIVE job may
+                                     # occupy (SLO mapping onto MLFQ bands)
 
 
 @dataclass
@@ -86,6 +88,13 @@ class Scheduler:
             req.prompt_len, req.generated, req.remaining_tokens_pred(),
             prefilled=prefilled)
 
+    def _clamp_level(self, req: Request, lvl: int) -> int:
+        """SLO mapping: interactive jobs live in the top bands (§gateway)."""
+        if req.slo_class == SLOClass.INTERACTIVE:
+            return min(lvl, min(self.cfg.interactive_level_cap,
+                                self.cfg.n_queues - 1))
+        return lvl
+
     def _level_of(self, req: Request, now: float) -> int:
         rem = self._remaining(req)
         lvl = 0
@@ -93,7 +102,7 @@ class Scheduler:
         while rem > bound and lvl < self.cfg.n_queues - 1:
             lvl += 1
             bound *= self.cfg.quantum_growth
-        return lvl
+        return self._clamp_level(req, lvl)
 
     def _apply_aging(self, req: Request, now: float) -> None:
         """Virtual aging: promote one level per age_threshold spent waiting."""
@@ -109,10 +118,22 @@ class Scheduler:
         if req.generated >= (req.predicted_len or 1):
             req.predicted_len = min((req.predicted_len or 1) * 2,
                                     self.cfg.max_new_tokens)
-            req.priority_level = min(req.priority_level + 1,
-                                     self.cfg.n_queues - 1)
+            req.priority_level = self._clamp_level(
+                req, min(req.priority_level + 1, self.cfg.n_queues - 1))
             req.level_enter_time = now
             req.demotions += 1
+
+    def predicted_backlog(self) -> float:
+        """Sum of predicted remaining execution time over live jobs (the
+        cluster/gateway EWT routing + admission watermark signal)."""
+        return sum(self._remaining(r) for r in self.live.values())
+
+    def release(self, req: Request) -> None:
+        """Remove a live job without finishing it (cancel / replica drain);
+        the caller owns any engine-side KV cleanup."""
+        self.mem.free(req)
+        self.live.pop(req.req_id, None)
+        self._swap_ready_at.pop(req.req_id, None)
 
     def note_finished(self, req: Request, now: float) -> None:
         req.state = RequestState.FINISHED

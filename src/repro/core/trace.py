@@ -108,6 +108,25 @@ def generate_trace(cfg: TraceConfig) -> SyntheticTrace:
     return SyntheticTrace(requests=requests, cfg=cfg)
 
 
+def clamp_requests(requests: List[Request], vocab: Optional[int] = None,
+                   max_prompt: Optional[int] = None,
+                   max_new: Optional[int] = None) -> List[Request]:
+    """Adapt trace requests to a (small) real engine in place: trim prompts,
+    cap output lengths, and remap tokens into [2, vocab) (0 = pad, 1 = eos).
+    Keeps the arrival process and relative length mix intact."""
+    for r in requests:
+        if max_prompt is not None and r.prompt_len > max_prompt:
+            r.prompt_len = max_prompt
+            if r.prompt_tokens is not None:
+                r.prompt_tokens = r.prompt_tokens[:max_prompt]
+        if max_new is not None:
+            r.true_out_len = max(min(r.true_out_len, max_new), 1)
+        if vocab is not None and r.prompt_tokens is not None:
+            r.prompt_tokens = [2 + (int(t) % (vocab - 2))
+                               for t in r.prompt_tokens]
+    return requests
+
+
 def trace_stats(trace: SyntheticTrace) -> dict:
     ins = np.array([r.prompt_len for r in trace.requests])
     outs = np.array([r.true_out_len for r in trace.requests])

@@ -1,11 +1,20 @@
 """Serving launcher: end-to-end ALISE serving of a real (small) JAX model.
 
+Batch mode (pre-built request list, closed loop):
+
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
         --strategy alise --n-requests 16
+
+Gateway mode (online front-end: Poisson trace replayed through SLO-aware
+admission + multi-replica routing, streaming delivery):
+
+    PYTHONPATH=src python -m repro.launch.serve --gateway --dataset alpaca \
+        --rate 8 --n-requests 32 --n-engines 2
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 
 import jax
 import numpy as np
@@ -13,8 +22,10 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.core.engine import EngineConfig, ServingEngine
 from repro.core.predictor import OraclePredictor, RetrievalPredictor
-from repro.core.request import Request, reset_request_counter
+from repro.core.request import Request, SLOClass, reset_request_counter
+from repro.core.trace import TraceConfig, clamp_requests, generate_trace
 from repro.models.model import Model
+from repro.serving.gateway import AdmissionConfig, Gateway, GatewayConfig
 
 
 def build_requests(cfg, n: int, seed: int = 0):
@@ -55,6 +66,49 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
     return reqs, eng
 
 
+def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
+                  dataset: str = "alpaca", rate: float = 8.0,
+                  n_requests: int = 32, n_engines: int = 2,
+                  max_slots: int = 4, router: str = "ewt",
+                  interactive_frac: float = 0.25, seed: int = 0,
+                  predictor_kind: str = "oracle", virtual_dt: float = 0.05):
+    """Replay a synthetic Poisson trace through the online Gateway and print
+    per-class TTFT/E2E percentiles."""
+    cfg = get_smoke_config(arch)
+    model = Model(cfg, attn_chunk=32, remat=False)
+    params = model.init(jax.random.PRNGKey(seed))
+
+    def mk_engine():
+        predictor = (OraclePredictor() if predictor_kind == "oracle"
+                     else RetrievalPredictor(seed=seed))
+        return ServingEngine(model, params, EngineConfig(
+            max_slots=max_slots, max_seq_len=96, max_new_tokens=48,
+            strategy=strategy, quantize_offload=False), predictor=predictor)
+
+    reset_request_counter()
+    trace = generate_trace(TraceConfig(dataset=dataset, rate=rate,
+                                       duration=1e9,
+                                       max_requests=n_requests, seed=seed))
+    reqs = clamp_requests(trace.requests, vocab=cfg.vocab_size,
+                          max_prompt=24, max_new=48)
+    rng = np.random.default_rng(seed)
+    for r in reqs:
+        if rng.random() < interactive_frac:
+            r.slo_class = SLOClass.INTERACTIVE
+
+    gw = Gateway([mk_engine() for _ in range(n_engines)],
+                 GatewayConfig(virtual_dt=virtual_dt, router_policy=router),
+                 admission=AdmissionConfig(
+                     max_queue_depth=max(8 * n_engines * max_slots, 32),
+                     defer_high_watermark=4 * n_engines * max_slots))
+    streams = asyncio.run(gw.replay(reqs))
+    done = sum(1 for s in streams if s.finished)
+    print(f"[gateway] {strategy}/{router} x{n_engines} engines, "
+          f"{dataset}@{rate}/s: {done}/{len(reqs)} streams finished")
+    print(gw.metrics.format())
+    return streams, gw
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
@@ -65,9 +119,26 @@ def main():
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--predictor", default="oracle",
                     choices=["oracle", "retrieval"])
+    ap.add_argument("--gateway", action="store_true",
+                    help="online mode: replay a Poisson trace through the "
+                         "streaming gateway instead of a pre-built batch")
+    ap.add_argument("--dataset", default="alpaca",
+                    choices=["alpaca", "sharegpt"])
+    ap.add_argument("--rate", type=float, default=8.0)
+    ap.add_argument("--n-engines", type=int, default=2)
+    ap.add_argument("--router", default="ewt",
+                    choices=["ewt", "join_shortest_queue", "round_robin"])
+    ap.add_argument("--interactive-frac", type=float, default=0.25)
     args = ap.parse_args()
-    serve(args.arch, args.strategy, args.n_requests, args.max_slots,
-          predictor_kind=args.predictor)
+    if args.gateway:
+        serve_gateway(args.arch, args.strategy, args.dataset, args.rate,
+                      args.n_requests, args.n_engines, args.max_slots,
+                      router=args.router,
+                      interactive_frac=args.interactive_frac,
+                      predictor_kind=args.predictor)
+    else:
+        serve(args.arch, args.strategy, args.n_requests, args.max_slots,
+              predictor_kind=args.predictor)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,26 @@
+"""Online serving gateway: asyncio streaming front-end over real engines.
+
+Layers (each its own module):
+
+  * ``server``    — the ``Gateway`` event loop: arrival-time admission,
+                    per-request async token streams, cancellation, replay.
+  * ``admission`` — SLO-class admission control with queue-depth and
+                    predicted-EWT watermarks (backpressure: defer/shed).
+  * ``router``    — predictor-informed dispatch across engine replicas
+                    (round_robin / join_shortest_queue / ewt), with
+                    drain-and-requeue on engine removal.
+  * ``metrics``   — per-class TTFT/TPOT/E2E percentile + goodput telemetry.
+"""
+from repro.serving.gateway.admission import (AdmissionConfig,
+                                             AdmissionController, Verdict)
+from repro.serving.gateway.metrics import ClassMetrics, GatewayMetrics
+from repro.serving.gateway.router import EngineDriver, GatewayRouter
+from repro.serving.gateway.server import (Gateway, GatewayConfig,
+                                          RequestStream)
+
+__all__ = [
+    "AdmissionConfig", "AdmissionController", "Verdict",
+    "ClassMetrics", "GatewayMetrics",
+    "EngineDriver", "GatewayRouter",
+    "Gateway", "GatewayConfig", "RequestStream",
+]

@@ -1,0 +1,85 @@
+"""SLO-class admission control and backpressure.
+
+Maps the two service classes onto ALISE's MLFQ bands (scheduler-side) and
+onto front-door policy (gateway-side):
+
+  * INTERACTIVE — always admitted (the paper's latency-critical traffic;
+    enters the scheduler's top band via ``SchedulerConfig.interactive_level_cap``).
+  * BATCH — absorbs backpressure first.  Two watermark mechanisms:
+
+      - *defer* (hysteresis): when total live depth crosses
+        ``defer_high_watermark`` the gateway parks batch arrivals in a
+        holding queue until depth falls below ``defer_low_watermark`` —
+        smoothing bursts without dropping work (no HBM thrash from
+        over-admission).
+      - *shed* (hard): above ``max_queue_depth`` live requests or
+        ``max_backlog_s`` of predicted remaining work (the same Eq. 6-7
+        EWT signal the router uses), new batch work is rejected outright.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.core.request import Request, SLOClass
+
+
+class Verdict(enum.Enum):
+    ADMIT = "admit"
+    DEFER = "defer"
+    SHED = "shed"
+
+
+@dataclass
+class AdmissionConfig:
+    max_queue_depth: int = 256             # shed batch above this many live
+    max_backlog_s: float = float("inf")    # shed batch above this predicted s
+    defer_high_watermark: Optional[int] = None   # park batch at/above this
+    defer_low_watermark: Optional[int] = None    # resume below this
+    interactive_hard_cap: Optional[int] = None   # None = never shed interactive
+
+    def __post_init__(self):
+        if self.defer_high_watermark is not None \
+                and self.defer_low_watermark is None:
+            self.defer_low_watermark = max(self.defer_high_watermark // 2, 1)
+
+
+class AdmissionController:
+    """Stateful watermark controller (hysteresis on the defer band)."""
+
+    def __init__(self, cfg: Optional[AdmissionConfig] = None):
+        self.cfg = cfg or AdmissionConfig()
+        self._deferring = False
+
+    def decide(self, req: Request, depth: int, backlog_s: float) -> Verdict:
+        """depth/backlog_s: totals across all live engine replicas."""
+        cfg = self.cfg
+        if req.slo_class == SLOClass.INTERACTIVE:
+            if (cfg.interactive_hard_cap is not None
+                    and depth >= cfg.interactive_hard_cap):
+                return Verdict.SHED
+            return Verdict.ADMIT
+        if depth >= cfg.max_queue_depth or backlog_s >= cfg.max_backlog_s:
+            return Verdict.SHED
+        if cfg.defer_high_watermark is not None:
+            if self._deferring:
+                if depth < cfg.defer_low_watermark:
+                    self._deferring = False
+                else:
+                    return Verdict.DEFER
+            elif depth >= cfg.defer_high_watermark:
+                self._deferring = True
+                return Verdict.DEFER
+        return Verdict.ADMIT
+
+    def may_release(self, depth: int) -> bool:
+        """May a previously deferred batch request be admitted now?
+        Releases stop at the high watermark (not max_queue_depth), so a
+        parked backlog cannot flood past the band hysteresis protects."""
+        cfg = self.cfg
+        if cfg.defer_high_watermark is None:
+            return depth < cfg.max_queue_depth
+        if self._deferring and depth < cfg.defer_low_watermark:
+            self._deferring = False
+        return not self._deferring and depth < cfg.defer_high_watermark

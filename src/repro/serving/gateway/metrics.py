@@ -1,0 +1,111 @@
+"""Per-SLO-class serving telemetry.
+
+TTFT  = first_token_time - arrival_time        (queueing + prefill)
+TPOT  = (finish - first_token) / (n_tokens-1)  (steady-state decode pace)
+E2E   = finish - arrival
+
+All times are in the gateway's clock domain (wall seconds in realtime mode,
+virtual seconds in replay mode), so percentiles are comparable across both.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.request import Request, SLOClass
+
+
+def percentile(xs: List[float], p: float) -> float:
+    if not xs:
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, dtype=float), p))
+
+
+@dataclass
+class ClassMetrics:
+    ttft: List[float] = field(default_factory=list)
+    tpot: List[float] = field(default_factory=list)
+    e2e: List[float] = field(default_factory=list)
+    tokens: int = 0
+    completed: int = 0
+    cancelled: int = 0
+    shed: int = 0
+    deferred: int = 0          # admission defer decisions (not unique reqs)
+
+    def record_first_token(self, req: Request, t: float) -> None:
+        self.ttft.append(t - req.arrival_time)
+
+    def record_finish(self, req: Request, t: float) -> None:
+        self.completed += 1
+        self.tokens += req.generated
+        self.e2e.append(t - req.arrival_time)
+        if req.first_token_time is not None and req.generated > 1:
+            self.tpot.append((t - req.first_token_time)
+                             / (req.generated - 1))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "completed": self.completed, "shed": self.shed,
+            "cancelled": self.cancelled, "deferred": self.deferred,
+            "tokens": self.tokens,
+            "ttft_p50": percentile(self.ttft, 50),
+            "ttft_p90": percentile(self.ttft, 90),
+            "ttft_p99": percentile(self.ttft, 99),
+            "tpot_p50": percentile(self.tpot, 50),
+            "tpot_p99": percentile(self.tpot, 99),
+            "e2e_p50": percentile(self.e2e, 50),
+            "e2e_p99": percentile(self.e2e, 99),
+        }
+
+
+class GatewayMetrics:
+    """Aggregates per-class stats; shared by the gateway and benchmarks."""
+
+    def __init__(self):
+        self.per_class: Dict[SLOClass, ClassMetrics] = {
+            c: ClassMetrics() for c in SLOClass}
+        self.start_t: float = 0.0
+        self.end_t: float = 0.0
+
+    def of(self, req: Request) -> ClassMetrics:
+        return self.per_class[req.slo_class]
+
+    @property
+    def duration(self) -> float:
+        return max(self.end_t - self.start_t, 1e-9)
+
+    def completed(self) -> int:
+        return sum(m.completed for m in self.per_class.values())
+
+    def goodput(self) -> float:
+        """Completed requests per second of serving time."""
+        return self.completed() / self.duration
+
+    def token_throughput(self) -> float:
+        return sum(m.tokens for m in self.per_class.values()) / self.duration
+
+    def summary(self) -> Dict[str, object]:
+        out: Dict[str, object] = {
+            "duration_s": self.duration,
+            "goodput_rps": self.goodput(),
+            "tok_per_s": self.token_throughput(),
+        }
+        for c, m in self.per_class.items():
+            out[c.value] = m.summary()
+        return out
+
+    def format(self) -> str:
+        lines = [f"duration {self.duration:.2f}s  "
+                 f"goodput {self.goodput():.2f} req/s  "
+                 f"{self.token_throughput():.1f} tok/s"]
+        for c, m in self.per_class.items():
+            s = m.summary()
+            lines.append(
+                f"  {c.value:>11}: done={s['completed']:<4d} "
+                f"shed={s['shed']:<3d} "
+                f"TTFT p50/p99={s['ttft_p50']:.3f}/{s['ttft_p99']:.3f}s "
+                f"TPOT p50={s['tpot_p50']*1e3:.1f}ms "
+                f"E2E p50/p99={s['e2e_p50']:.3f}/{s['e2e_p99']:.3f}s")
+        return "\n".join(lines)

@@ -1,0 +1,90 @@
+"""Predictor-informed dispatch across real engine replicas.
+
+Reuses the cluster-level placement policy from ``core/cluster.py``
+(``pick_replica``): ``ewt`` places each request on the replica with the
+minimum predicted completion time (speculative shortest-queue routing,
+cluster-level Eq. 6-7); ``join_shortest_queue`` and ``round_robin`` are
+the standard baselines.
+
+Drain: removing an engine releases its in-flight requests (KV freed on the
+old replica) and re-routes them across the survivors.  The engine's
+re-entrant ``submit()`` resumes each request from its existing
+``output_tokens`` via the recompute path, so already-streamed tokens are
+neither lost nor re-emitted — the client stream just keeps going.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+from repro.core.cluster import pick_replica
+from repro.core.engine import ServingEngine
+from repro.core.request import Request
+
+
+@dataclass
+class EngineDriver:
+    """One engine replica as seen by the gateway."""
+    engine: ServingEngine
+    name: str = ""
+    alive: bool = True
+
+    def queue_depth(self) -> int:
+        return self.engine.queue_depth()
+
+    def predicted_backlog(self) -> float:
+        return self.engine.predicted_backlog()
+
+
+class GatewayRouter:
+    def __init__(self, engines: List[ServingEngine], policy: str = "ewt"):
+        self.policy = policy
+        self.drivers: List[EngineDriver] = [
+            EngineDriver(engine=e, name=f"engine{i}")
+            for i, e in enumerate(engines)]
+        for d in self.drivers:
+            d.engine.stream_events = True
+        self.owner: Dict[int, EngineDriver] = {}   # req_id -> driver
+        self._rr = 0
+
+    # ------------------------------------------------------------ topology
+    def alive_drivers(self) -> List[EngineDriver]:
+        return [d for d in self.drivers if d.alive]
+
+    def add_engine(self, engine: ServingEngine) -> EngineDriver:
+        engine.stream_events = True
+        d = EngineDriver(engine=engine, name=f"engine{len(self.drivers)}")
+        self.drivers.append(d)
+        return d
+
+    def remove_engine(self, idx: int, now: float = 0.0) -> List[Request]:
+        """Drain-and-requeue: release every in-flight request from the
+        removed engine and redistribute across the survivors."""
+        d = self.drivers[idx]
+        if not any(o.alive for o in self.drivers if o is not d):
+            raise ValueError("cannot remove the last alive engine")
+        d.alive = False
+        moved = d.engine.drain()
+        for r in moved:
+            self.owner.pop(r.req_id, None)
+            self.dispatch(r, now)
+        return moved
+
+    # ------------------------------------------------------------- routing
+    def dispatch(self, req: Request, now: float) -> EngineDriver:
+        alive = self.alive_drivers()
+        d = pick_replica(self.policy, alive, rr_counter=self._rr,
+                         queue_len=lambda d: d.queue_depth(),
+                         backlog=lambda d: d.predicted_backlog())
+        if self.policy == "round_robin":
+            self._rr += 1
+        d.engine.submit(req, now)
+        self.owner[req.req_id] = d
+        return d
+
+    # --------------------------------------------------------------- state
+    def total_depth(self) -> int:
+        return sum(d.queue_depth() for d in self.alive_drivers())
+
+    def total_backlog(self) -> float:
+        return sum(d.predicted_backlog() for d in self.alive_drivers())

@@ -1,0 +1,279 @@
+"""The Gateway: an asyncio online front-end over real ServingEngines.
+
+Requests arrive at arbitrary times (wall-clock or virtual), pass SLO-class
+admission control, are routed across engine replicas, and stream tokens back
+through per-request async queues:
+
+    gw = Gateway([eng0, eng1], GatewayConfig(virtual_dt=0.05))
+    stream = gw.submit(req)
+    async for ev in stream:          # EngineEvents: token / finish / ...
+        ...
+    await gw.run_until_drained()
+
+Clock domains: with ``virtual_dt`` set the gateway runs a deterministic
+virtual clock that advances one ``virtual_dt`` per engine iteration round
+(lockstep across replicas, like the cluster simulator's tick) — used by
+trace replay, tests, and benchmarks.  With ``virtual_dt=None`` the gateway
+uses wall time and sleeps while idle.
+
+Correctness invariant inherited from the engine: with greedy sampling and
+quantization off, streamed tokens are bit-identical to the batch
+``ServingEngine.serve()`` output regardless of admission order, routing,
+preemption, swapping, or drain-and-requeue.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Union
+
+from repro.core.engine import EngineEvent, ServingEngine
+from repro.core.request import Request, RequestState, SLOClass
+from repro.serving.gateway.admission import (AdmissionConfig,
+                                             AdmissionController, Verdict)
+from repro.serving.gateway.metrics import GatewayMetrics
+from repro.serving.gateway.router import GatewayRouter
+
+
+class RequestStream:
+    """Per-request async event stream (first-token, per-token, finish)."""
+
+    def __init__(self, req: Request):
+        self.request = req
+        self.verdict: Optional[Verdict] = None
+        self.emitted = 0                       # tokens forwarded so far
+        self.events_log: List[EngineEvent] = []
+        self.closed = False
+        self._queue: asyncio.Queue = asyncio.Queue()
+
+    # ----------------------------------------------------------- consumer
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self) -> EngineEvent:
+        if self.closed and self._queue.empty():
+            raise StopAsyncIteration
+        ev = await self._queue.get()
+        if ev is None:
+            raise StopAsyncIteration
+        return ev
+
+    @property
+    def token_values(self) -> List[int]:
+        return [ev.token for ev in self.events_log if ev.kind == "token"]
+
+    @property
+    def finished(self) -> bool:
+        return any(ev.kind in ("finish", "cancel", "shed", "timeout")
+                   for ev in self.events_log)
+
+    # ----------------------------------------------------------- producer
+    def _push(self, ev: EngineEvent) -> None:
+        self.events_log.append(ev)
+        self._queue.put_nowait(ev)
+
+    def _close(self) -> None:
+        if not self.closed:
+            self.closed = True
+            self._queue.put_nowait(None)
+
+
+@dataclass
+class GatewayConfig:
+    router_policy: str = "ewt"         # ewt | join_shortest_queue | round_robin
+    virtual_dt: Optional[float] = None  # virtual seconds per iteration round;
+                                        # None => wall clock
+    idle_sleep_s: float = 0.0005
+    max_wall_s: float = 600.0           # hard wall-time bound on replay/drain
+
+
+class Gateway:
+    def __init__(self, engines: List[ServingEngine],
+                 cfg: Optional[GatewayConfig] = None,
+                 admission: Union[AdmissionConfig, AdmissionController,
+                                  None] = None):
+        self.cfg = cfg or GatewayConfig()
+        self.router = GatewayRouter(engines, self.cfg.router_policy)
+        if isinstance(admission, AdmissionController):
+            self.admission = admission
+        else:
+            self.admission = AdmissionController(admission)
+        self.metrics = GatewayMetrics()
+        self.streams: Dict[int, RequestStream] = {}
+        self.deferred: Deque[Request] = deque()
+        self._vclock = 0.0
+        self._wall0: Optional[float] = None
+
+    # ----------------------------------------------------------------- time
+    def now(self) -> float:
+        if self.cfg.virtual_dt is not None:
+            return self._vclock
+        if self._wall0 is None:
+            self._wall0 = time.perf_counter()
+        return time.perf_counter() - self._wall0
+
+    # ---------------------------------------------------------------- intake
+    def submit(self, req: Request, now: Optional[float] = None) -> RequestStream:
+        """Admission decision + (if admitted) dispatch.  Always returns a
+        stream; a shed request's stream carries a single ``shed`` event."""
+        t = self.now() if now is None else now
+        if now is None:
+            req.arrival_time = t
+        stream = RequestStream(req)
+        self.streams[req.req_id] = stream
+        depth = self.router.total_depth() + len(self.deferred)
+        verdict = self.admission.decide(req, depth,
+                                        self.router.total_backlog())
+        stream.verdict = verdict
+        if verdict == Verdict.SHED:
+            req.state = RequestState.FAILED
+            self.metrics.of(req).shed += 1
+            stream._push(EngineEvent("shed", req.req_id, t,
+                                     reason="admission"))
+            stream._close()
+        elif verdict == Verdict.DEFER:
+            self.metrics.of(req).deferred += 1
+            self.deferred.append(req)
+        elif req.slo_class == SLOClass.BATCH and self.deferred:
+            # keep batch-class FIFO: park behind earlier deferred work and
+            # release in arrival order up to the watermark
+            self.deferred.append(req)
+            self._release_deferred(t)
+        else:
+            self.router.dispatch(req, t)
+        return stream
+
+    def cancel(self, req_id: int) -> bool:
+        t = self.now()
+        for r in list(self.deferred):
+            if r.req_id == req_id:
+                self.deferred.remove(r)
+                r.state = RequestState.CANCELLED
+                stream = self.streams[req_id]
+                self.metrics.of(r).cancelled += 1
+                stream._push(EngineEvent("cancel", req_id, t))
+                stream._close()
+                return True
+        d = self.router.owner.get(req_id)
+        if d is None:
+            return False
+        ok = d.engine.cancel(req_id, t)
+        if ok:
+            for ev in d.engine.poll_events():
+                self._dispatch_event(ev)
+        return ok
+
+    # -------------------------------------------------------------- topology
+    def remove_engine(self, idx: int) -> int:
+        """Drain an engine; in-flight work is re-routed losslessly."""
+        d = self.router.drivers[idx]
+        moved = self.router.remove_engine(idx, self.now())
+        # the dead engine is no longer pumped: flush any events it emitted
+        # since the last poll so no streamed token is silently dropped
+        for ev in d.engine.poll_events():
+            self._dispatch_event(ev)
+        return len(moved)
+
+    def add_engine(self, engine: ServingEngine) -> None:
+        self.router.add_engine(engine)
+
+    # ------------------------------------------------------------ event pump
+    def _dispatch_event(self, ev: EngineEvent) -> None:
+        stream = self.streams.get(ev.req_id)
+        if stream is None:
+            return
+        req = stream.request
+        if ev.kind == "token":
+            if ev.index is not None and ev.index < stream.emitted:
+                return                      # duplicate after requeue/replay
+            stream.emitted += 1
+            if stream.emitted == 1:
+                self.metrics.of(req).record_first_token(req, ev.t)
+            stream._push(ev)
+        elif ev.kind == "finish":
+            self.metrics.of(req).record_finish(req, ev.t)
+            self.router.owner.pop(ev.req_id, None)
+            stream._push(ev)
+            stream._close()
+        elif ev.kind == "cancel":
+            self.metrics.of(req).cancelled += 1
+            self.router.owner.pop(ev.req_id, None)
+            stream._push(ev)
+            stream._close()
+
+    def _abort_open_streams(self, reason: str = "wall_timeout") -> None:
+        """Terminate every still-open stream (wall-budget exceeded) so that
+        consumers blocked on the queue observe a terminal event instead of
+        hanging forever."""
+        t = self.now()
+        for stream in self.streams.values():
+            if not stream.closed:
+                stream.request.state = RequestState.FAILED
+                stream._push(EngineEvent("timeout", stream.request.req_id, t,
+                                         reason=reason))
+                stream._close()
+
+    def _release_deferred(self, t: float) -> None:
+        while self.deferred and self.admission.may_release(
+                self.router.total_depth()):
+            self.router.dispatch(self.deferred.popleft(), t)
+
+    def pump_once(self) -> bool:
+        """One lockstep iteration over all live engines; returns whether any
+        engine made progress."""
+        t = self.now()
+        self._release_deferred(t)
+        ran = False
+        for d in self.router.alive_drivers():
+            if d.engine.sched.live:
+                ran |= d.engine.step(t)
+            for ev in d.engine.poll_events():
+                self._dispatch_event(ev)
+        if ran and self.cfg.virtual_dt is not None:
+            self._vclock += self.cfg.virtual_dt
+        return ran
+
+    # ------------------------------------------------------------ run loops
+    def _live(self) -> bool:
+        return bool(self.router.total_depth() or self.deferred)
+
+    async def run_until_drained(self) -> None:
+        """Drain everything already submitted (an empty-arrival replay, so
+        the pump/abort/metrics bookkeeping lives in one place)."""
+        await self.replay([])
+
+    async def replay(self, requests: List[Request]) -> List[RequestStream]:
+        """Replay a trace (requests with arrival_time set) through admission,
+        routing, and the engines; returns one stream per request."""
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        streams: List[RequestStream] = []
+        i = 0
+        wall0 = time.perf_counter()
+        self.metrics.start_t = self.now()
+        while i < len(pending) or self._live():
+            if time.perf_counter() - wall0 > self.cfg.max_wall_s:
+                self._abort_open_streams()
+                break
+            t = self.now()
+            while i < len(pending) and pending[i].arrival_time <= t:
+                streams.append(self.submit(pending[i], now=t))
+                i += 1
+            ran = self.pump_once()
+            if not ran:
+                if self._live():
+                    if self.cfg.virtual_dt is not None:
+                        self._vclock += self.cfg.virtual_dt
+                    else:
+                        await asyncio.sleep(self.cfg.idle_sleep_s)
+                elif i < len(pending):
+                    # idle gap before the next arrival
+                    if self.cfg.virtual_dt is not None:
+                        self._vclock = max(self._vclock,
+                                           pending[i].arrival_time)
+                    else:
+                        await asyncio.sleep(self.cfg.idle_sleep_s)
+            await asyncio.sleep(0)
+        self.metrics.end_t = self.now()
+        return streams

@@ -39,6 +39,8 @@ _SCRIPT = textwrap.dedent("""
                           ).lower(params_shape, ins["cache"], ins["tokens"])
         compiled = lowered.compile()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax returns [dict]
+        cost = cost[0] if cost else {}
     mem = compiled.memory_analysis()
     coll = parse_collectives(compiled.as_text(), {"body": cfg.num_layers})
     print(json.dumps({

@@ -1,0 +1,208 @@
+"""Online gateway integration: streaming bit-identity vs the batch engine,
+SLO-aware admission under overload, and lossless drain-and-requeue."""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.engine import EngineConfig, ServingEngine
+from repro.core.predictor import OraclePredictor
+from repro.core.request import (Request, RequestState, SLOClass,
+                                reset_request_counter)
+from repro.core.trace import TraceConfig, clamp_requests, generate_trace
+from repro.models.model import Model
+from repro.serving.gateway import (AdmissionConfig, Gateway, GatewayConfig,
+                                   Verdict)
+from repro.serving.gateway.metrics import percentile
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_smoke_config("granite-3-8b")
+    model = Model(cfg, attn_chunk=32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def mk_engine(model, params, max_slots=2, strategy="alise"):
+    return ServingEngine(model, params, EngineConfig(
+        max_slots=max_slots, max_seq_len=64, max_new_tokens=24,
+        strategy=strategy, quantize_offload=False),
+        predictor=OraclePredictor())
+
+
+def poisson_requests(cfg, n=32, rate=20.0, seed=0):
+    """A >=n-request Poisson trace adapted to the smoke engine."""
+    trace = generate_trace(TraceConfig(dataset="alpaca", rate=rate,
+                                       duration=1e9, max_requests=n,
+                                       seed=seed))
+    reqs = clamp_requests(trace.requests, vocab=cfg.vocab_size,
+                          max_prompt=12, max_new=16)
+    for i, r in enumerate(reqs):
+        r.slo_class = (SLOClass.INTERACTIVE if i % 4 == 0
+                       else SLOClass.BATCH)
+        # bimodal output mix so SRTF actually reorders (clamping alone would
+        # flatten the alpaca tail onto the cap)
+        r.true_out_len = 3 if i % 4 == 0 else 16
+    return reqs
+
+
+def clone_for_batch(reqs):
+    """Same prompts as fresh arrival-0 requests for the batch reference."""
+    return [Request(prompt_len=r.prompt_len, arrival_time=0.0,
+                    true_out_len=r.true_out_len,
+                    prompt_tokens=list(r.prompt_tokens)) for r in reqs]
+
+
+def test_gateway_streams_bit_identical_to_batch(model_and_params):
+    """Acceptance: >=32-request Poisson trace over 2 replicas streams exactly
+    the batch ServingEngine.serve() tokens (greedy, quantize off), under
+    preemption."""
+    cfg, model, params = model_and_params
+    reset_request_counter()
+    reqs = poisson_requests(cfg, n=32)
+    ref_reqs = clone_for_batch(reqs)
+    ref_eng = mk_engine(model, params, max_slots=8)
+    ref_eng.serve(ref_reqs)
+    ref = [list(r.output_tokens) for r in ref_reqs]
+
+    gw = Gateway([mk_engine(model, params), mk_engine(model, params)],
+                 GatewayConfig(virtual_dt=0.05, router_policy="ewt"))
+    streams = asyncio.run(gw.replay(reqs))
+    assert len(streams) == 32
+    assert [s.token_values for s in streams] == ref
+    assert [s.token_values for s in streams] == \
+        [list(r.output_tokens) for r in reqs]
+    # small replicas + mixed lengths: the trace must exercise preemption
+    assert sum(r.preempt_count for r in reqs) > 0
+    assert gw.metrics.completed() == 32
+    # both replicas actually served work
+    assert all(d.engine.sched.finished for d in gw.router.drivers)
+
+
+def test_admission_sheds_batch_never_interactive(model_and_params):
+    """Acceptance: under overload, batch-class is shed/deferred while
+    interactive-class is always admitted and sees lower p50 TTFT."""
+    cfg, model, params = model_and_params
+    reset_request_counter()
+    rng = np.random.default_rng(2)
+    reqs = []
+    for k in range(24):
+        interactive = k % 4 == 0
+        reqs.append(Request(
+            prompt_len=8, arrival_time=round(k * 0.02, 3),
+            true_out_len=4 if interactive else 20,
+            prompt_tokens=rng.integers(2, cfg.vocab_size, 8).tolist(),
+            slo_class=(SLOClass.INTERACTIVE if interactive
+                       else SLOClass.BATCH)))
+    gw = Gateway([mk_engine(model, params)],
+                 GatewayConfig(virtual_dt=0.05),
+                 admission=AdmissionConfig(max_queue_depth=10,
+                                           defer_high_watermark=6))
+    streams = asyncio.run(gw.replay(reqs))
+    mi = gw.metrics.per_class[SLOClass.INTERACTIVE]
+    mb = gw.metrics.per_class[SLOClass.BATCH]
+    assert mi.shed == 0
+    assert mb.shed > 0
+    assert mb.deferred > 0
+    assert mi.completed == 6                     # every interactive finished
+    # interactive-class p50 TTFT beats batch-class p50 TTFT under overload
+    assert percentile(mi.ttft, 50) < percentile(mb.ttft, 50)
+    # shed streams carry exactly one shed event and are closed
+    for s in streams:
+        if s.verdict == Verdict.SHED:
+            assert [ev.kind for ev in s.events_log] == ["shed"]
+            assert s.request.slo_class == SLOClass.BATCH
+
+
+def test_router_drain_requeues_losslessly(model_and_params):
+    """Removing a replica mid-generation re-routes its in-flight work; the
+    streams continue with no token lost, duplicated, or changed."""
+    cfg, model, params = model_and_params
+    reset_request_counter()
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(2, cfg.vocab_size, 8).tolist() for _ in range(6)]
+    ref_reqs = [Request(prompt_len=8, arrival_time=0.0, true_out_len=20,
+                        prompt_tokens=list(p)) for p in prompts]
+    ref_eng = mk_engine(model, params, max_slots=8)
+    ref_eng.serve(ref_reqs)
+    ref = [list(r.output_tokens) for r in ref_reqs]
+
+    reset_request_counter()
+    reqs = [Request(prompt_len=8, arrival_time=0.0, true_out_len=20,
+                    prompt_tokens=list(p)) for p in prompts]
+    gw = Gateway([mk_engine(model, params), mk_engine(model, params)],
+                 GatewayConfig(virtual_dt=0.05))
+    streams = [gw.submit(r, now=0.0) for r in reqs]
+
+    async def run():
+        for _ in range(6):          # both replicas mid-generation
+            gw.pump_once()
+        assert all(d.queue_depth() > 0 for d in gw.router.drivers)
+        moved = gw.remove_engine(0)
+        assert moved > 0
+        await gw.run_until_drained()
+        return moved
+
+    asyncio.run(run())
+    assert [s.token_values for s in streams] == ref
+    # survivors did all remaining work; drained engine holds nothing
+    assert gw.router.drivers[0].engine.queue_depth() == 0
+    assert all(s.finished for s in streams)
+    # the last alive engine cannot be removed (would orphan work)
+    with pytest.raises(ValueError):
+        gw.remove_engine(1)
+
+
+def test_cancel_frees_engine_and_closes_stream(model_and_params):
+    cfg, model, params = model_and_params
+    reset_request_counter()
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt_len=8, arrival_time=0.0, true_out_len=20,
+                    prompt_tokens=rng.integers(2, cfg.vocab_size, 8).tolist())
+            for _ in range(3)]
+    gw = Gateway([mk_engine(model, params)], GatewayConfig(virtual_dt=0.05))
+    streams = [gw.submit(r, now=0.0) for r in reqs]
+    for _ in range(4):
+        gw.pump_once()
+    assert gw.cancel(reqs[0].req_id)
+    asyncio.run(gw.run_until_drained())
+    assert reqs[0].state == RequestState.CANCELLED
+    assert streams[0].closed
+    assert streams[0].events_log[-1].kind == "cancel"
+    for r, s in zip(reqs[1:], streams[1:]):
+        assert r.state == RequestState.FINISHED
+        assert len(s.token_values) == r.true_out_len
+
+
+def test_async_stream_consumption_overlaps_serving(model_and_params):
+    """Tokens are consumable while the gateway is still serving (first-token
+    events arrive before the request finishes)."""
+    cfg, model, params = model_and_params
+    reset_request_counter()
+    rng = np.random.default_rng(4)
+    req = Request(prompt_len=8, arrival_time=0.0, true_out_len=12,
+                  prompt_tokens=rng.integers(2, cfg.vocab_size, 8).tolist(),
+                  slo_class=SLOClass.INTERACTIVE)
+    gw = Gateway([mk_engine(model, params)], GatewayConfig(virtual_dt=0.05))
+
+    async def run():
+        stream = gw.submit(req, now=0.0)
+        seen = []
+
+        async def consume():
+            async for ev in stream:
+                seen.append((ev.kind, gw.router.total_depth()))
+
+        task = asyncio.ensure_future(consume())
+        await gw.run_until_drained()
+        await task
+        return seen
+
+    seen = asyncio.run(run())
+    kinds = [k for k, _ in seen]
+    assert kinds.count("token") == 12 and kinds[-1] == "finish"
+    # at least one token event was consumed while the request was still live
+    assert any(depth > 0 for kind, depth in seen if kind == "token")

@@ -1,7 +1,7 @@
 """TieredKVManager unit + hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from optional_hypothesis import given, settings, st
 
 from repro.core.memory_manager import MemoryConfig, TieredKVManager
 from repro.core.request import KVLocation, Request

@@ -1,7 +1,7 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from optional_hypothesis import given, settings, st
 
 from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import MemoryConfig, TieredKVManager

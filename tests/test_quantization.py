@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from optional_hypothesis import given, settings, st
 
 from repro.core.quantization import (dequantize, dequantize_np,
                                      kv_bytes_per_token, quantize,

@@ -149,3 +149,21 @@ def test_backfill_is_work_conserving():
         r.state = RequestState.RUNNING
     plan = sched.plan(0.0)
     assert len(plan.run) == 3
+
+
+def test_interactive_slo_clamped_to_top_bands():
+    """Gateway SLO mapping: interactive jobs enter (and stay in) the top
+    MLFQ bands regardless of predicted length; batch jobs band normally."""
+    from repro.core.request import SLOClass
+    sched, _ = mk_sched()
+    batch_long, inter_long = mk_req(2000), mk_req(2000)
+    inter_long.slo_class = SLOClass.INTERACTIVE
+    sched.submit(batch_long, 0.0)
+    sched.submit(inter_long, 0.0)
+    cap = sched.cfg.interactive_level_cap
+    assert inter_long.priority_level <= cap
+    assert inter_long.priority_level < batch_long.priority_level
+    # misprediction demotion must respect the clamp too
+    inter_long.generated = inter_long.predicted_len
+    sched.note_generated(inter_long, 1.0)
+    assert inter_long.priority_level <= cap
