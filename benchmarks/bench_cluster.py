@@ -3,29 +3,32 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, note
+from benchmarks.common import emit, note, pick
 from repro.core.cluster import ClusterConfig, ClusterRouter
 from repro.core.simulator import build_predictor
 from repro.core.trace import TraceConfig, generate_trace
 
 
 def run() -> dict:
-    tc = TraceConfig(dataset="sharegpt", rate=16.0, duration=60.0, seed=3)
+    tc = TraceConfig(dataset="sharegpt", rate=pick(16.0, 4.0),
+                     duration=pick(60.0, 8.0), seed=3)
     trace = generate_trace(tc)
-    pred = build_predictor("retrieval", tc, 512)
+    pred = build_predictor("retrieval", tc, pick(512, 64))
+    n_rep = pick(4, 2)
     out = {}
     for router in ("round_robin", "join_shortest_queue", "ewt"):
         t0 = time.perf_counter()
-        r = ClusterRouter(ClusterConfig(n_replicas=4, router=router),
+        r = ClusterRouter(ClusterConfig(n_replicas=n_rep, router=router),
                           pred).run(trace)
         wall_us = (time.perf_counter() - t0) * 1e6
         out[router] = r.normalized_latency * 1e3
-        emit(f"cluster/{router}/4replicas", wall_us,
+        emit(f"cluster/{router}/{n_rep}replicas", wall_us,
              f"norm_ms={out[router]:.2f};p99_s={r.p99_latency:.1f};"
              f"done={r.completed}/{r.total}")
     t0 = time.perf_counter()
-    rf = ClusterRouter(ClusterConfig(n_replicas=4, router="ewt",
-                                     fail_at=20.0, recover_at=40.0),
+    rf = ClusterRouter(ClusterConfig(n_replicas=n_rep, router="ewt",
+                                     fail_at=pick(20.0, 3.0),
+                                     recover_at=pick(40.0, 5.0)),
                        pred).run(trace)
     emit("cluster/ewt/failure_injection", (time.perf_counter() - t0) * 1e6,
          f"replayed={rf.replayed};done={rf.completed}/{rf.total};"

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, note, time_call
+from benchmarks.common import emit, note, pick, time_call
 from repro.kernels.flash_prefill import flash_attention, flash_prefill_ref
 from repro.kernels.fused_rmsnorm import fused_rmsnorm_op, rmsnorm_ref
 from repro.kernels.kv_quant import kv_quantize_op, paged_attention_q8_op, kv_quantize_ref
@@ -28,23 +28,25 @@ def run() -> None:
     key = jax.random.PRNGKey(0)
 
     # flash prefill: one layer tile of granite-3-8b at 2k
-    B, H, KVH, S, d = 1, 8, 2, 2048, 128
+    B, H, KVH, S, d = 1, 8, 2, pick(2048, 256), 128
+    blk = pick(256, 128)
     ks = jax.random.split(key, 3)
     q = jax.random.normal(ks[0], (B, H, S, d), jnp.float32)
     k = jax.random.normal(ks[1], (B, KVH, S, d), jnp.float32)
     v = jax.random.normal(ks[2], (B, KVH, S, d), jnp.float32)
     us = time_call(lambda: jax.block_until_ready(
-        flash_attention(q, k, v, q_blk=256, kv_blk=256, interpret=True)))
+        flash_attention(q, k, v, q_blk=blk, kv_blk=blk, interpret=True)))
     flops = 2 * 2 * B * H * S * S * d * 0.5        # causal half
     bts = (q.size + k.size + v.size) * 4 + q.size * 4
-    emit("kernels/flash_prefill/B1xH8xS2048", us,
+    emit(f"kernels/flash_prefill/B1xH8xS{S}", us,
          f"tpu_roofline_us={_tpu_time_us(flops, bts):.1f};flops={flops:.3g}")
     us_ref = time_call(lambda: jax.block_until_ready(
         jax.jit(lambda a, b, c: flash_prefill_ref(a, b, c))(q, k, v)))
-    emit("kernels/flash_prefill_ref/B1xH8xS2048", us_ref, "jnp_oracle")
+    emit(f"kernels/flash_prefill_ref/B1xH8xS{S}", us_ref, "jnp_oracle")
 
     # paged decode attention: 32k context, 64 pages live
-    Bd, Hd, KVHd, dd, page, npg, maxp = 8, 8, 8, 128, 64, 512, 64
+    Bd, Hd, KVHd, dd, page, npg, maxp = \
+        pick(8, 2), 8, 8, 128, 64, pick(512, 32), pick(64, 8)
     ks = jax.random.split(key, 5)
     qd = jax.random.normal(ks[0], (Bd, Hd, dd), jnp.float32)
     kc = jax.random.normal(ks[1], (npg, page, KVHd, dd), jnp.float32)
@@ -55,11 +57,12 @@ def run() -> None:
         qd, kc, vc, tables, lengths, interpret=True)), iters=2)
     kv_bytes = 2 * Bd * maxp * page * KVHd * dd * 4
     flops_d = 2 * 2 * Bd * Hd * maxp * page * dd
-    emit("kernels/paged_attention/B8_ctx4096", us,
+    ctx = maxp * page
+    emit(f"kernels/paged_attention/B{Bd}_ctx{ctx}", us,
          f"tpu_roofline_us={_tpu_time_us(flops_d, kv_bytes):.1f}")
     us_ref = time_call(lambda: jax.block_until_ready(jax.jit(
         paged_attention_ref)(qd, kc, vc, tables, lengths)))
-    emit("kernels/paged_attention_ref/B8_ctx4096", us_ref, "jnp_oracle")
+    emit(f"kernels/paged_attention_ref/B{Bd}_ctx{ctx}", us_ref, "jnp_oracle")
 
     # fused q8 paged attention: same shape, int8 KV stream (bytes halve)
     kq, klam, kz = kv_quantize_ref(kc)
@@ -68,34 +71,36 @@ def run() -> None:
         qd, kq, klam, kz, vq, vlam, vz, tables, lengths, interpret=True)),
         iters=2)
     q8_bytes = kv_bytes / 4 + 2 * Bd * maxp * page * KVHd * 8  # int8 + scales
-    emit("kernels/paged_attention_q8/B8_ctx4096", us,
+    emit(f"kernels/paged_attention_q8/B{Bd}_ctx{ctx}", us,
          f"tpu_roofline_us={_tpu_time_us(flops_d, q8_bytes):.1f};"
          f"hbm_bytes_ratio={q8_bytes/kv_bytes:.2f}")
     note(f"[kernels] int8 KV stream cuts decode attention HBM bytes to "
          f"{q8_bytes/kv_bytes:.2f}x of bf16/fp32")
 
     # kv quantize
-    x = jax.random.normal(key, (4096, 128), jnp.float32)
+    T = pick(4096, 512)
+    x = jax.random.normal(key, (T, 128), jnp.float32)
     us = time_call(lambda: jax.block_until_ready(
         kv_quantize_op(x, interpret=True)))
-    emit("kernels/kv_quantize/T4096xd128", us,
+    emit(f"kernels/kv_quantize/T{T}xd128", us,
          f"tpu_roofline_us={_tpu_time_us(x.size*3, x.size*5):.1f}")
 
     # fused rmsnorm
-    xr = jax.random.normal(key, (4096, 4096), jnp.bfloat16)
-    s = jnp.ones((4096,), jnp.float32)
+    R = pick(4096, 512)
+    xr = jax.random.normal(key, (R, R), jnp.bfloat16)
+    s = jnp.ones((R,), jnp.float32)
     us = time_call(lambda: jax.block_until_ready(
         fused_rmsnorm_op(xr, s, interpret=True)))
-    emit("kernels/fused_rmsnorm/4096x4096", us,
+    emit(f"kernels/fused_rmsnorm/{R}x{R}", us,
          f"tpu_roofline_us={_tpu_time_us(xr.size*4, xr.size*4):.1f}")
     us_ref = time_call(lambda: jax.block_until_ready(
         jax.jit(rmsnorm_ref)(xr, s)))
-    emit("kernels/fused_rmsnorm_ref/4096x4096", us_ref, "jnp_oracle")
+    emit(f"kernels/fused_rmsnorm_ref/{R}x{R}", us_ref, "jnp_oracle")
 
     # ssd chunk scan (mamba2-2.7b-like tile: Q=128, P=64, N=128)
     from repro.kernels.ssd_scan import ssd_chunked_fused
     from repro.models.mamba2 import ssd_chunked
-    B, S, H, P, N, Q = 1, 512, 4, 64, 128, 128
+    B, S, H, P, N, Q = 1, pick(512, 256), 4, 64, 128, 128
     ks = jax.random.split(key, 4)
     xs = jax.random.normal(ks[0], (B, S, H, P))
     dts = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
@@ -106,11 +111,11 @@ def run() -> None:
         xs, dts, A, Bm, Cm, chunk=Q, interpret=True)[0]), iters=2)
     fl = 2 * B * S * (Q * N + Q * H * P + 2 * H * P * N)
     by = (xs.size + Bm.size + Cm.size) * 4 * 2
-    emit("kernels/ssd_chunk/B1xS512xH4", us,
+    emit(f"kernels/ssd_chunk/B1xS{S}xH4", us,
          f"tpu_roofline_us={_tpu_time_us(fl, by):.1f}")
     us_ref = time_call(lambda: jax.block_until_ready(jax.jit(
         lambda *a: ssd_chunked(*a, chunk=Q)[0])(xs, dts, A, Bm, Cm)))
-    emit("kernels/ssd_chunk_ref/B1xS512xH4", us_ref, "jnp_oracle")
+    emit(f"kernels/ssd_chunk_ref/B1xS{S}xH4", us_ref, "jnp_oracle")
 
 
 if __name__ == "__main__":

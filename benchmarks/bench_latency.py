@@ -6,8 +6,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, note
-from repro.core.simulator import run_sim
+from benchmarks.common import emit, note, pick
 
 
 def run(model: str = "opt-13b") -> dict:
@@ -16,7 +15,7 @@ def run(model: str = "opt-13b") -> dict:
 
     t0 = time.perf_counter()
     trace = generate_trace(TraceConfig(dataset="sharegpt", rate=2.0,
-                                       duration=150.0, seed=0))
+                                       duration=pick(150.0, 10.0), seed=0))
     fcfs = ServingSimulator(SimConfig(model=model, strategy="vllm"),
                             trace).run()
     f_lat = {r.req_id: r.e2e_latency for r in fcfs.requests}

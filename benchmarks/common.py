@@ -1,13 +1,36 @@
 """Shared benchmark helpers.  Output protocol: ``name,us_per_call,derived``
-CSV rows (one per measurement), plus human-readable tables to stderr."""
+CSV rows (one per measurement), plus human-readable tables to stderr.
+
+Smoke mode (``python -m benchmarks.run --smoke``): every section runs with
+tiny shapes — enough to exercise imports, APIs, and the result protocol
+without timing noise.  Sections pick their shapes via :func:`pick`.
+"""
 from __future__ import annotations
 
 import sys
 import time
-from typing import Callable
+from typing import Callable, List
+
+SMOKE = False          # set by benchmarks.run --smoke before sections import
+ROWS: List[str] = []   # names of every emitted row (the smoke assertion)
+
+
+def set_smoke(on: bool = True) -> None:
+    global SMOKE
+    SMOKE = on
+
+
+def is_smoke() -> bool:
+    return SMOKE
+
+
+def pick(normal, smoke):
+    """Choose a workload knob: full-size normally, tiny under --smoke."""
+    return smoke if SMOKE else normal
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append(name)
     print(f"{name},{us_per_call:.3f},{derived}")
     sys.stdout.flush()
 

@@ -1,26 +1,41 @@
 """Benchmark harness — one section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only SECTION]
+    PYTHONPATH=src python -m benchmarks.run [--only SECTION] [--smoke]
 
 Emits ``name,us_per_call,derived`` CSV on stdout; commentary on stderr.
 Sections: e2e (Fig. 2+6), memory (Fig. 8), predictor (Table 2),
 latency (Fig. 9), models (Table 3), kernels (§3.3), roofline (§g),
 cluster (beyond-paper), gateway (online serving front-end, beyond-paper).
+
+``--smoke`` runs every section with tiny shapes and asserts each one
+produced at least one result row, writing a machine-readable summary to
+``--out`` (default ``runs/bench_smoke.json``).  CI uses this to catch
+import/API drift without timing noise; a missing row or a raised exception
+fails the process.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
 
+from benchmarks import common
 from benchmarks.common import note
 
 
-def main() -> None:
+def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of sections")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes; assert every section emits a result")
+    ap.add_argument("--out", default="runs/bench_smoke.json",
+                    help="smoke-mode summary JSON path")
     args = ap.parse_args()
+    if args.smoke:
+        common.set_smoke(True)
 
     from benchmarks import (bench_cluster, bench_e2e, bench_gateway,
                             bench_hol, bench_kernels, bench_latency,
@@ -39,17 +54,40 @@ def main() -> None:
         "gateway": bench_gateway.run,
     }
     chosen = (args.only.split(",") if args.only else list(sections))
+    summary = {}
     print("name,us_per_call,derived")
     for name in chosen:
         note(f"=== bench section: {name} ===")
         t0 = time.time()
+        rows_before = len(common.ROWS)
+        err = None
         try:
             sections[name]()
         except Exception as e:  # keep the harness going; report the failure
-            note(f"[{name}] FAILED: {e!r}")
-            print(f"{name}/FAILED,0.0,{e!r}")
-        note(f"=== {name} done in {time.time()-t0:.1f}s ===")
+            err = repr(e)
+            note(f"[{name}] FAILED: {err}")
+            print(f"{name}/FAILED,0.0,{err}")
+        dt = time.time() - t0
+        # the FAILED marker is printed directly (not via emit), so ROWS
+        # counts exactly the section's real result rows
+        n_rows = len(common.ROWS) - rows_before
+        summary[name] = {"rows": n_rows, "seconds": round(dt, 2),
+                         "error": err}
+        note(f"=== {name} done in {dt:.1f}s ===")
+
+    if args.smoke:
+        out = Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(summary, indent=2))
+        note(f"[smoke] summary -> {out}")
+        bad = {k: v for k, v in summary.items()
+               if v["error"] or v["rows"] == 0}
+        if bad:
+            note(f"[smoke] FAILED sections: {sorted(bad)}")
+            return 1
+        note(f"[smoke] all {len(summary)} sections emitted results")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

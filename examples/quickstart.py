@@ -14,7 +14,6 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-import jax
 import numpy as np
 
 from repro.configs import get_smoke_config

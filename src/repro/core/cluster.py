@@ -17,20 +17,15 @@ This module is simulation-backed (the same iteration-level model as
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.configs import get_config
-from repro.core.latency_model import LatencyModel, calibrated
-from repro.core.memory_manager import MemoryConfig, TieredKVManager
 from repro.core.predictor import LengthPredictor
-from repro.core.quantization import kv_bytes_per_token
 from repro.core.request import KVLocation, Request, RequestState
-from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.core.simulator import ServingSimulator, SimConfig
-from repro.core.trace import SyntheticTrace, TraceConfig, generate_trace
+from repro.core.trace import SyntheticTrace, TraceConfig
 
 
 @dataclass

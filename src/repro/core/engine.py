@@ -16,10 +16,10 @@ generated tokens are bit-identical no matter how jobs are preempted/swapped.
 """
 from __future__ import annotations
 
+import threading
 import time
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,7 @@ from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import MemoryConfig, TieredKVManager
 from repro.core.predictor import LengthPredictor, RetrievalPredictor
 from repro.core.quantization import dequantize_np, kv_bytes_per_token, quantize_np
-from repro.core.request import KVLocation, Request, RequestState
+from repro.core.request import Request, RequestState
 from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.models.model import Model
 
@@ -61,6 +61,13 @@ class EngineConfig:
     quantize_offload: bool = True
     hbm_bytes: Optional[float] = None      # default: fits ~max_slots*max_seq
     swap_bw: float = 32e9
+    realtime_swap: bool = False            # wall-clock mode: enforce the
+                                           # modeled swap transfer time (the
+                                           # host memcpy is faster than a real
+                                           # device<->host DMA, so without
+                                           # this, swap stalls are under-
+                                           # modeled); sleeps release the GIL,
+                                           # so other replicas' pumps overlap
     strategy: str = "alise"
     n_queues: int = 4
     base_quantum: float = 0.25
@@ -110,6 +117,20 @@ class ServingEngine:
         # accumulate an unbounded buffer
         self.stream_events = False
         self._events: List[EngineEvent] = []       # drained by poll_events()
+        # concurrency: the gateway's per-engine pump runs step() in a thread
+        # executor while submit/cancel/drain/poll arrive from the event-loop
+        # thread.  step_lock serializes every state mutation; the event
+        # buffer gets its own lock so poll_events() never blocks on a step.
+        self.step_lock = threading.RLock()
+        self._events_lock = threading.Lock()
+        self._backlog_cache = 0.0                  # refreshed under step_lock
+        self._stall_debt = 0.0                     # modeled swap DMA seconds
+        # submit mailbox: lock-free-for-the-loop intake drained at the next
+        # step(), so the gateway never blocks on step_lock behind an
+        # in-flight JAX iteration (symmetric to the event buffer going the
+        # other way)
+        self._submit_box: List = []                # [(Request, now), ...]
+        self._submit_lock = threading.Lock()
 
     # ----------------------------------------------------------- cache ops
     def _cache_batch_axes(self) -> Dict[str, int]:
@@ -204,7 +225,28 @@ class ServingEngine:
         return int(jax.random.categorical(key, logits / self.cfg.temperature))
 
     # ------------------------------------------------------------ swapping
+    def _swap_stall(self, n_tokens: int, t0: float) -> None:
+        """Record the modeled transfer time of an offload/upload (residual
+        beyond the wall time the host copy already took).  Only active with
+        ``realtime_swap``: the stall stands in for device<->host DMA the
+        host thread would wait on.  It is *accumulated* here and slept off
+        at the end of step() after ``step_lock`` is released, so the
+        replica's wall timing is preserved without blocking loop-thread
+        submit/cancel/poll on the lock for the DMA duration — the sleep
+        releases the GIL, which is what the gateway's concurrent pump
+        overlaps across replicas."""
+        if not self.cfg.realtime_swap:
+            return
+        bpt = self.mem.cfg.bytes_per_token_fp
+        if self.cfg.quantize_offload:
+            bpt *= self.mem.cfg.quant_ratio   # INT8 payload (Eq. 8), same
+                                              # ratio the simulator charges
+        need = n_tokens * bpt / self.cfg.swap_bw - (time.perf_counter() - t0)
+        if need > 0:
+            self._stall_debt += need
+
     def _offload(self, req: Request) -> None:
+        t0 = time.perf_counter()
         slot = self.slot_req.index(req.req_id)
         data = self._slot_get(slot)
         length = int(data["lengths"])
@@ -220,6 +262,7 @@ class ServingEngine:
                 stored[key] = ("raw", self._trim_seq(key, arr, length))
         self.host_pool[req.req_id] = stored
         self._slot_clear(slot)
+        self._swap_stall(length, t0)
 
     def _trim_seq(self, key: str, arr: np.ndarray, length: int) -> np.ndarray:
         if key in ("k", "v"):
@@ -227,6 +270,7 @@ class ServingEngine:
         return arr
 
     def _upload(self, req: Request) -> None:
+        t0 = time.perf_counter()
         slot = self._free_slot()
         assert slot is not None
         stored = self.host_pool.pop(req.req_id)
@@ -255,59 +299,112 @@ class ServingEngine:
             data[key] = buf
         self._slot_put(slot, data)
         self.slot_req[slot] = req.req_id
+        self._swap_stall(length, t0)
 
     # ------------------------------------------------------------ main loop
     def submit(self, req: Request, now: float = 0.0) -> None:
         """Enqueue a request.  Re-entrant: a request released from another
         engine (drain / re-route) resumes from its existing ``output_tokens``
         via the recompute path, so no generated token is lost or re-emitted."""
-        self.sched.submit(req, now)
-        self._generated_of[req.req_id] = list(req.output_tokens)
+        with self.step_lock:
+            self.sched.submit(req, now)
+            self._generated_of[req.req_id] = list(req.output_tokens)
+            self._backlog_cache = self.sched.predicted_backlog()
+
+    def submit_nowait(self, req: Request, now: float = 0.0) -> None:
+        """Non-blocking intake for the concurrent pump: park the request in
+        the submit mailbox (drained at the start of the next step) instead
+        of waiting on ``step_lock`` behind an in-flight iteration.  Depth
+        and backlog signals account for parked requests immediately."""
+        with self._submit_lock:
+            self._submit_box.append((req, now))
+
+    def _drain_submit_box(self) -> None:
+        """Move mailbox arrivals into the scheduler (under step_lock)."""
+        with self._submit_lock:
+            box, self._submit_box = self._submit_box, []
+        for req, t in box:
+            self.submit(req, t)
 
     def poll_events(self) -> List[EngineEvent]:
         """Drain streaming events produced since the last poll (recorded
-        only while ``stream_events`` is set)."""
-        evs, self._events = self._events, []
+        only while ``stream_events`` is set).  Thread-safe against a step()
+        running concurrently in an executor thread."""
+        with self._events_lock:
+            evs, self._events = self._events, []
         return evs
+
+    def _emit_event(self, ev: EngineEvent) -> None:
+        with self._events_lock:
+            self._events.append(ev)
 
     def release(self, req_id: int) -> Optional[Request]:
         """Detach a live request without finishing it (drain / cancel):
         frees its slot, host-pool KV, and memory accounting.  The returned
         request can be re-submitted to any engine and will continue
         deterministically from its current ``output_tokens``."""
-        req = self.sched.live.get(req_id)
-        if req is None:
-            return None
-        if req_id in self.slot_req:
-            self._slot_clear(self.slot_req.index(req_id))
-        self.host_pool.pop(req_id, None)
-        self.sched.release(req)
-        self._generated_of.pop(req_id, None)
-        req.state = RequestState.QUEUED
-        return req
+        with self.step_lock:
+            req = self.sched.live.get(req_id)
+            if req is None:
+                return None
+            if req_id in self.slot_req:
+                self._slot_clear(self.slot_req.index(req_id))
+            self.host_pool.pop(req_id, None)
+            self.sched.release(req)
+            self._generated_of.pop(req_id, None)
+            req.state = RequestState.QUEUED
+            self._backlog_cache = self.sched.predicted_backlog()
+            return req
 
     def drain(self) -> List[Request]:
-        """Release every live request for re-enqueue elsewhere (replica
-        removal / elastic scale-down)."""
-        return [self.release(rid) for rid in list(self.sched.live.keys())]
+        """Release every live request (and any mailbox arrival not yet
+        scheduled) for re-enqueue elsewhere (replica removal / elastic
+        scale-down)."""
+        with self._submit_lock:
+            box, self._submit_box = self._submit_box, []
+        with self.step_lock:
+            out = [self.release(rid) for rid in list(self.sched.live.keys())]
+        return out + [req for req, _ in box]
 
     def cancel(self, req_id: int, t: float = 0.0) -> bool:
         """Client abort: free all engine state and emit a cancel event."""
-        req = self.release(req_id)
-        if req is None:
-            return False
-        req.state = RequestState.CANCELLED
-        req.finish_time = t
+        # parked in the submit mailbox: cancellable without the step lock
+        with self._submit_lock:
+            for i, (req, _) in enumerate(self._submit_box):
+                if req.req_id == req_id:
+                    del self._submit_box[i]
+                    req.state = RequestState.CANCELLED
+                    req.finish_time = t
+                    if self.stream_events:
+                        self._emit_event(EngineEvent("cancel", req_id, t))
+                    return True
+        with self.step_lock:
+            req = self.release(req_id)
+            if req is None:
+                return False
+            req.state = RequestState.CANCELLED
+            req.finish_time = t
         if self.stream_events:
-            self._events.append(EngineEvent("cancel", req_id, t))
+            self._emit_event(EngineEvent("cancel", req_id, t))
         return True
 
     def queue_depth(self) -> int:
-        return len(self.sched.live)
+        return len(self.sched.live) + len(self._submit_box)
 
     def predicted_backlog(self) -> float:
-        """Predicted remaining seconds of live work (routing/admission)."""
-        return self.sched.predicted_backlog()
+        """Predicted remaining seconds of live work (routing/admission).
+
+        Returns the snapshot refreshed under ``step_lock`` at the end of
+        every step/submit/release, so event-loop callers (router, admission)
+        never race a step mutating scheduler state in an executor thread.
+        Between engine-state changes the cache is exact, which keeps
+        virtual-clock routing decisions bit-identical to a fresh compute.
+        Mailbox arrivals not yet scheduled contribute their prefill
+        estimate so back-to-back dispatches don't all see a stale zero."""
+        with self._submit_lock:
+            pending = sum(self.latency.prefill_time(req.prompt_len)
+                          for req, _ in self._submit_box)
+        return self._backlog_cache + pending
 
     def serve(self, requests: List[Request], realtime: bool = False,
               max_wall_s: float = 600.0) -> List[Request]:
@@ -342,16 +439,23 @@ class ServingEngine:
         def now() -> float:
             return t
 
-        if True:
+        with self.step_lock:
+            self._drain_submit_box()
             plan = self.sched.plan(now())
 
             for r in plan.drop:            # recompute-strategy eviction
-                slot = self.slot_req.index(r.req_id)
-                self._slot_clear(slot)
+                # under very tight HBM the planned victim's KV may already
+                # live in the host pool (offloaded earlier) rather than a slot
+                if r.req_id in self.slot_req:
+                    self._slot_clear(self.slot_req.index(r.req_id))
+                else:
+                    self.host_pool.pop(r.req_id, None)
                 self.mem.drop(r)
                 r.state = RequestState.QUEUED
                 r.preempt_count += 1
             for r in plan.swap_out:
+                if r.req_id not in self.slot_req:
+                    continue               # already off-slot; nothing to move
                 self._offload(r)
                 self.mem.offload(r, now())
                 r.state = RequestState.PREEMPTED
@@ -390,8 +494,10 @@ class ServingEngine:
                 t0 = time.perf_counter()
                 tokens = np.zeros((self.cfg.max_slots, 1), np.int32)
                 active = np.zeros((self.cfg.max_slots,), bool)
+                slot_of = {}           # pinned: a mid-loop spill may evict
                 for r in runnable:
                     slot = self.slot_req.index(r.req_id)
+                    slot_of[r.req_id] = slot
                     prev = (generated_of[r.req_id][-1]
                             if generated_of[r.req_id] else r.prompt_tokens[-1])
                     tokens[slot, 0] = prev
@@ -408,24 +514,44 @@ class ServingEngine:
                 self.iter_times.append((ctx_tokens, len(runnable),
                                         time.perf_counter() - t0))
                 for r in runnable:
-                    slot = self.slot_req.index(r.req_id)
-                    tok = self._sample(logits[slot])
+                    # the token must be accepted even if a neighbor's
+                    # mem.grow() spill offloaded r mid-loop: this decode
+                    # already wrote r's fed token's KV (and advanced any SSM
+                    # state) into the snapshot, so skipping would re-feed the
+                    # same token after swap-in and duplicate its KV row —
+                    # accepting keeps the "last sampled token's KV not yet
+                    # written" invariant intact for the host-pool copy
+                    tok = self._sample(logits[slot_of[r.req_id]])
                     self._accept_token(r, tok, generated_of, now())
                 ran_any = True
 
+            self._backlog_cache = self.sched.predicted_backlog()
+            stall, self._stall_debt = self._stall_debt, 0.0
+        if stall > 0:
+            time.sleep(stall)              # modeled swap DMA, lock released
         return ran_any
+
+    def step_and_poll(self, t: float) -> Tuple[bool, List[EngineEvent]]:
+        """One iteration plus its events, as a single executor-friendly call
+        (the gateway pump runs this off the event loop; events produced by
+        the step are returned atomically so the caller can dispatch them in
+        loop-thread order)."""
+        ran = self.step(t)
+        return ran, self.poll_events()
 
     def _accept_token(self, req: Request, tok: int, generated_of, t: float):
         req.generated += 1
         generated_of[req.req_id].append(tok)
         req.output_tokens.append(tok)
         if self.stream_events:
-            self._events.append(EngineEvent(
+            self._emit_event(EngineEvent(
                 "token", req.req_id, t, token=tok,
                 index=len(req.output_tokens) - 1))
         if req.first_token_time is None:
             req.first_token_time = t
-        if not self.mem.grow(req):
+        # a request spilled mid-iteration by an earlier neighbor's grow()
+        # lives in DRAM now; its byte growth is settled at upload time
+        if self.mem.resident_hbm(req) and not self.mem.grow(req):
             # engine HBM exhausted mid-iteration: offload highest-EWT resident
             others = [r for r in self.sched.live.values()
                       if self.mem.resident_hbm(r) and r.req_id != req.req_id]
@@ -447,11 +573,13 @@ class ServingEngine:
               and req.generated >= req.true_out_len):
             reason = "true_len"
         if reason:
-            slot = self.slot_req.index(req.req_id)
-            self._slot_clear(slot)
+            if req.req_id in self.slot_req:
+                self._slot_clear(self.slot_req.index(req.req_id))
+            else:
+                self.host_pool.pop(req.req_id, None)   # finished off-slot
             self.sched.note_finished(req, t)
             if self.stream_events:
-                self._events.append(EngineEvent(
+                self._emit_event(EngineEvent(
                     "finish", req.req_id, t, reason=reason))
         else:
             self.sched.note_generated(req, t)

@@ -12,8 +12,8 @@ the scheduler via EWT ordering and executed through :meth:`offload` /
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, List
 
 from repro.core.request import KVLocation, Request
 

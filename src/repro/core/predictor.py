@@ -133,12 +133,24 @@ class LengthPredictor:
     """Interface used by the scheduler."""
 
     name = "base"
+    _lat_sum = 0.0
+    _lat_n = 0
 
     def predict(self, tokens: Sequence[int], true_len: Optional[int] = None) -> Prediction:
         raise NotImplementedError
 
     def update(self, tokens: Sequence[int], true_len: int) -> None:
         pass
+
+    def _note_latency(self, latency_s: float) -> None:
+        self._lat_sum += latency_s
+        self._lat_n += 1
+
+    def mean_latency_s(self) -> float:
+        """Running mean of observed prediction latency.  The gateway's
+        TTFT-attainment admission adds this to its expected-TTFT estimate
+        (the paper's Table 2 counts prediction time against TTFT)."""
+        return self._lat_sum / self._lat_n if self._lat_n else 0.0
 
 
 class RetrievalPredictor(LengthPredictor):
@@ -167,8 +179,10 @@ class RetrievalPredictor(LengthPredictor):
         else:
             src = "retrieval"
         self.stats[src] += 1
+        lat = time.perf_counter() - t0
+        self._note_latency(lat)
         return Prediction(length=max(int(round(est)), 1), source=src,
-                          latency_s=time.perf_counter() - t0)
+                          latency_s=lat)
 
     def update(self, tokens, true_len: int) -> None:
         emb = self.encoder.encode(tokens)
@@ -210,8 +224,10 @@ class ProxyPredictor(LengthPredictor):
         est = self.mlp.predict(emb)
         # proxy models are coarser (bucket classifiers); extra multiplicative noise
         est *= float(np.exp(self._rng.normal(0.0, self.noise)))
+        lat = time.perf_counter() - t0 + self.extra_latency_s
+        self._note_latency(lat)
         return Prediction(length=max(int(round(est)), 1), source="mlp",
-                          latency_s=time.perf_counter() - t0 + self.extra_latency_s)
+                          latency_s=lat)
 
     def pretrain(self, token_lists, lengths, epochs: int = 60) -> float:
         X = np.stack([self.encoder.encode(t) for t in token_lists])

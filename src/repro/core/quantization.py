@@ -15,9 +15,7 @@ is what keeps attention quality acceptable for K tensors.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -20,9 +20,8 @@ Baselines:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import TieredKVManager

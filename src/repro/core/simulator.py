@@ -27,7 +27,7 @@ from repro.core.predictor import (DefaultPredictor, LengthPredictor,
                                   RetrievalPredictor)
 from repro.core.quantization import kv_bytes_per_token
 from repro.core.request import KVLocation, Request, RequestState
-from repro.core.scheduler import Plan, Scheduler, SchedulerConfig
+from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.core.trace import SyntheticTrace, TraceConfig, generate_trace
 
 

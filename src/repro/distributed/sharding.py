@@ -13,7 +13,7 @@ the §Perf hillclimbs.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Dict
 
 import jax
 import numpy as np

@@ -2,7 +2,6 @@
 quantized-KV paged decode attention."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

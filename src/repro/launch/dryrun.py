@@ -19,7 +19,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import SHAPES, ASSIGNED_ARCHS, cell_is_supported, get_config
 from repro.distributed.ctx import mesh_context
@@ -83,7 +82,6 @@ def parse_collectives(hlo_text: str, scan_trip_counts: dict) -> dict:
                 ops = re.findall(r"([a-z]+[0-9]*\[[0-9,]*\](?:\{[0-9,]*\})?)", args)
                 nbytes = sum(_shape_bytes(o) for o in ops)
                 if nbytes == 0:   # fall back to result type
-                    head = ls.split("=", 1)[0:1]
                     m = re.search(r"([a-z]+[0-9]*\[[0-9,]*\])", ls.split("=", 1)[-1])
                     nbytes = _shape_bytes(m.group(1)) if m else 0
                 per_kind[kind] += nbytes * current_scale

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
+from typing import Optional
 
 import jax
 import numpy as np
@@ -71,9 +72,16 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                   n_requests: int = 32, n_engines: int = 2,
                   max_slots: int = 4, router: str = "ewt",
                   interactive_frac: float = 0.25, seed: int = 0,
-                  predictor_kind: str = "oracle", virtual_dt: float = 0.05):
+                  predictor_kind: str = "oracle",
+                  virtual_dt: Optional[float] = 0.05,
+                  pump: str = "concurrent",
+                  ttft_target_interactive: Optional[float] = None,
+                  ttft_target_batch: Optional[float] = None,
+                  ttft_miss_policy: str = "shed"):
     """Replay a synthetic Poisson trace through the online Gateway and print
-    per-class TTFT/E2E percentiles."""
+    per-class TTFT/E2E percentiles (and SLO attainment when targets are
+    set).  ``virtual_dt=None`` serves in wall clock; ``pump`` selects the
+    concurrent per-engine pump or the lockstep barrier there."""
     cfg = get_smoke_config(arch)
     model = Model(cfg, attn_chunk=32, remat=False)
     params = model.init(jax.random.PRNGKey(seed))
@@ -97,13 +105,18 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
             r.slo_class = SLOClass.INTERACTIVE
 
     gw = Gateway([mk_engine() for _ in range(n_engines)],
-                 GatewayConfig(virtual_dt=virtual_dt, router_policy=router),
+                 GatewayConfig(virtual_dt=virtual_dt, router_policy=router,
+                               concurrent_pump=(pump == "concurrent")),
                  admission=AdmissionConfig(
                      max_queue_depth=max(8 * n_engines * max_slots, 32),
-                     defer_high_watermark=4 * n_engines * max_slots))
+                     defer_high_watermark=4 * n_engines * max_slots,
+                     ttft_target_interactive=ttft_target_interactive,
+                     ttft_target_batch=ttft_target_batch,
+                     ttft_miss_policy=ttft_miss_policy))
     streams = asyncio.run(gw.replay(reqs))
     done = sum(1 for s in streams if s.finished)
-    print(f"[gateway] {strategy}/{router} x{n_engines} engines, "
+    clock = "virtual" if virtual_dt is not None else f"wall/{pump}"
+    print(f"[gateway] {strategy}/{router} x{n_engines} engines ({clock}), "
           f"{dataset}@{rate}/s: {done}/{len(reqs)} streams finished")
     print(gw.metrics.format())
     return streams, gw
@@ -129,13 +142,31 @@ def main():
     ap.add_argument("--router", default="ewt",
                     choices=["ewt", "join_shortest_queue", "round_robin"])
     ap.add_argument("--interactive-frac", type=float, default=0.25)
+    ap.add_argument("--wall", action="store_true",
+                    help="gateway mode: serve in wall clock (default is "
+                         "deterministic virtual-clock replay)")
+    ap.add_argument("--pump", default="concurrent",
+                    choices=["concurrent", "lockstep"],
+                    help="wall-clock pump: per-engine executor tasks or the "
+                         "lockstep barrier")
+    ap.add_argument("--ttft-target-interactive", type=float, default=None,
+                    help="TTFT SLO target (s) for interactive traffic; "
+                         "enables TTFT-attainment admission")
+    ap.add_argument("--ttft-target-batch", type=float, default=None)
+    ap.add_argument("--ttft-miss-policy", default="shed",
+                    choices=["shed", "defer", "observe"])
     args = ap.parse_args()
     if args.gateway:
         serve_gateway(args.arch, args.strategy, args.dataset, args.rate,
                       args.n_requests, args.n_engines, args.max_slots,
                       router=args.router,
                       interactive_frac=args.interactive_frac,
-                      predictor_kind=args.predictor)
+                      predictor_kind=args.predictor,
+                      virtual_dt=None if args.wall else 0.05,
+                      pump=args.pump,
+                      ttft_target_interactive=args.ttft_target_interactive,
+                      ttft_target_batch=args.ttft_target_batch,
+                      ttft_miss_policy=args.ttft_miss_policy)
     else:
         serve(args.arch, args.strategy, args.n_requests, args.max_slots,
               predictor_kind=args.predictor)

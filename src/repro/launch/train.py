@@ -10,10 +10,8 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, get_smoke_config
-from repro.distributed.ctx import mesh_context
 from repro.models.model import Model
 from repro.training.checkpoint import (latest_step, restore_checkpoint,
                                        save_checkpoint)

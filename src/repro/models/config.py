@@ -6,7 +6,7 @@ assigned input shapes are :class:`ShapeSpec` entries in :data:`SHAPES`.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 

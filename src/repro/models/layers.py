@@ -6,9 +6,6 @@ path is used by smoke tests (1 CPU device) and the 512-chip dry-run (pjit).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.distributed.ctx import shard_hint
 from repro.models.config import ArchConfig
 from repro.models.layers import _dense_init, apply_norm, init_norm
 

@@ -8,9 +8,7 @@ leading axis and iterated with ``lax.scan`` so the lowered HLO stays small for
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

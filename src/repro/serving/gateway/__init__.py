@@ -12,14 +12,15 @@ Layers (each its own module):
   * ``metrics``   — per-class TTFT/TPOT/E2E percentile + goodput telemetry.
 """
 from repro.serving.gateway.admission import (AdmissionConfig,
-                                             AdmissionController, Verdict)
+                                             AdmissionController, MissPolicy,
+                                             Verdict)
 from repro.serving.gateway.metrics import ClassMetrics, GatewayMetrics
 from repro.serving.gateway.router import EngineDriver, GatewayRouter
 from repro.serving.gateway.server import (Gateway, GatewayConfig,
                                           RequestStream)
 
 __all__ = [
-    "AdmissionConfig", "AdmissionController", "Verdict",
+    "AdmissionConfig", "AdmissionController", "MissPolicy", "Verdict",
     "ClassMetrics", "GatewayMetrics",
     "EngineDriver", "GatewayRouter",
     "Gateway", "GatewayConfig", "RequestStream",

@@ -3,8 +3,9 @@
 Maps the two service classes onto ALISE's MLFQ bands (scheduler-side) and
 onto front-door policy (gateway-side):
 
-  * INTERACTIVE — always admitted (the paper's latency-critical traffic;
-    enters the scheduler's top band via ``SchedulerConfig.interactive_level_cap``).
+  * INTERACTIVE — admitted unless its TTFT target would be missed (the
+    paper's latency-critical traffic; enters the scheduler's top band via
+    ``SchedulerConfig.interactive_level_cap``).
   * BATCH — absorbs backpressure first.  Two watermark mechanisms:
 
       - *defer* (hysteresis): when total live depth crosses
@@ -15,6 +16,17 @@ onto front-door policy (gateway-side):
       - *shed* (hard): above ``max_queue_depth`` live requests or
         ``max_backlog_s`` of predicted remaining work (the same Eq. 6-7
         EWT signal the router uses), new batch work is rejected outright.
+
+TTFT-attainment admission (proxy-predictor-style latency gating): when a
+per-class ``ttft_target_*`` is set, the gateway computes the request's
+*expected* TTFT — the best replica's ``predicted_backlog()`` (EWT queueing
+delay) plus the latency-model prefill estimate plus the predictor's own
+mean prediction latency — and gates on it.  A request whose target would be
+missed is shed (interactive default: fail fast so the client can retry a
+healthier cell) or deferred (batch default: the target only shapes the
+holding queue), per ``ttft_miss_policy``.  Admitting work that is already
+doomed to miss its deadline would only steal capacity from requests that
+can still make theirs.
 """
 from __future__ import annotations
 
@@ -31,6 +43,12 @@ class Verdict(enum.Enum):
     SHED = "shed"
 
 
+class MissPolicy(str, enum.Enum):
+    SHED = "shed"
+    DEFER = "defer"
+    OBSERVE = "observe"       # record attainment but never gate on it
+
+
 @dataclass
 class AdmissionConfig:
     max_queue_depth: int = 256             # shed batch above this many live
@@ -38,11 +56,22 @@ class AdmissionConfig:
     defer_high_watermark: Optional[int] = None   # park batch at/above this
     defer_low_watermark: Optional[int] = None    # resume below this
     interactive_hard_cap: Optional[int] = None   # None = never shed interactive
+    # --- TTFT-attainment admission (None = disabled for that class)
+    ttft_target_interactive: Optional[float] = None   # seconds
+    ttft_target_batch: Optional[float] = None
+    ttft_miss_policy: MissPolicy = MissPolicy.SHED    # interactive misses
+    ttft_slack: float = 1.0                # gate on slack * expected_ttft
 
     def __post_init__(self):
         if self.defer_high_watermark is not None \
                 and self.defer_low_watermark is None:
             self.defer_low_watermark = max(self.defer_high_watermark // 2, 1)
+        self.ttft_miss_policy = MissPolicy(self.ttft_miss_policy)
+
+    def ttft_target(self, slo_class: SLOClass) -> Optional[float]:
+        return (self.ttft_target_interactive
+                if slo_class == SLOClass.INTERACTIVE
+                else self.ttft_target_batch)
 
 
 class AdmissionController:
@@ -51,17 +80,43 @@ class AdmissionController:
     def __init__(self, cfg: Optional[AdmissionConfig] = None):
         self.cfg = cfg or AdmissionConfig()
         self._deferring = False
+        self.ttft_misses_predicted = 0     # gate decisions taken on TTFT
 
-    def decide(self, req: Request, depth: int, backlog_s: float) -> Verdict:
-        """depth/backlog_s: totals across all live engine replicas."""
+    # ------------------------------------------------------- TTFT gating
+    def _ttft_verdict(self, req: Request,
+                      expected_ttft: Optional[float]) -> Optional[Verdict]:
+        target = self.cfg.ttft_target(req.slo_class)
+        if target is None or expected_ttft is None:
+            return None
+        if self.cfg.ttft_slack * expected_ttft <= target:
+            return None
+        self.ttft_misses_predicted += 1
+        if self.cfg.ttft_miss_policy == MissPolicy.OBSERVE:
+            return None                    # record the miss, never gate
+        if req.slo_class == SLOClass.BATCH:
+            return Verdict.DEFER           # targets shape the holding queue
+        if self.cfg.ttft_miss_policy == MissPolicy.SHED:
+            return Verdict.SHED
+        return Verdict.DEFER
+
+    # ----------------------------------------------------------- verdicts
+    def decide(self, req: Request, depth: int, backlog_s: float,
+               expected_ttft: Optional[float] = None) -> Verdict:
+        """depth/backlog_s: totals across all live engine replicas;
+        expected_ttft: the gateway's per-request TTFT estimate (None when
+        TTFT admission is disabled)."""
         cfg = self.cfg
         if req.slo_class == SLOClass.INTERACTIVE:
             if (cfg.interactive_hard_cap is not None
                     and depth >= cfg.interactive_hard_cap):
                 return Verdict.SHED
-            return Verdict.ADMIT
+            v = self._ttft_verdict(req, expected_ttft)
+            return v if v is not None else Verdict.ADMIT
         if depth >= cfg.max_queue_depth or backlog_s >= cfg.max_backlog_s:
             return Verdict.SHED
+        v = self._ttft_verdict(req, expected_ttft)
+        if v is not None:
+            return v
         if cfg.defer_high_watermark is not None:
             if self._deferring:
                 if depth < cfg.defer_low_watermark:
@@ -72,6 +127,21 @@ class AdmissionController:
                 self._deferring = True
                 return Verdict.DEFER
         return Verdict.ADMIT
+
+    def may_release_ttft(self, req: Request, expected_ttft: float,
+                         intrinsic_ttft: float) -> bool:
+        """May a TTFT-deferred request be dispatched now?  Hold while the
+        queueing term is what predicts the miss (waiting can still help);
+        release once the gate clears, or once the miss is intrinsic
+        (elapsed + prefill alone blow the target — nothing left to wait
+        out, so FIFO proceeds and the miss is recorded in attainment)."""
+        target = self.cfg.ttft_target(req.slo_class)
+        if target is None \
+                or self.cfg.ttft_miss_policy == MissPolicy.OBSERVE:
+            return True
+        if self.cfg.ttft_slack * expected_ttft <= target:
+            return True
+        return self.cfg.ttft_slack * intrinsic_ttft > target
 
     def may_release(self, depth: int) -> bool:
         """May a previously deferred batch request be admitted now?

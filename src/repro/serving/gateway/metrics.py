@@ -10,7 +10,7 @@ virtual seconds in replay mode), so percentiles are comparable across both.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -33,6 +33,8 @@ class ClassMetrics:
     cancelled: int = 0
     shed: int = 0
     deferred: int = 0          # admission defer decisions (not unique reqs)
+    timed_out: int = 0         # aborted before first token (wall budget)
+    ttft_target: Optional[float] = None   # SLO target (s); None = untracked
 
     def record_first_token(self, req: Request, t: float) -> None:
         self.ttft.append(t - req.arrival_time)
@@ -45,11 +47,23 @@ class ClassMetrics:
             self.tpot.append((t - req.first_token_time)
                              / (req.generated - 1))
 
+    def slo_attainment(self) -> float:
+        """Fraction of *arrivals* whose TTFT met the target; sheds and
+        pre-first-token aborts count as misses, so neither shedding nor
+        timing out can game the SLO."""
+        if self.ttft_target is None:
+            return float("nan")
+        n = len(self.ttft) + self.shed + self.timed_out
+        if n == 0:
+            return float("nan")
+        met = sum(1 for t in self.ttft if t <= self.ttft_target)
+        return met / n
+
     def summary(self) -> Dict[str, float]:
         return {
             "completed": self.completed, "shed": self.shed,
             "cancelled": self.cancelled, "deferred": self.deferred,
-            "tokens": self.tokens,
+            "timed_out": self.timed_out, "tokens": self.tokens,
             "ttft_p50": percentile(self.ttft, 50),
             "ttft_p90": percentile(self.ttft, 90),
             "ttft_p99": percentile(self.ttft, 99),
@@ -57,6 +71,9 @@ class ClassMetrics:
             "tpot_p99": percentile(self.tpot, 99),
             "e2e_p50": percentile(self.e2e, 50),
             "e2e_p99": percentile(self.e2e, 99),
+            "ttft_target": (float("nan") if self.ttft_target is None
+                            else self.ttft_target),
+            "slo_attainment": self.slo_attainment(),
         }
 
 
@@ -71,6 +88,10 @@ class GatewayMetrics:
 
     def of(self, req: Request) -> ClassMetrics:
         return self.per_class[req.slo_class]
+
+    def set_ttft_target(self, slo_class: SLOClass,
+                        target: Optional[float]) -> None:
+        self.per_class[slo_class].ttft_target = target
 
     @property
     def duration(self) -> float:
@@ -102,10 +123,15 @@ class GatewayMetrics:
                  f"{self.token_throughput():.1f} tok/s"]
         for c, m in self.per_class.items():
             s = m.summary()
+            slo = ""
+            if m.ttft_target is not None:
+                slo = (f" SLO(ttft<={m.ttft_target:.2f}s)="
+                       f"{s['slo_attainment']*100:.1f}%")
             lines.append(
                 f"  {c.value:>11}: done={s['completed']:<4d} "
                 f"shed={s['shed']:<3d} "
                 f"TTFT p50/p99={s['ttft_p50']:.3f}/{s['ttft_p99']:.3f}s "
                 f"TPOT p50={s['tpot_p50']*1e3:.1f}ms "
-                f"E2E p50/p99={s['e2e_p50']:.3f}/{s['e2e_p99']:.3f}s")
+                f"E2E p50/p99={s['e2e_p50']:.3f}/{s['e2e_p99']:.3f}s"
+                + slo)
         return "\n".join(lines)

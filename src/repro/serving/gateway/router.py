@@ -15,7 +15,7 @@ neither lost nor re-emitted — the client stream just keeps going.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.cluster import pick_replica
 from repro.core.engine import ServingEngine
@@ -46,6 +46,10 @@ class GatewayRouter:
             d.engine.stream_events = True
         self.owner: Dict[int, EngineDriver] = {}   # req_id -> driver
         self._rr = 0
+        # set by the gateway while the concurrent pump runs: dispatch goes
+        # through the engine's submit mailbox instead of blocking on its
+        # step lock behind an in-flight iteration
+        self.nowait = False
 
     # ------------------------------------------------------------ topology
     def alive_drivers(self) -> List[EngineDriver]:
@@ -78,7 +82,10 @@ class GatewayRouter:
                          backlog=lambda d: d.predicted_backlog())
         if self.policy == "round_robin":
             self._rr += 1
-        d.engine.submit(req, now)
+        if self.nowait:
+            d.engine.submit_nowait(req, now)
+        else:
+            d.engine.submit(req, now)
         self.owner[req.req_id] = d
         return d
 
@@ -88,3 +95,17 @@ class GatewayRouter:
 
     def total_backlog(self) -> float:
         return sum(d.predicted_backlog() for d in self.alive_drivers())
+
+    def peek_driver(self) -> Optional[EngineDriver]:
+        """The replica the *configured policy* would dispatch the next
+        request to, without committing (rr counter untouched).  Its
+        predicted backlog is the queueing-delay term of the gateway's
+        expected-TTFT estimate — gating on the replica actually about to
+        receive the request, whatever the policy (None with no live
+        replicas)."""
+        alive = self.alive_drivers()
+        if not alive:
+            return None
+        return pick_replica(self.policy, alive, rr_counter=self._rr,
+                            queue_len=lambda d: d.queue_depth(),
+                            backlog=lambda d: d.predicted_backlog())

@@ -10,22 +10,31 @@ through per-request async queues:
         ...
     await gw.run_until_drained()
 
-Clock domains: with ``virtual_dt`` set the gateway runs a deterministic
-virtual clock that advances one ``virtual_dt`` per engine iteration round
-(lockstep across replicas, like the cluster simulator's tick) — used by
-trace replay, tests, and benchmarks.  With ``virtual_dt=None`` the gateway
-uses wall time and sleeps while idle.
+Pump model — one pump per engine, two clock domains:
+
+  * **Wall clock** (``virtual_dt=None``): one asyncio pump task per engine
+    replica drives ``engine.step()`` through a shared thread executor, so
+    JAX compute overlaps across replicas instead of queueing behind one
+    slow prefill or swap-in (the head-of-line blocking ALISE removes at the
+    queue level must not be reintroduced at the execution level).  Each
+    pump backs off exponentially while its engine is idle and posts events
+    back to the event loop, which owns all stream/metrics state.
+  * **Virtual clock** (``virtual_dt`` set): a deterministic barrier pump
+    steps every engine once per round and advances the clock one
+    ``virtual_dt`` per round — bit-reproducible trace replay for tests and
+    benchmarks.
 
 Correctness invariant inherited from the engine: with greedy sampling and
 quantization off, streamed tokens are bit-identical to the batch
 ``ServingEngine.serve()`` output regardless of admission order, routing,
-preemption, swapping, or drain-and-requeue.
+preemption, swapping, drain-and-requeue, or pump concurrency.
 """
 from __future__ import annotations
 
 import asyncio
 import time
 from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Union
 
@@ -57,6 +66,10 @@ class RequestStream:
             raise StopAsyncIteration
         ev = await self._queue.get()
         if ev is None:
+            # close is per-consumer idempotent: hand the sentinel back so a
+            # concurrent consumer already parked in get() wakes up too
+            # (otherwise it would wait forever on a queue nobody refills)
+            self._queue.put_nowait(None)
             raise StopAsyncIteration
         return ev
 
@@ -85,7 +98,10 @@ class GatewayConfig:
     router_policy: str = "ewt"         # ewt | join_shortest_queue | round_robin
     virtual_dt: Optional[float] = None  # virtual seconds per iteration round;
                                         # None => wall clock
-    idle_sleep_s: float = 0.0005
+    idle_sleep_s: float = 0.0005        # initial per-pump idle backoff
+    max_idle_sleep_s: float = 0.02      # per-pump idle backoff cap
+    concurrent_pump: bool = True        # wall clock: per-engine pump tasks
+                                        # (False = legacy lockstep loop)
     max_wall_s: float = 600.0           # hard wall-time bound on replay/drain
 
 
@@ -101,10 +117,21 @@ class Gateway:
         else:
             self.admission = AdmissionController(admission)
         self.metrics = GatewayMetrics()
+        self.metrics.set_ttft_target(
+            SLOClass.INTERACTIVE, self.admission.cfg.ttft_target_interactive)
+        self.metrics.set_ttft_target(
+            SLOClass.BATCH, self.admission.cfg.ttft_target_batch)
         self.streams: Dict[int, RequestStream] = {}
         self.deferred: Deque[Request] = deque()
         self._vclock = 0.0
         self._wall0: Optional[float] = None
+        # concurrent-pump state (wall-clock mode only); each pump owns a
+        # single-worker executor so replicas never contend for step threads
+        # (and elastic add_engine scales the thread count with it)
+        self._pump_tasks: List[asyncio.Task] = []
+        self._pump_stop = False
+        self._progress: Optional[asyncio.Event] = None
+        self._executors: List[ThreadPoolExecutor] = []
 
     # ----------------------------------------------------------------- time
     def now(self) -> float:
@@ -115,6 +142,31 @@ class Gateway:
         return time.perf_counter() - self._wall0
 
     # ---------------------------------------------------------------- intake
+    def _ttft_terms(self, req: Request):
+        """(queueing_wait, intrinsic) TTFT terms for ``req``: the predicted
+        backlog of the replica the router would actually dispatch to
+        (Eq. 6-7 signal), and the request's own prefill estimate plus the
+        predictor's mean prediction latency (Table 2 counts prediction time
+        against TTFT).  None with no live replicas."""
+        target = self.router.peek_driver()
+        if target is None:
+            return None
+        eng = target.engine
+        intrinsic = (eng.latency.prefill_time(req.prompt_len)
+                     + eng.predictor.mean_latency_s())
+        return target.predicted_backlog(), intrinsic
+
+    def expected_ttft(self, req: Request) -> Optional[float]:
+        """Per-request TTFT estimate for admission.  Returns None when no
+        TTFT target is configured for the class (estimate unused)."""
+        if self.admission.cfg.ttft_target(req.slo_class) is None:
+            return None
+        terms = self._ttft_terms(req)
+        if terms is None:
+            return None
+        wait, intrinsic = terms
+        return wait + intrinsic
+
     def submit(self, req: Request, now: Optional[float] = None) -> RequestStream:
         """Admission decision + (if admitted) dispatch.  Always returns a
         stream; a shed request's stream carries a single ``shed`` event."""
@@ -125,7 +177,8 @@ class Gateway:
         self.streams[req.req_id] = stream
         depth = self.router.total_depth() + len(self.deferred)
         verdict = self.admission.decide(req, depth,
-                                        self.router.total_backlog())
+                                        self.router.total_backlog(),
+                                        expected_ttft=self.expected_ttft(req))
         stream.verdict = verdict
         if verdict == Verdict.SHED:
             req.state = RequestState.FAILED
@@ -177,12 +230,19 @@ class Gateway:
         return len(moved)
 
     def add_engine(self, engine: ServingEngine) -> None:
-        self.router.add_engine(engine)
+        d = self.router.add_engine(engine)
+        # a live concurrent pump grows a task (and step thread) for the
+        # new replica
+        if self._pump_tasks and not self._pump_stop:
+            self._spawn_pump(d)
 
     # ------------------------------------------------------------ event pump
     def _dispatch_event(self, ev: EngineEvent) -> None:
         stream = self.streams.get(ev.req_id)
-        if stream is None:
+        if stream is None or stream.closed:
+            # closed: already terminal (wall-timeout abort, cancel) — late
+            # engine events must not reopen metrics (e.g. a timed_out
+            # request also counting as completed)
             return
         req = stream.request
         if ev.kind == "token":
@@ -211,6 +271,9 @@ class Gateway:
         for stream in self.streams.values():
             if not stream.closed:
                 stream.request.state = RequestState.FAILED
+                if stream.emitted == 0:
+                    # no first token ever: an SLO miss, not a served request
+                    self.metrics.of(stream.request).timed_out += 1
                 stream._push(EngineEvent("timeout", stream.request.req_id, t,
                                          reason=reason))
                 stream._close()
@@ -218,11 +281,25 @@ class Gateway:
     def _release_deferred(self, t: float) -> None:
         while self.deferred and self.admission.may_release(
                 self.router.total_depth()):
+            req = self.deferred[0]
+            if self.admission.cfg.ttft_target(req.slo_class) is not None:
+                # TTFT-deferred work re-checks its gate with waiting time
+                # included: holding is only useful while the backlog term
+                # is what predicts the miss
+                terms = self._ttft_terms(req)
+                if terms is not None:
+                    wait, intrinsic = terms
+                    elapsed = max(t - req.arrival_time, 0.0)
+                    if not self.admission.may_release_ttft(
+                            req, elapsed + wait + intrinsic,
+                            elapsed + intrinsic):
+                        break              # head-of-line holds (FIFO)
             self.router.dispatch(self.deferred.popleft(), t)
 
     def pump_once(self) -> bool:
-        """One lockstep iteration over all live engines; returns whether any
-        engine made progress."""
+        """One lockstep barrier iteration over all live engines; returns
+        whether any engine made progress.  This is the virtual-clock pump
+        (deterministic round order) and the legacy wall-clock path."""
         t = self.now()
         self._release_deferred(t)
         ran = False
@@ -235,6 +312,72 @@ class Gateway:
             self._vclock += self.cfg.virtual_dt
         return ran
 
+    # ----------------------------------------------- concurrent pump (wall)
+    async def _pump_engine(self, d, executor: ThreadPoolExecutor) -> None:
+        """Per-engine pump task: step this replica through its own executor
+        worker so its JAX compute overlaps with the other replicas',
+        dispatch the step's events on the loop thread, back off
+        exponentially when idle."""
+        loop = asyncio.get_running_loop()
+        backoff = self.cfg.idle_sleep_s
+        while not self._pump_stop and d.alive:
+            t = self.now()
+            self._release_deferred(t)
+            if d.engine.queue_depth() > 0:
+                ran, evs = await loop.run_in_executor(
+                    executor, d.engine.step_and_poll, t)
+                for ev in evs:
+                    self._dispatch_event(ev)
+                if ran or evs:
+                    backoff = self.cfg.idle_sleep_s
+                    if self._progress is not None:
+                        self._progress.set()
+                    await asyncio.sleep(0)   # let consumers run
+                    continue
+            await asyncio.sleep(backoff)
+            backoff = min(backoff * 2, self.cfg.max_idle_sleep_s)
+
+    def _spawn_pump(self, d) -> None:
+        ex = ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix=f"pump-{d.name}")
+        self._executors.append(ex)
+        self._pump_tasks.append(
+            asyncio.ensure_future(self._pump_engine(d, ex)))
+
+    def start_pumps(self) -> None:
+        """Spawn one pump task (with its own step thread) per live engine;
+        wall-clock mode only."""
+        assert self.cfg.virtual_dt is None, \
+            "concurrent pumps are wall-clock only; virtual mode is a barrier"
+        if self._pump_tasks:
+            return
+        self._pump_stop = False
+        self._progress = asyncio.Event()
+        self.router.nowait = True          # dispatch via submit mailboxes
+        for d in self.router.alive_drivers():
+            self._spawn_pump(d)
+
+    async def stop_pumps(self) -> None:
+        """Stop pump tasks (each finishes its in-flight step), then flush
+        any events still buffered so no token is dropped at shutdown.
+        Cleanup always runs; the first pump failure is re-raised after."""
+        self._pump_stop = True
+        results = []
+        if self._pump_tasks:
+            results = await asyncio.gather(*self._pump_tasks,
+                                           return_exceptions=True)
+        self._pump_tasks = []
+        self.router.nowait = False
+        for ex in self._executors:
+            ex.shutdown(wait=True)
+        self._executors = []
+        for d in self.router.drivers:
+            for ev in d.engine.poll_events():
+                self._dispatch_event(ev)
+        for r in results:
+            if isinstance(r, BaseException):
+                raise r
+
     # ------------------------------------------------------------ run loops
     def _live(self) -> bool:
         return bool(self.router.total_depth() or self.deferred)
@@ -246,7 +389,52 @@ class Gateway:
 
     async def replay(self, requests: List[Request]) -> List[RequestStream]:
         """Replay a trace (requests with arrival_time set) through admission,
-        routing, and the engines; returns one stream per request."""
+        routing, and the engines; returns one stream per request.  Wall-clock
+        mode uses the concurrent per-engine pump (unless disabled); virtual
+        mode uses the deterministic barrier."""
+        if self.cfg.virtual_dt is None and self.cfg.concurrent_pump:
+            return await self._replay_concurrent(requests)
+        return await self._replay_lockstep(requests)
+
+    async def _replay_concurrent(self, requests: List[Request]
+                                 ) -> List[RequestStream]:
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        streams: List[RequestStream] = []
+        i = 0
+        wall0 = time.perf_counter()
+        self.metrics.start_t = self.now()
+        self.start_pumps()
+        try:
+            while i < len(pending) or self._live():
+                if time.perf_counter() - wall0 > self.cfg.max_wall_s:
+                    self._abort_open_streams()
+                    break
+                t = self.now()
+                while i < len(pending) and pending[i].arrival_time <= t:
+                    streams.append(self.submit(pending[i], now=t))
+                    i += 1
+                if i < len(pending):
+                    # sleep toward the next arrival (bounded so drain
+                    # progress keeps being observed)
+                    gap = pending[i].arrival_time - self.now()
+                    await asyncio.sleep(min(max(gap, 0.0), 0.05))
+                else:
+                    # idle until a pump reports progress (or a short tick,
+                    # so deferred releases and the wall bound stay checked)
+                    self._progress.clear()
+                    if self._live():
+                        try:
+                            await asyncio.wait_for(self._progress.wait(),
+                                                   timeout=0.05)
+                        except asyncio.TimeoutError:
+                            pass
+        finally:
+            await self.stop_pumps()
+        self.metrics.end_t = self.now()
+        return streams
+
+    async def _replay_lockstep(self, requests: List[Request]
+                               ) -> List[RequestStream]:
         pending = sorted(requests, key=lambda r: r.arrival_time)
         streams: List[RequestStream] = []
         i = 0

@@ -3,7 +3,7 @@ moment tensors inheriting the fully-sharded param specs)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, NamedTuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,8 @@ class AdamWConfig:
 
 
 def init_opt_state(params) -> Dict[str, Any]:
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return {"m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
             "step": jnp.zeros((), jnp.int32)}

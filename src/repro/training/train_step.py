@@ -1,11 +1,9 @@
 """Train/serve step builders shared by the launcher, smoke tests and dry-run."""
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.distributed.collectives import compress_grads_int8
 from repro.models.model import Model

@@ -1,6 +1,5 @@
 """Checkpoint/restart + elastic reshard + deterministic data pipeline."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,5 +1,4 @@
 """Cluster-scale routing, failure replay, elastic scaling."""
-import numpy as np
 import pytest
 
 from repro.core.cluster import ClusterConfig, ClusterRouter

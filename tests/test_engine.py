@@ -1,7 +1,6 @@
 """Real-engine integration: the strongest system invariant — scheduling must
 never change greedy outputs — plus swap/recompute/quantized paths."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,6 +1,8 @@
 """Online gateway integration: streaming bit-identity vs the batch engine,
-SLO-aware admission under overload, and lossless drain-and-requeue."""
+SLO-aware admission under overload, lossless drain-and-requeue, the
+concurrent per-engine pump (wall clock), and TTFT-attainment admission."""
 import asyncio
+import time
 
 import jax
 import numpy as np
@@ -14,7 +16,7 @@ from repro.core.request import (Request, RequestState, SLOClass,
 from repro.core.trace import TraceConfig, clamp_requests, generate_trace
 from repro.models.model import Model
 from repro.serving.gateway import (AdmissionConfig, Gateway, GatewayConfig,
-                                   Verdict)
+                                   MissPolicy, RequestStream, Verdict)
 from repro.serving.gateway.metrics import percentile
 
 
@@ -206,3 +208,182 @@ def test_async_stream_consumption_overlaps_serving(model_and_params):
     assert kinds.count("token") == 12 and kinds[-1] == "finish"
     # at least one token event was consumed while the request was still live
     assert any(depth > 0 for kind, depth in seen if kind == "token")
+
+
+# --------------------------------------------------- concurrent pump (wall)
+
+def test_wallclock_concurrent_pump_bit_identical(model_and_params):
+    """The per-engine executor pump (wall clock, 2 replicas) streams exactly
+    the batch ServingEngine.serve() tokens — greedy determinism survives
+    concurrent stepping."""
+    cfg, model, params = model_and_params
+    reset_request_counter()
+    reqs = poisson_requests(cfg, n=12, rate=40.0)
+    ref_reqs = clone_for_batch(reqs)
+    ref_eng = mk_engine(model, params, max_slots=8)
+    ref_eng.serve(ref_reqs)
+    ref = [list(r.output_tokens) for r in ref_reqs]
+
+    gw = Gateway([mk_engine(model, params), mk_engine(model, params)],
+                 GatewayConfig(virtual_dt=None, concurrent_pump=True,
+                               max_wall_s=120.0))
+    streams = asyncio.run(gw.replay(reqs))
+    assert [s.token_values for s in streams] == ref
+    assert all(s.finished for s in streams)
+    assert gw.metrics.completed() == 12
+    assert not gw._pump_tasks            # pumps shut down cleanly
+
+
+@pytest.mark.slow
+def test_wallclock_soak_live_poisson(model_and_params):
+    """Soak: live Poisson arrivals served by 3 replicas under the concurrent
+    pump with swap churn — every stream's tokens match its request exactly
+    (none lost, none duplicated) AND the batch reference bit-for-bit
+    (greedy + raw offload is lossless, so tight-HBM spills must not corrupt
+    KV), and drain time is bounded."""
+    from repro.core.quantization import kv_bytes_per_token
+
+    cfg, model, params = model_and_params
+    acfg = model.cfg
+    bpt = kv_bytes_per_token(acfg.num_layers, acfg.num_kv_heads, acfg.hd)
+    reset_request_counter()
+    reqs = poisson_requests(cfg, n=48, rate=30.0, seed=7)
+    ref_reqs = clone_for_batch(reqs)
+    ref_eng = mk_engine(model, params, max_slots=8)
+    ref_eng.serve(ref_reqs)
+    ref = [list(r.output_tokens) for r in ref_reqs]
+
+    def mk():
+        # tight HBM + modeled swap DMA: the stall the concurrent pump hides
+        return ServingEngine(model, params, EngineConfig(
+            max_slots=2, max_seq_len=64, max_new_tokens=24,
+            strategy="alise", quantize_offload=False,
+            hbm_bytes=1.5 * 64 * bpt, swap_bw=1e5, realtime_swap=True),
+            predictor=OraclePredictor())
+
+    gw = Gateway([mk(), mk(), mk()],
+                 GatewayConfig(virtual_dt=None, concurrent_pump=True,
+                               max_wall_s=240.0))
+    t0 = time.perf_counter()
+    streams = asyncio.run(gw.replay(reqs))
+    drain_s = time.perf_counter() - t0
+    assert drain_s < 180.0               # bounded drain on a 2-core runner
+    assert len(streams) == 48
+    for s, r in zip(streams, reqs):
+        assert s.finished
+        assert s.token_values == list(r.output_tokens)   # no loss, no dup
+        assert len(s.token_values) == r.true_out_len
+    assert [s.token_values for s in streams] == ref      # bit-identical
+    assert gw.metrics.completed() == 48
+    # all three replicas actually served work
+    assert all(d.engine.sched.finished for d in gw.router.drivers)
+
+
+# ------------------------------------------------- TTFT-attainment admission
+
+def test_ttft_admission_sheds_doomed_interactive(model_and_params):
+    """With a TTFT target set, interactive arrivals whose expected TTFT
+    (predicted backlog + prefill estimate) exceeds the target are shed at
+    the door, and per-class SLO attainment is exported."""
+    cfg, model, params = model_and_params
+    reset_request_counter()
+    rng = np.random.default_rng(5)
+    reqs = []
+    for k in range(20):
+        reqs.append(Request(
+            prompt_len=8, arrival_time=round(k * 0.01, 3), true_out_len=20,
+            prompt_tokens=rng.integers(2, cfg.vocab_size, 8).tolist(),
+            slo_class=SLOClass.INTERACTIVE))
+    gw = Gateway([mk_engine(model, params)], GatewayConfig(virtual_dt=0.05),
+                 admission=AdmissionConfig(ttft_target_interactive=0.5))
+    streams = asyncio.run(gw.replay(reqs))
+    mi = gw.metrics.per_class[SLOClass.INTERACTIVE]
+    # early arrivals (empty backlog) admitted; late ones predicted to miss
+    assert streams[0].verdict == Verdict.ADMIT
+    assert mi.shed > 0
+    assert gw.admission.ttft_misses_predicted > 0
+    s = mi.summary()
+    assert s["ttft_target"] == 0.5
+    # attainment counts sheds as misses: met / (served + shed)
+    met = sum(1 for t in mi.ttft if t <= 0.5)
+    assert s["slo_attainment"] == pytest.approx(met / (len(mi.ttft) + mi.shed))
+    # every shed stream closed with a single shed event
+    for st in streams:
+        if st.verdict == Verdict.SHED:
+            assert [ev.kind for ev in st.events_log] == ["shed"]
+
+
+def test_ttft_observe_policy_never_gates(model_and_params):
+    """MissPolicy.OBSERVE records attainment but admits everything —
+    interactive AND batch (batch must not fall through to the defer
+    branch)."""
+    cfg, model, params = model_and_params
+    reset_request_counter()
+    rng = np.random.default_rng(6)
+    reqs = [Request(prompt_len=8, arrival_time=0.0, true_out_len=12,
+                    prompt_tokens=rng.integers(2, cfg.vocab_size, 8).tolist(),
+                    slo_class=(SLOClass.INTERACTIVE if k % 2 == 0
+                               else SLOClass.BATCH)) for k in range(10)]
+    gw = Gateway([mk_engine(model, params)], GatewayConfig(virtual_dt=0.05),
+                 admission=AdmissionConfig(ttft_target_interactive=1e-6,
+                                           ttft_target_batch=1e-6,
+                                           ttft_miss_policy=MissPolicy.OBSERVE))
+    streams = asyncio.run(gw.replay(reqs))
+    assert all(s.verdict == Verdict.ADMIT for s in streams)
+    for c in (SLOClass.INTERACTIVE, SLOClass.BATCH):
+        assert gw.metrics.per_class[c].shed == 0
+        assert gw.metrics.per_class[c].deferred == 0
+    assert gw.metrics.completed() == 10
+    assert gw.admission.ttft_misses_predicted > 0   # recorded, not gated
+
+
+def test_ttft_deferred_batch_holds_then_drains(model_and_params):
+    """A batch request deferred for a predicted TTFT miss is *held* while
+    the queueing backlog is what predicts the miss (not released on the
+    next tick), and still drains to completion — no livelock."""
+    cfg, model, params = model_and_params
+    reset_request_counter()
+    rng = np.random.default_rng(8)
+    reqs = [Request(prompt_len=8, arrival_time=round(k * 0.01, 3),
+                    true_out_len=16,
+                    prompt_tokens=rng.integers(2, cfg.vocab_size, 8).tolist())
+            for k in range(16)]
+    gw = Gateway([mk_engine(model, params)], GatewayConfig(virtual_dt=0.05),
+                 admission=AdmissionConfig(ttft_target_batch=0.6))
+    streams = asyncio.run(gw.replay(reqs))
+    mb = gw.metrics.per_class[SLOClass.BATCH]
+    assert mb.deferred > 0                   # the gate actually deferred
+    assert gw.admission.ttft_misses_predicted > 0
+    assert all(s.finished for s in streams)  # and everything still drained
+    assert mb.completed + mb.shed == 16
+
+
+# ------------------------------------------------------- stream close race
+
+def test_stream_close_wakes_all_parked_consumers():
+    """Regression: _close() pushes one sentinel; if consumer A takes it
+    while consumer B is already parked in queue.get(), B used to hang
+    forever.  Close is now per-consumer idempotent (the sentinel is handed
+    back on consumption)."""
+    reset_request_counter()
+    req = Request(prompt_len=4, arrival_time=0.0, true_out_len=4,
+                  prompt_tokens=[2, 3, 4, 5])
+    stream = RequestStream(req)
+
+    async def run():
+        async def consume():
+            return [ev async for ev in stream]
+
+        t1 = asyncio.ensure_future(consume())
+        t2 = asyncio.ensure_future(consume())
+        await asyncio.sleep(0.01)        # both parked in queue.get()
+        stream._close()
+        stream._close()                  # idempotent
+        return await asyncio.wait_for(asyncio.gather(t1, t2), timeout=5.0)
+
+    got1, got2 = asyncio.run(run())
+    assert got1 == [] and got2 == []
+    # a consumer arriving after close terminates immediately too
+    async def late():
+        return [ev async for ev in stream]
+    assert asyncio.run(asyncio.wait_for(late(), timeout=5.0)) == []

@@ -1,5 +1,4 @@
 """TieredKVManager unit + hypothesis property tests."""
-import numpy as np
 import pytest
 from optional_hypothesis import given, settings, st
 
@@ -40,7 +39,7 @@ def test_offload_quantizes_to_half_bytes():
     assert r.kv_quantized
     assert op.bytes == pytest.approx(20 * BPT * 0.5)
     assert mem.used_hbm == 0
-    op2 = mem.upload(r, now=1.0)
+    mem.upload(r, now=1.0)
     assert r.kv_location == KVLocation.HBM
     assert not r.kv_quantized
     assert mem.used_dram == 0

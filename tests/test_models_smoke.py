@@ -1,6 +1,5 @@
 """Per-arch reduced-config smoke tests: one forward/train step on CPU,
 shape + finiteness asserts (assignment requirement f)."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ request-level snapshot/restore (the swap unit ALISE moves between tiers).
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.kernels.paged_attention import paged_decode_attention
 from repro.serving.kv_cache import PagedKVConfig, PagedKVPool

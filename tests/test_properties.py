@@ -1,12 +1,11 @@
 """Hypothesis property tests on system invariants."""
-import numpy as np
 import pytest
 from optional_hypothesis import given, settings, st
 
 from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import MemoryConfig, TieredKVManager
 from repro.core.predictor import HashedNgramEncoder, OraclePredictor
-from repro.core.request import Request, RequestState
+from repro.core.request import Request
 from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.core.simulator import SimConfig, ServingSimulator
 from repro.core.trace import SyntheticTrace, TraceConfig

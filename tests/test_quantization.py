@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from optional_hypothesis import given, settings, st
 
 from repro.core.quantization import (dequantize, dequantize_np,

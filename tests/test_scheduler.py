@@ -1,11 +1,10 @@
 """Unit tests for the ALISE scheduler (priority, aging, demotion, Alg. 2)."""
-import numpy as np
 import pytest
 
 from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import MemoryConfig, TieredKVManager
 from repro.core.predictor import OraclePredictor
-from repro.core.request import KVLocation, Request, RequestState
+from repro.core.request import Request, RequestState
 from repro.core.scheduler import Scheduler, SchedulerConfig
 
 LM = LatencyModel(t0=1e-4, alpha=1e-6, beta=0.01)

@@ -1,9 +1,7 @@
 """End-to-end simulator behaviour: the paper's headline claims, in test form."""
-import numpy as np
 import pytest
 
-from repro.core.simulator import SimConfig, ServingSimulator, run_sim
-from repro.core.trace import SyntheticTrace, TraceConfig, generate_trace
+from repro.core.simulator import run_sim
 
 
 def test_all_strategies_complete_everything():
