@@ -12,7 +12,8 @@ import time
 from typing import Callable, List
 
 SMOKE = False          # set by benchmarks.run --smoke before sections import
-ROWS: List[str] = []   # names of every emitted row (the smoke assertion)
+ROWS: List[tuple] = []  # (name, us_per_call, derived) of every emitted row
+                        # (smoke assertion + the perf-trajectory artifact)
 
 
 def set_smoke(on: bool = True) -> None:
@@ -30,7 +31,7 @@ def pick(normal, smoke):
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    ROWS.append(name)
+    ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.3f},{derived}")
     sys.stdout.flush()
 

@@ -12,17 +12,56 @@ produced at least one result row, writing a machine-readable summary to
 ``--out`` (default ``runs/bench_smoke.json``).  CI uses this to catch
 import/API drift without timing noise; a missing row or a raised exception
 fails the process.
+
+``--perf-out PATH`` additionally writes a ``BENCH_<pr>.json``
+perf-trajectory artifact: the headline throughput numbers (fused decode
+tokens/s per backend, gateway wall tokens/s) plus every raw result row, so
+future PRs can diff their artifact against a baseline's.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import re
 import sys
 import time
 from pathlib import Path
 
 from benchmarks import common
 from benchmarks.common import note
+
+# rows whose ``derived`` tok_per_s lands in the artifact's headline metrics
+PERF_METRIC_PREFIXES = ("e2e/engine_decode/", "gateway/wall/")
+
+
+def _perf_metrics() -> dict:
+    """Pull headline throughputs out of the emitted rows."""
+    metrics = {}
+    for name, _us, derived in common.ROWS:
+        if not name.startswith(PERF_METRIC_PREFIXES):
+            continue
+        m = re.search(r"tok_per_s=([0-9.]+)", derived)
+        if m:
+            metrics[name] = {"tok_per_s": float(m.group(1))}
+        elif derived.endswith("x"):
+            metrics[name] = {"speedup": float(derived.rstrip("x"))}
+    return metrics
+
+
+def write_perf_artifact(path: str, pr: str, summary: dict) -> None:
+    out = Path(path)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({
+        "pr": pr,
+        "timestamp": time.time(),
+        "smoke": common.is_smoke(),
+        "metrics": _perf_metrics(),
+        "sections": summary,
+        "rows": [{"name": n, "us_per_call": u, "derived": d}
+                 for n, u, d in common.ROWS],
+    }, indent=2))
+    note(f"[perf] trajectory artifact -> {out}")
 
 
 def main() -> int:
@@ -33,6 +72,12 @@ def main() -> int:
                     help="tiny shapes; assert every section emits a result")
     ap.add_argument("--out", default="runs/bench_smoke.json",
                     help="smoke-mode summary JSON path")
+    ap.add_argument("--perf-out", default=None,
+                    help="write a BENCH_<pr>.json perf-trajectory artifact "
+                         "here (decode tokens/s, gateway wall throughput)")
+    ap.add_argument("--pr", default=None,
+                    help="PR identifier recorded in the perf artifact "
+                         "(default: $PR_NUMBER or 'local')")
     args = ap.parse_args()
     if args.smoke:
         common.set_smoke(True)
@@ -74,6 +119,10 @@ def main() -> int:
         summary[name] = {"rows": n_rows, "seconds": round(dt, 2),
                          "error": err}
         note(f"=== {name} done in {dt:.1f}s ===")
+
+    if args.perf_out:
+        pr = args.pr or os.environ.get("PR_NUMBER") or "local"
+        write_perf_artifact(args.perf_out, pr, summary)
 
     if args.smoke:
         out = Path(args.out)

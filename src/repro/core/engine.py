@@ -2,24 +2,36 @@
 an actual JAX model (paper §3.3).
 
 The engine drives the same Scheduler / TieredKVManager as the simulator, but
-executes true ``Model.prefill`` / ``Model.decode_step`` calls:
+executes true ``Model.prefill`` / fused decode calls over a pluggable
+:class:`~repro.serving.kv_cache.KVBackend`:
 
-  * slot-based decode batch (fixed shapes => one compiled decode_step);
+  * decode lanes ("slots") give the batch a fixed shape => one compiled step;
+    storage is either the dense slotted cache or the paged KV pool
+    (``EngineConfig.kv_backend``);
+  * the decode hot path is **one fused jitted dispatch per iteration**:
+    embedding, layer stack, KV writes, attention, sampling (greedy or
+    temperature/top-k) and EOS/length termination all run on device — the
+    host syncs a single ``(tokens, reasons)`` pair instead of one
+    ``int(jnp.argmax(...))`` per slot (``fused_decode=False`` keeps the
+    legacy per-slot dispatch for comparison);
   * request-level KV swapping between the device cache ("HBM") and a host
-    numpy pool ("DRAM"), INT8-quantized on offload per the paper's Eq. 8;
+    pool ("DRAM"), quantized INT8 *on device* via the Pallas kv_quant
+    kernels per the paper's Eq. 8 — the host link carries the INT8 payload;
   * recompute strategy re-runs prefill over prompt+generated tokens;
-  * greedy/temperature sampling; EOS or length termination;
-  * per-iteration wall-time profiling used to fit the Eq. 3-5 latency model.
+  * per-iteration wall-time profiling (bounded ring buffers) used to fit
+    the Eq. 3-5 latency model.
 
 Correctness invariant (tested): with greedy sampling and quantization off,
-generated tokens are bit-identical no matter how jobs are preempted/swapped.
+generated tokens are bit-identical no matter how jobs are preempted/swapped,
+and identical across the dense and paged backends.
 """
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,10 +40,13 @@ import numpy as np
 from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import MemoryConfig, TieredKVManager
 from repro.core.predictor import LengthPredictor, RetrievalPredictor
-from repro.core.quantization import dequantize_np, kv_bytes_per_token, quantize_np
+from repro.core.quantization import kv_bytes_per_token
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import Scheduler, SchedulerConfig
 from repro.models.model import Model
+from repro.serving.kv_cache import (DenseKVBackend, KVBackendConfig,
+                                    PagedKVBackend)
+from repro.serving.sampler import REASONS, temperature as sample_temperature
 
 
 @dataclass
@@ -58,6 +73,7 @@ class EngineConfig:
     eos_token: int = 1
     greedy: bool = True
     temperature: float = 1.0
+    top_k: int = 0
     quantize_offload: bool = True
     hbm_bytes: Optional[float] = None      # default: fits ~max_slots*max_seq
     swap_bw: float = 32e9
@@ -68,6 +84,13 @@ class EngineConfig:
                                            # this, swap stalls are under-
                                            # modeled); sleeps release the GIL,
                                            # so other replicas' pumps overlap
+    kv_backend: str = "dense"              # dense | paged
+    page_size: int = 16                    # paged backend page granularity
+    paged_attn_impl: str = "gather"        # gather (bit-exact vs dense) |
+                                           # kernel (Pallas paged attention)
+    fused_decode: bool = True              # one in-jit dispatch per iter
+                                           # (False: legacy per-slot sampling)
+    profile_window: int = 4096             # iter/prefill ring-buffer size
     strategy: str = "alise"
     n_queues: int = 4
     base_quantum: float = 0.25
@@ -91,7 +114,8 @@ class ServingEngine:
             hbm_bytes=hbm, dram_bytes=1e12, bytes_per_token_fp=bpt,
             swap_bw=cfg.swap_bw, quantize_offload=cfg.quantize_offload,
             reserve_policy="reserve_max" if cfg.strategy == "orca" else "ondemand",
-            reserve_max_tokens=cfg.max_new_tokens)
+            reserve_max_tokens=cfg.max_new_tokens,
+            page_size=(cfg.page_size if cfg.kv_backend == "paged" else None))
         self.mem = TieredKVManager(mem_cfg)
         self.predictor = predictor or RetrievalPredictor(seed=cfg.seed)
         self.latency = latency or LatencyModel(t0=1e-4, alpha=1e-6, beta=1e-2)
@@ -102,16 +126,30 @@ class ServingEngine:
             max_new_tokens=cfg.max_new_tokens)
         self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
 
-        # --- device state: slotted decode cache
-        self.cache = model.init_cache(cfg.max_slots, cfg.max_seq_len)
-        self.slot_req: List[Optional[int]] = [None] * cfg.max_slots
+        # --- device state: the pluggable KV backend owns slots + storage
+        bcfg = KVBackendConfig(
+            max_slots=cfg.max_slots, max_seq_len=cfg.max_seq_len,
+            eos_token=cfg.eos_token, max_new_tokens=cfg.max_new_tokens,
+            greedy=cfg.greedy, temperature=cfg.temperature, top_k=cfg.top_k,
+            quantize_offload=cfg.quantize_offload, page_size=cfg.page_size,
+            attn_impl=cfg.paged_attn_impl, seed=cfg.seed)
+        if cfg.kv_backend == "paged":
+            if not cfg.fused_decode:
+                raise ValueError("the paged backend only implements the "
+                                 "fused in-JIT decode step")
+            num_pages = max(1, int(hbm // (cfg.page_size * bpt)))
+            self.kv = PagedKVBackend(model, bcfg, num_pages)
+        elif cfg.kv_backend == "dense":
+            self.kv = DenseKVBackend(model, bcfg)
+        else:
+            raise ValueError(f"unknown kv_backend: {cfg.kv_backend!r}")
         self.host_pool: Dict[int, dict] = {}       # req_id -> offloaded KV
-        self._axes = self._cache_batch_axes()
-        self._decode = jax.jit(model.decode_step)
         self._prefill = jax.jit(model.prefill)
-        self.iter_times: List[tuple] = []          # (ctx_tokens, batch, seconds)
-        self.prefill_times: List[tuple] = []
+        # bounded profiling rings: week-long gateway serves must not leak
+        self.iter_times: Deque[tuple] = deque(maxlen=cfg.profile_window)
+        self.prefill_times: Deque[tuple] = deque(maxlen=cfg.profile_window)
         self._generated_of: Dict[int, List[int]] = {}
+        self._sample_count = 0                     # host-side sampling key
         # streaming events: recorded only when a front-end opts in (the
         # gateway sets this), so plain step() drivers that never poll don't
         # accumulate an unbounded buffer
@@ -132,53 +170,11 @@ class ServingEngine:
         self._submit_box: List = []                # [(Request, now), ...]
         self._submit_lock = threading.Lock()
 
-    # ----------------------------------------------------------- cache ops
-    def _cache_batch_axes(self) -> Dict[str, int]:
-        fam = self.model.cfg.family
-        axes = {"lengths": 0}
-        if fam == "ssm":
-            axes.update(conv=1, ssm=1)
-        elif fam == "hybrid":
-            axes.update(k=1, v=1, conv=2, ssm=2)
-        else:
-            axes.update(k=1, v=1)
-            if self.model.cfg.is_encoder_decoder:
-                axes.update(xk=1, xv=1)
-        return axes
-
-    def _slot_get(self, slot: int) -> Dict[str, np.ndarray]:
-        out = {}
-        for key, arr in self.cache.items():
-            ax = self._axes[key]
-            out[key] = np.asarray(jax.device_get(
-                jnp.take(arr, slot, axis=ax)))
-        return out
-
-    def _slot_put(self, slot: int, data: Dict[str, np.ndarray]) -> None:
-        new = {}
-        for key, arr in self.cache.items():
-            ax = self._axes[key]
-            idx = [slice(None)] * arr.ndim
-            idx[ax] = slot
-            new[key] = arr.at[tuple(idx)].set(jnp.asarray(data[key], arr.dtype))
-        self.cache = new
-
-    def _slot_clear(self, slot: int) -> None:
-        idx_len = self.cache["lengths"].at[slot].set(0)
-        self.cache = {**self.cache, "lengths": idx_len}
-        self.slot_req[slot] = None
-
-    def _free_slot(self) -> Optional[int]:
-        for i, rid in enumerate(self.slot_req):
-            if rid is None:
-                return i
-        return None
-
     # -------------------------------------------------------------- prefill
     def _run_prefill(self, req: Request, tokens: List[int]) -> int:
-        """Prefill `tokens`, place KV into a free slot; returns sampled token."""
-        slot = self._free_slot()
-        assert slot is not None, "caller must check slot availability"
+        """Prefill `tokens`, place KV into a free lane; returns sampled token."""
+        assert self.kv.free_slot() is not None, \
+            "caller must check slot availability"
         t0 = time.perf_counter()
         S = len(tokens)
         fam = self.model.cfg.family
@@ -193,36 +189,20 @@ class ServingEngine:
                      "last_index": jnp.asarray([S - 1], jnp.int32)}
         logits, pcache = self._prefill(self.params, batch)
         nxt = self._sample(logits[0])
-        # write the prefill cache into the slot
-        S = len(tokens)
-        data = {}
-        for key, arr in self.cache.items():
-            ax = self._axes[key]
-            slot_shape = list(arr.shape)
-            del slot_shape[ax]
-            if key == "lengths":
-                data[key] = np.asarray(S, np.int32)
-                continue
-            src = np.asarray(jax.device_get(jnp.take(pcache[key], 0, axis=ax)))
-            buf = np.zeros(slot_shape, arr.dtype)
-            if key in ("k", "v"):           # seq axis: trim bucket pad, pad to Smax
-                sl = [slice(None)] * len(slot_shape)
-                sl[1] = slice(0, S)
-                buf[tuple(sl)] = src[:, :S]
-            else:
-                buf[...] = src
-            data[key] = buf
-        self._slot_put(slot, data)
-        self.slot_req[slot] = req.req_id
+        self.kv.write_prefill(req.req_id, pcache, S)
         dt = time.perf_counter() - t0
         self.prefill_times.append((S, dt))
         return int(nxt)
 
     def _sample(self, logits: jnp.ndarray) -> int:
+        """Host-side sampling (prefill first-token + legacy per-slot path)."""
         if self.cfg.greedy:
             return int(jnp.argmax(logits))
-        key = jax.random.PRNGKey(int(time.time_ns()) % (2**31))
-        return int(jax.random.categorical(key, logits / self.cfg.temperature))
+        self._sample_count += 1
+        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
+                                 self._sample_count)
+        return int(sample_temperature(logits, key, self.cfg.temperature,
+                                      self.cfg.top_k))
 
     # ------------------------------------------------------------ swapping
     def _swap_stall(self, n_tokens: int, t0: float) -> None:
@@ -247,59 +227,20 @@ class ServingEngine:
 
     def _offload(self, req: Request) -> None:
         t0 = time.perf_counter()
-        slot = self.slot_req.index(req.req_id)
-        data = self._slot_get(slot)
-        length = int(data["lengths"])
-        stored = {"lengths": length}
-        for key, arr in data.items():
-            if key == "lengths":
-                continue
-            if self.cfg.quantize_offload and key in ("k", "v"):
-                trimmed = self._trim_seq(key, arr, length)
-                q, lam, z = quantize_np(trimmed, bits=8, axis=-1)
-                stored[key] = ("q8", q, lam, z, trimmed.dtype.name)
-            else:
-                stored[key] = ("raw", self._trim_seq(key, arr, length))
-        self.host_pool[req.req_id] = stored
-        self._slot_clear(slot)
-        self._swap_stall(length, t0)
-
-    def _trim_seq(self, key: str, arr: np.ndarray, length: int) -> np.ndarray:
-        if key in ("k", "v"):
-            return arr[:, :length] if arr.ndim >= 2 else arr
-        return arr
+        blob = self.kv.offload(req.req_id)
+        self.host_pool[req.req_id] = blob
+        self._swap_stall(blob["lengths"], t0)
 
     def _upload(self, req: Request) -> None:
         t0 = time.perf_counter()
-        slot = self._free_slot()
-        assert slot is not None
-        stored = self.host_pool.pop(req.req_id)
-        length = stored["lengths"]
-        data = {}
-        for key, arr in self.cache.items():
-            ax = self._axes[key]
-            slot_shape = list(arr.shape)
-            del slot_shape[ax]
-            if key == "lengths":
-                data[key] = np.asarray(length, np.int32)
-                continue
-            item = stored[key]
-            if item[0] == "q8":
-                _, q, lam, z, dt = item
-                src = dequantize_np(q, lam, z, dtype=np.float32)
-            else:
-                src = item[1]
-            buf = np.zeros(slot_shape, arr.dtype)
-            if key in ("k", "v"):
-                sl = [slice(None)] * len(slot_shape)
-                sl[1] = slice(0, length)
-                buf[tuple(sl)] = src
-            else:
-                buf[...] = src
-            data[key] = buf
-        self._slot_put(slot, data)
-        self.slot_req[slot] = req.req_id
-        self._swap_stall(length, t0)
+        blob = self.host_pool.pop(req.req_id)
+        self.kv.upload(req.req_id, blob)
+        self._swap_stall(blob["lengths"], t0)
+
+    def _drop_kv(self, req_id: int) -> None:
+        """Delete all engine-side KV for a request (slot/pages + host pool)."""
+        self.kv.clear(req_id)
+        self.host_pool.pop(req_id, None)
 
     # ------------------------------------------------------------ main loop
     def submit(self, req: Request, now: float = 0.0) -> None:
@@ -340,16 +281,14 @@ class ServingEngine:
 
     def release(self, req_id: int) -> Optional[Request]:
         """Detach a live request without finishing it (drain / cancel):
-        frees its slot, host-pool KV, and memory accounting.  The returned
-        request can be re-submitted to any engine and will continue
+        frees its lane/pages, host-pool KV, and memory accounting.  The
+        returned request can be re-submitted to any engine and will continue
         deterministically from its current ``output_tokens``."""
         with self.step_lock:
             req = self.sched.live.get(req_id)
             if req is None:
                 return None
-            if req_id in self.slot_req:
-                self._slot_clear(self.slot_req.index(req_id))
-            self.host_pool.pop(req_id, None)
+            self._drop_kv(req_id)
             self.sched.release(req)
             self._generated_of.pop(req_id, None)
             req.state = RequestState.QUEUED
@@ -432,6 +371,26 @@ class ServingEngine:
                 time.sleep(0.0005)
         return requests
 
+    def _reserve_pages(self, runnable: List[Request], t: float
+                       ) -> List[Request]:
+        """Paged backend: decoding one token may cross a page boundary for
+        some requests; when the pool can't supply the fresh pages, spill the
+        largest-context runnable requests (the same victim rule as the
+        mid-iteration HBM spill) until the rest fit.  The dense backend
+        never has a shortfall (every slot owns a full stripe)."""
+        runnable = list(runnable)
+        while runnable:
+            short = self.kv.pages_shortfall([r.req_id for r in runnable])
+            if short <= 0:
+                break
+            victim = max(runnable, key=lambda r: r.context_len)
+            runnable.remove(victim)
+            self._offload(victim)
+            self.mem.offload(victim, t)
+            victim.state = RequestState.PREEMPTED
+            victim.preempt_count += 1
+        return runnable
+
     def step(self, t: float) -> bool:
         """One scheduling + execution iteration; returns whether work ran."""
         generated_of = self._generated_of
@@ -446,22 +405,19 @@ class ServingEngine:
             for r in plan.drop:            # recompute-strategy eviction
                 # under very tight HBM the planned victim's KV may already
                 # live in the host pool (offloaded earlier) rather than a slot
-                if r.req_id in self.slot_req:
-                    self._slot_clear(self.slot_req.index(r.req_id))
-                else:
-                    self.host_pool.pop(r.req_id, None)
+                self._drop_kv(r.req_id)
                 self.mem.drop(r)
                 r.state = RequestState.QUEUED
                 r.preempt_count += 1
             for r in plan.swap_out:
-                if r.req_id not in self.slot_req:
+                if not self.kv.has(r.req_id):
                     continue               # already off-slot; nothing to move
                 self._offload(r)
                 self.mem.offload(r, now())
                 r.state = RequestState.PREEMPTED
                 r.preempt_count += 1
             for r in plan.swap_in:
-                if self._free_slot() is None:
+                if self.kv.free_slot() is None:
                     continue               # retry next iteration
                 self._upload(r)
                 self.mem.upload(r, now())
@@ -471,7 +427,7 @@ class ServingEngine:
             ran_any = False
             # fresh prefills + recomputes
             for r in plan.prefill + plan.recompute:
-                if self._free_slot() is None:
+                if self.kv.free_slot() is None:
                     continue               # slots (not bytes) exhausted
                 # cache invariant: the most recent sampled token's KV is not
                 # yet written (the next decode step feeds it), so a recompute
@@ -489,27 +445,38 @@ class ServingEngine:
                     self._accept_token(r, tok, generated_of, now())
 
             # decode batch
-            runnable = [r for r in plan.run if r.req_id in self.slot_req]
+            runnable = [r for r in plan.run if self.kv.has(r.req_id)]
+            if runnable and self.cfg.kv_backend == "paged":
+                runnable = self._reserve_pages(runnable, now())
             if runnable:
                 t0 = time.perf_counter()
-                tokens = np.zeros((self.cfg.max_slots, 1), np.int32)
-                active = np.zeros((self.cfg.max_slots,), bool)
+                B = self.cfg.max_slots
+                tokens = np.zeros((B, 1), np.int32)
+                active = np.zeros((B,), bool)
+                new_gen = np.zeros((B,), np.int32)
+                new_ctx = np.zeros((B,), np.int32)
+                true_len = np.full((B,), np.iinfo(np.int32).max, np.int32)
                 slot_of = {}           # pinned: a mid-loop spill may evict
                 for r in runnable:
-                    slot = self.slot_req.index(r.req_id)
+                    slot = self.kv.slot_of(r.req_id)
                     slot_of[r.req_id] = slot
                     prev = (generated_of[r.req_id][-1]
                             if generated_of[r.req_id] else r.prompt_tokens[-1])
                     tokens[slot, 0] = prev
                     active[slot] = True
+                    new_gen[slot] = r.generated + 1
+                    new_ctx[slot] = r.context_len + 1
+                    if self.cfg.respect_true_len:
+                        true_len[slot] = r.true_out_len
                     r.state = RequestState.RUNNING
-                logits, self.cache = self._decode(
-                    self.params, self.cache, jnp.asarray(tokens))
-                # inactive slots must not advance
-                lengths = np.array(self.cache["lengths"])
-                lengths[~active] -= 1
-                self.cache = {**self.cache,
-                              "lengths": jnp.asarray(lengths)}
+                if self.cfg.fused_decode:
+                    # one dispatch: decode + sample + terminate on device
+                    toks, reasons = self.kv.decode(
+                        self.params, tokens, active, new_gen, new_ctx,
+                        true_len)
+                else:
+                    logits = self.kv.decode_logits(self.params, tokens,
+                                                   active)
                 ctx_tokens = int(sum(r.context_len for r in runnable))
                 self.iter_times.append((ctx_tokens, len(runnable),
                                         time.perf_counter() - t0))
@@ -517,12 +484,18 @@ class ServingEngine:
                     # the token must be accepted even if a neighbor's
                     # mem.grow() spill offloaded r mid-loop: this decode
                     # already wrote r's fed token's KV (and advanced any SSM
-                    # state) into the snapshot, so skipping would re-feed the
-                    # same token after swap-in and duplicate its KV row —
-                    # accepting keeps the "last sampled token's KV not yet
-                    # written" invariant intact for the host-pool copy
-                    tok = self._sample(logits[slot_of[r.req_id]])
-                    self._accept_token(r, tok, generated_of, now())
+                    # state), so skipping would re-feed the same token after
+                    # swap-in and duplicate its KV row — accepting keeps the
+                    # "last sampled token's KV not yet written" invariant
+                    # intact for the host-pool copy
+                    slot = slot_of[r.req_id]
+                    if self.cfg.fused_decode:
+                        self._accept_token(r, int(toks[slot]), generated_of,
+                                           now(),
+                                           reason=REASONS[int(reasons[slot])])
+                    else:
+                        tok = self._sample(logits[slot])
+                        self._accept_token(r, tok, generated_of, now())
                 ran_any = True
 
             self._backlog_cache = self.sched.predicted_backlog()
@@ -539,7 +512,11 @@ class ServingEngine:
         ran = self.step(t)
         return ran, self.poll_events()
 
-    def _accept_token(self, req: Request, tok: int, generated_of, t: float):
+    def _accept_token(self, req: Request, tok: int, generated_of, t: float,
+                      reason: Optional[str] = None):
+        """Record a sampled token.  ``reason`` carries the device-computed
+        termination verdict from the fused step; None (prefill first token,
+        legacy path) recomputes the identical chain host-side."""
         req.generated += 1
         generated_of[req.req_id].append(tok)
         req.output_tokens.append(tok)
@@ -562,21 +539,19 @@ class ServingEngine:
                 victim.state = RequestState.PREEMPTED
                 victim.preempt_count += 1
                 self.mem.grow(req)
-        reason = ""
-        if tok == self.cfg.eos_token:
-            reason = "eos"
-        elif req.generated >= self.cfg.max_new_tokens:
-            reason = "length"
-        elif req.context_len >= self.cfg.max_seq_len - 1:
-            reason = "ctx"
-        elif (self.cfg.respect_true_len
-              and req.generated >= req.true_out_len):
-            reason = "true_len"
+        if reason is None:
+            reason = ""
+            if tok == self.cfg.eos_token:
+                reason = "eos"
+            elif req.generated >= self.cfg.max_new_tokens:
+                reason = "length"
+            elif req.context_len >= self.cfg.max_seq_len - 1:
+                reason = "ctx"
+            elif (self.cfg.respect_true_len
+                  and req.generated >= req.true_out_len):
+                reason = "true_len"
         if reason:
-            if req.req_id in self.slot_req:
-                self._slot_clear(self.slot_req.index(req.req_id))
-            else:
-                self.host_pool.pop(req.req_id, None)   # finished off-slot
+            self._drop_kv(req.req_id)      # lane/pages or host-pool copy
             self.sched.note_finished(req, t)
             if self.stream_events:
                 self._emit_event(EngineEvent(
@@ -588,4 +563,4 @@ class ServingEngine:
     def fit_latency_model(self) -> LatencyModel:
         """Fit Eq. 3-5 coefficients from this engine's measured step times."""
         decode = [(ctx / max(b, 1), dt / 1.0) for ctx, b, dt in self.iter_times]
-        return LatencyModel.fit(self.prefill_times, decode)
+        return LatencyModel.fit(list(self.prefill_times), decode)

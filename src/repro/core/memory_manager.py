@@ -13,7 +13,7 @@ the scheduler via EWT ordering and executed through :meth:`offload` /
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.request import KVLocation, Request
 
@@ -40,6 +40,11 @@ class MemoryConfig:
     reserve_max_tokens: int = 2048
     admit_headroom: float = 0.02         # vLLM-style watermark: keep this
                                          # fraction of HBM free at admission
+    page_size: Optional[int] = None      # paged backend: HBM allocation is
+                                         # page-granular, so token counts
+                                         # round up to page multiples — the
+                                         # accounting then upper-bounds the
+                                         # physical page pool exactly
 
 
 class TieredKVManager:
@@ -54,9 +59,22 @@ class TieredKVManager:
         self._swap_free_at = 0.0                    # swap engine busy-until
 
     # ------------------------------------------------------------- helpers
+    def _round_tokens(self, tokens: int) -> int:
+        """Allocation granularity: whole pages when page_size is set."""
+        ps = self.cfg.page_size
+        if not ps or tokens <= 0:
+            return tokens
+        return -(-tokens // ps) * ps
+
+    def pages_of(self, tokens: int) -> int:
+        """Page count backing ``tokens`` (0 without a page_size)."""
+        ps = self.cfg.page_size
+        return -(-tokens // ps) if ps else 0
+
     def _bytes(self, tokens: int, quantized: bool) -> float:
         per = self.cfg.bytes_per_token_fp
-        return tokens * per * (self.cfg.quant_ratio if quantized else 1.0)
+        return (self._round_tokens(tokens) * per
+                * (self.cfg.quant_ratio if quantized else 1.0))
 
     def _reservation(self, req: Request) -> int:
         if self.cfg.reserve_policy == "reserve_max":
@@ -99,7 +117,10 @@ class TieredKVManager:
         self.tokens[rid] = req.context_len
         if self.tokens[rid] < self.reserved[rid]:
             return True
-        need = self._bytes(1, False)
+        # marginal cost of one more reserved token: zero inside a page,
+        # a whole page's bytes when crossing a boundary (page-granular)
+        need = (self._bytes(self.reserved[rid] + 1, False)
+                - self._bytes(self.reserved[rid], False))
         if self.hbm_free() < need:
             return False
         self.reserved[rid] += 1

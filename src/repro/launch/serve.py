@@ -44,7 +44,8 @@ def build_requests(cfg, n: int, seed: int = 0):
 
 def serve(arch: str = "granite-3-8b", strategy: str = "alise",
           n_requests: int = 12, max_slots: int = 4, seed: int = 0,
-          predictor_kind: str = "oracle", quantize: bool = True):
+          predictor_kind: str = "oracle", quantize: bool = True,
+          kv_backend: str = "dense"):
     cfg = get_smoke_config(arch)
     model = Model(cfg, attn_chunk=32, remat=False)
     params = model.init(jax.random.PRNGKey(seed))
@@ -52,7 +53,8 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
                  else RetrievalPredictor(seed=seed))
     eng = ServingEngine(model, params, EngineConfig(
         max_slots=max_slots, max_seq_len=96, max_new_tokens=48,
-        strategy=strategy, quantize_offload=quantize), predictor=predictor)
+        strategy=strategy, quantize_offload=quantize,
+        kv_backend=kv_backend), predictor=predictor)
     reqs = build_requests(cfg, n_requests, seed)
     eng.serve(reqs)
     lat = [r.e2e_latency for r in reqs if r.e2e_latency is not None]
@@ -77,7 +79,8 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                   pump: str = "concurrent",
                   ttft_target_interactive: Optional[float] = None,
                   ttft_target_batch: Optional[float] = None,
-                  ttft_miss_policy: str = "shed"):
+                  ttft_miss_policy: str = "shed",
+                  kv_backend: str = "dense"):
     """Replay a synthetic Poisson trace through the online Gateway and print
     per-class TTFT/E2E percentiles (and SLO attainment when targets are
     set).  ``virtual_dt=None`` serves in wall clock; ``pump`` selects the
@@ -91,7 +94,8 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                      else RetrievalPredictor(seed=seed))
         return ServingEngine(model, params, EngineConfig(
             max_slots=max_slots, max_seq_len=96, max_new_tokens=48,
-            strategy=strategy, quantize_offload=False), predictor=predictor)
+            strategy=strategy, quantize_offload=False,
+            kv_backend=kv_backend), predictor=predictor)
 
     reset_request_counter()
     trace = generate_trace(TraceConfig(dataset=dataset, rate=rate,
@@ -132,6 +136,10 @@ def main():
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--predictor", default="oracle",
                     choices=["oracle", "retrieval"])
+    ap.add_argument("--kv-backend", default="dense",
+                    choices=["dense", "paged"],
+                    help="device KV storage: dense slotted cache or the "
+                         "paged block pool (Pallas paged-attention path)")
     ap.add_argument("--gateway", action="store_true",
                     help="online mode: replay a Poisson trace through the "
                          "streaming gateway instead of a pre-built batch")
@@ -166,10 +174,11 @@ def main():
                       pump=args.pump,
                       ttft_target_interactive=args.ttft_target_interactive,
                       ttft_target_batch=args.ttft_target_batch,
-                      ttft_miss_policy=args.ttft_miss_policy)
+                      ttft_miss_policy=args.ttft_miss_policy,
+                      kv_backend=args.kv_backend)
     else:
         serve(args.arch, args.strategy, args.n_requests, args.max_slots,
-              predictor_kind=args.predictor)
+              predictor_kind=args.predictor, kv_backend=args.kv_backend)
 
 
 if __name__ == "__main__":

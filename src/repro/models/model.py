@@ -462,6 +462,128 @@ class Model:
         logits = self._logits(params, x[:, -1, :])
         return logits.astype(jnp.float32), new_cache
 
+    def decode_step_sampled(self, params, cache, tokens, active, new_gen,
+                            new_ctx, true_len, key, *, greedy_sampling=True,
+                            temp: float = 1.0, top_k: int = 0,
+                            eos_token: int = 1, max_new_tokens: int = 128,
+                            max_seq_len: int = 256):
+        """Fused decode iteration: decode + sample + terminate, one dispatch.
+
+        Wraps :meth:`decode_step` and moves sampling (greedy or
+        temperature/top-k) and EOS/length termination *inside* the jitted
+        step, so the engine syncs one small ``(tokens, reasons)`` pair per
+        iteration instead of one ``int(jnp.argmax(...))`` per slot.
+
+        ``active`` (B,) bool masks slots with no live request: their cache
+        ``lengths`` do not advance and their reason is forced to 0.
+        Returns ``(sampled (B,) int32, reason (B,) int32, new_cache)``.
+        """
+        from repro.serving.sampler import sample_and_reason
+        logits, cache = self.decode_step(params, cache, tokens)
+        lengths = cache["lengths"]
+        cache = {**cache, "lengths": jnp.where(active, lengths, lengths - 1)}
+        tok, reason = sample_and_reason(
+            logits, key, greedy_sampling=greedy_sampling, temp=temp,
+            top_k=top_k, eos_token=eos_token, max_new_tokens=max_new_tokens,
+            max_seq_len=max_seq_len, new_gen=new_gen, new_ctx=new_ctx,
+            true_len=true_len)
+        reason = jnp.where(active, reason, 0)
+        return tok, reason, cache
+
+    # ------------------------------------------------------- paged decode
+    def supports_paged(self) -> bool:
+        """Paged KV decode covers attention-family decoder-only stacks
+        (SSM/hybrid state is constant-size — paging buys nothing — and
+        enc-dec carries a static cross cache)."""
+        cfg = self.cfg
+        return (cfg.family not in ("ssm", "hybrid")
+                and not cfg.is_encoder_decoder)
+
+    def paged_decode_step(self, params, kv, tokens, block_tables, lengths,
+                          write_page, write_off, *, attn_impl: str = "gather",
+                          interpret: bool = True):
+        """One decode iteration over a paged KV pool (vLLM-style block KV).
+
+        ``kv``: {"k","v"} of shape (L, num_pages, page, KVH, hd);
+        ``tokens`` (B, 1) int32; ``block_tables`` (B, max_pages) int32 with
+        unused entries pointing at a sacrificial page; ``lengths`` (B,) =
+        tokens already written, so the fed token's KV lands at logical
+        position ``lengths`` = physical ``(write_page, write_off)``.
+
+        ``attn_impl="gather"`` materializes the pages in logical order and
+        reuses :func:`layers.decode_attention` — bit-identical to the dense
+        slotted path (same ops on the same values), which is what the
+        dense-vs-paged greedy invariant tests pin.  ``"kernel"`` routes
+        through the Pallas paged-attention kernel (no gather — the block
+        table drives scalar-prefetch DMA), numerically equal within
+        online-softmax reassociation.
+
+        Returns ``(logits (B, V) f32, new_kv)``.
+        """
+        cfg = self.cfg
+        if not self.supports_paged():
+            raise ValueError(f"paged decode unsupported for family="
+                             f"{cfg.family} enc_dec={cfg.is_encoder_decoder}")
+        B = tokens.shape[0]
+        page = kv["k"].shape[2]
+        x = self._embed_in(params, tokens)
+        x = shard_hint(x, "batch", None, None)
+        positions = lengths[:, None]
+        ffn_kind = cfg.ffn_kind(0)
+
+        def body(h, inp):
+            p_l, k_pool, v_pool = inp
+            h1 = L.apply_norm(cfg, p_l["ln1"], h)
+            q, k, v = L._project_qkv(cfg, p_l["attn"], h1, positions)
+            k_pool = k_pool.at[write_page, write_off].set(
+                k[:, 0].astype(k_pool.dtype))
+            v_pool = v_pool.at[write_page, write_off].set(
+                v[:, 0].astype(v_pool.dtype))
+            if attn_impl == "kernel":
+                from repro.kernels.paged_attention.paged_attention import \
+                    paged_attention
+                attn = paged_attention(q[:, 0], k_pool, v_pool, block_tables,
+                                       lengths + 1, interpret=interpret)
+            else:
+                n_pages = block_tables.shape[1]
+                kg = k_pool[block_tables].reshape(
+                    B, n_pages * page, *k_pool.shape[2:])
+                vg = v_pool[block_tables].reshape(
+                    B, n_pages * page, *v_pool.shape[2:])
+                attn = L.decode_attention(cfg, q[:, 0], kg, vg, lengths + 1)
+            h = h + (attn.reshape(B, -1) @ p_l["attn"]["wo"])[:, None, :]
+            h, _ = _apply_ffn_part(cfg, p_l, h, ffn_kind)
+            return h, (k_pool, v_pool)
+
+        x, (k_new, v_new) = lax.scan(body, x,
+                                     (params["layers"], kv["k"], kv["v"]))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = self._logits(params, x[:, -1, :])
+        return logits.astype(jnp.float32), {"k": k_new, "v": v_new}
+
+    def paged_decode_step_sampled(self, params, kv, tokens, block_tables,
+                                  lengths, write_page, write_off, active,
+                                  new_gen, new_ctx, true_len, key, *,
+                                  attn_impl: str = "gather",
+                                  interpret: bool = True,
+                                  greedy_sampling=True, temp: float = 1.0,
+                                  top_k: int = 0, eos_token: int = 1,
+                                  max_new_tokens: int = 128,
+                                  max_seq_len: int = 256):
+        """Paged twin of :meth:`decode_step_sampled`: one fused dispatch
+        returning ``(sampled, reason, new_kv)``."""
+        from repro.serving.sampler import sample_and_reason
+        logits, kv = self.paged_decode_step(
+            params, kv, tokens, block_tables, lengths, write_page, write_off,
+            attn_impl=attn_impl, interpret=interpret)
+        tok, reason = sample_and_reason(
+            logits, key, greedy_sampling=greedy_sampling, temp=temp,
+            top_k=top_k, eos_token=eos_token, max_new_tokens=max_new_tokens,
+            max_seq_len=max_seq_len, new_gen=new_gen, new_ctx=new_ctx,
+            true_len=true_len)
+        reason = jnp.where(active, reason, 0)
+        return tok, reason, kv
+
     def _decode_hybrid(self, params, cache, x, lengths):
         cfg = self.cfg
 

@@ -61,6 +61,12 @@ class AdmissionConfig:
     ttft_target_batch: Optional[float] = None
     ttft_miss_policy: MissPolicy = MissPolicy.SHED    # interactive misses
     ttft_slack: float = 1.0                # gate on slack * expected_ttft
+    release_order: str = "slack"           # deferred-queue release ordering:
+                                           # "slack" dispatches the request
+                                           # with the least predicted TTFT
+                                           # headroom first (FIFO among
+                                           # no-target requests); "fifo"
+                                           # keeps strict arrival order
 
     def __post_init__(self):
         if self.defer_high_watermark is not None \
@@ -127,6 +133,18 @@ class AdmissionController:
                 self._deferring = True
                 return Verdict.DEFER
         return Verdict.ADMIT
+
+    def release_slack(self, req: Request,
+                      expected_ttft: Optional[float]) -> float:
+        """Predicted TTFT headroom for a deferred request:
+        ``target - slack * expected_ttft``.  Smaller = more urgent, so the
+        gateway releases ascending-slack (the request closest to missing its
+        target that can still make it goes first); requests without a target
+        sort to +inf and fall back to arrival order among themselves."""
+        target = self.cfg.ttft_target(req.slo_class)
+        if target is None or expected_ttft is None:
+            return float("inf")
+        return target - self.cfg.ttft_slack * expected_ttft
 
     def may_release_ttft(self, req: Request, expected_ttft: float,
                          intrinsic_ttft: float) -> bool:

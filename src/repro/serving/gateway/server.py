@@ -190,8 +190,9 @@ class Gateway:
             self.metrics.of(req).deferred += 1
             self.deferred.append(req)
         elif req.slo_class == SLOClass.BATCH and self.deferred:
-            # keep batch-class FIFO: park behind earlier deferred work and
-            # release in arrival order up to the watermark
+            # park behind earlier deferred work; releases drain the pool in
+            # predicted-slack order (arrival order without TTFT targets) up
+            # to the watermark
             self.deferred.append(req)
             self._release_deferred(t)
         else:
@@ -278,23 +279,59 @@ class Gateway:
                                          reason=reason))
                 stream._close()
 
+    def _expected_ttft_deferred(self, req: Request, t: float):
+        """(expected, intrinsic) TTFT for a deferred request with its
+        waiting time included; (None, None) when no replica is live."""
+        terms = self._ttft_terms(req)
+        if terms is None:
+            return None, None
+        wait, intrinsic = terms
+        elapsed = max(t - req.arrival_time, 0.0)
+        return elapsed + wait + intrinsic, elapsed + intrinsic
+
+    def _release_order(self, t: float) -> List[Request]:
+        """Candidates in release order: ascending predicted slack (the
+        request with the least TTFT headroom that can still make its target
+        dispatches first), arrival order as tie-break and as the whole
+        order when no TTFT target is configured or release_order="fifo"."""
+        cfg = self.admission.cfg
+        if cfg.release_order != "slack" or not any(
+                cfg.ttft_target(r.slo_class) is not None
+                for r in self.deferred):
+            return list(self.deferred)
+
+        def key(req: Request):
+            expected, _ = self._expected_ttft_deferred(req, t)
+            return (self.admission.release_slack(req, expected),
+                    req.arrival_time)
+        return sorted(self.deferred, key=key)
+
     def _release_deferred(self, t: float) -> None:
-        while self.deferred and self.admission.may_release(
-                self.router.total_depth()):
-            req = self.deferred[0]
+        """One release pass: the ordering is computed once, then each
+        candidate's TTFT gate is evaluated fresh at its dispatch point
+        (earlier dispatches in the same pass grow the backlog term)."""
+        if not self.deferred:
+            return
+        strict_fifo = self.admission.cfg.release_order == "fifo"
+        for req in self._release_order(t):
+            if not self.admission.may_release(self.router.total_depth()):
+                break
             if self.admission.cfg.ttft_target(req.slo_class) is not None:
                 # TTFT-deferred work re-checks its gate with waiting time
                 # included: holding is only useful while the backlog term
-                # is what predicts the miss
-                terms = self._ttft_terms(req)
-                if terms is not None:
-                    wait, intrinsic = terms
-                    elapsed = max(t - req.arrival_time, 0.0)
-                    if not self.admission.may_release_ttft(
-                            req, elapsed + wait + intrinsic,
-                            elapsed + intrinsic):
-                        break              # head-of-line holds (FIFO)
-            self.router.dispatch(self.deferred.popleft(), t)
+                # is what predicts the miss.  In slack order a held request
+                # is skipped, not head-of-line blocking — a later candidate
+                # with a smaller prefill may still make its target now; in
+                # strict FIFO a held head parks the whole queue (legacy).
+                expected, intrinsic = self._expected_ttft_deferred(req, t)
+                if expected is not None and not \
+                        self.admission.may_release_ttft(req, expected,
+                                                        intrinsic):
+                    if strict_fifo:
+                        break
+                    continue
+            self.deferred.remove(req)
+            self.router.dispatch(req, t)
 
     def pump_once(self) -> bool:
         """One lockstep barrier iteration over all live engines; returns

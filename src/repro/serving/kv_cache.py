@@ -1,19 +1,43 @@
-"""Paged KV cache pool (vLLM-style block manager) wired to the Pallas
-paged-attention kernels.
+"""Pluggable KV backends for the serving engine + the paged KV page pool.
 
-This is the block-granular allocator the vLLM baseline uses and the substrate
-ALISE's request-level swapping sits on: pages for a request can be freed,
-offloaded (optionally INT8), and re-materialized without moving other
-requests' pages.
+Two layers live here:
+
+  * :class:`PagedKVPool` — the vLLM-style block allocator (physical pages +
+    per-request page tables) the paper's baseline uses and ALISE's
+    request-level swapping sits on: pages for a request can be freed,
+    offloaded (optionally INT8), and re-materialized without moving other
+    requests' pages.
+  * :class:`KVBackend` — the engine-facing abstraction over device KV
+    residency.  :class:`DenseKVBackend` keeps the original slotted dense
+    cache (one ``(B, Smax, ...)`` buffer per layer); :class:`PagedKVBackend`
+    stores KV in the page pool and decodes through the paged-attention path.
+    Both expose the same interface: decode-lane (slot) assignment, prefill
+    KV placement, request-granular offload/upload blobs, and ``decode()`` —
+    **one fused jitted dispatch per iteration** that samples tokens and
+    computes termination flags on device (no per-slot host sync).
+
+Offload/upload runs through the Pallas ``kv_quant`` kernels when
+``quantize_offload`` is set: KV is quantized **on device** and the host link
+carries the INT8 payload + per-row scales (paper Eq. 8), instead of moving
+fp tensors and quantizing in host numpy.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.kv_quant import kv_dequantize_op, kv_quantize_op
+
+_INTERPRET = jax.default_backend() == "cpu"   # Pallas interpret off-TPU
+_QBLK = 128                                   # kv_quant row-tile
+
+
+# --------------------------------------------------------------- page pool
 
 @dataclass
 class PagedKVConfig:
@@ -47,7 +71,9 @@ class PagedKVPool:
 
     def allocate(self, req_id: int, tokens: int) -> List[int]:
         n = self.pages_needed(tokens)
-        assert len(self.free_pages) >= n, "page pool exhausted"
+        if len(self.free_pages) < n:
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, free {len(self.free_pages)}")
         pages = [self.free_pages.pop() for _ in range(n)]
         self.page_table[req_id] = pages
         self.lengths[req_id] = tokens
@@ -59,11 +85,18 @@ class PagedKVPool:
         need = self.pages_needed(length)
         new_page = None
         if need > len(self.page_table[req_id]):
-            assert self.free_pages, "page pool exhausted"
+            if not self.free_pages:
+                raise RuntimeError("page pool exhausted on extend")
             new_page = self.free_pages.pop()
             self.page_table[req_id].append(new_page)
         self.lengths[req_id] = length
         return new_page
+
+    def reserve_scratch(self) -> int:
+        """Permanently remove one physical page from the allocator — the
+        sacrificial write target for inactive decode lanes in the fused
+        batched step (their token writes must land *somewhere* harmless)."""
+        return self.free_pages.pop()
 
     def free(self, req_id: int) -> None:
         self.free_pages.extend(self.page_table.pop(req_id, []))
@@ -80,6 +113,23 @@ class PagedKVPool:
         off = pos % self.cfg.page_size
         self.k = self.k.at[layer, page, off].set(k_new.astype(self.k.dtype))
         self.v = self.v.at[layer, page, off].set(v_new.astype(self.v.dtype))
+
+    def write_prefill(self, req_id: int, k, v) -> List[int]:
+        """Allocate pages for a fresh sequence and scatter its prefill KV in
+        one device op per tensor.  k/v: (L, S, KVH, d) device arrays."""
+        S = k.shape[1]
+        pages = self.allocate(req_id, S)
+        pg = self.cfg.page_size
+        pad = len(pages) * pg - S
+        if pad:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        idx = jnp.asarray(pages)
+        kp = k.reshape(k.shape[0], len(pages), pg, *k.shape[2:])
+        vp = v.reshape(v.shape[0], len(pages), pg, *v.shape[2:])
+        self.k = self.k.at[:, idx].set(kp.astype(self.k.dtype))
+        self.v = self.v.at[:, idx].set(vp.astype(self.v.dtype))
+        return pages
 
     def block_table_array(self, req_ids: List[int]) -> tuple:
         """(tables (B, max_pages) int32, lengths (B,) int32) padded."""
@@ -106,3 +156,381 @@ class PagedKVPool:
         idx = jnp.asarray(pages)
         self.k = self.k.at[:, idx].set(jnp.asarray(snap["k"]))
         self.v = self.v.at[:, idx].set(jnp.asarray(snap["v"]))
+
+
+# ------------------------------------------------- device-side quant blobs
+
+def quantize_kv_device(x) -> tuple:
+    """INT8-quantize an arbitrary-rank KV tensor on device via the Pallas
+    ``kv_quantize`` kernel (per (token, head) row over the last axis) and
+    pull the *INT8* payload to host — the host link carries half the bytes
+    of the fp tensor (Eq. 8), unlike the old host-numpy ``quantize_np``
+    path which shipped fp32 first.  Returns ``(q, lam, z, shape)``."""
+    shape = tuple(x.shape)
+    d = shape[-1]
+    rows = int(np.prod(shape[:-1]))
+    flat = jnp.reshape(x, (rows, d)).astype(jnp.float32)
+    pad = (-rows) % _QBLK
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    q, lam, z = kv_quantize_op(flat, blk=min(_QBLK, flat.shape[0]),
+                               interpret=_INTERPRET)
+    q, lam, z = jax.device_get((q[:rows], lam[:rows], z[:rows]))
+    return np.asarray(q), np.asarray(lam), np.asarray(z), shape
+
+
+def dequantize_kv_device(blob: tuple, dtype=jnp.float32):
+    """Inverse of :func:`quantize_kv_device`: upload INT8 + scales, run the
+    Pallas ``kv_dequantize`` kernel on device, reshape to the saved shape."""
+    q, lam, z, shape = blob
+    rows = q.shape[0]
+    pad = (-rows) % _QBLK
+    qj, lj, zj = jnp.asarray(q), jnp.asarray(lam), jnp.asarray(z)
+    if pad:
+        qj = jnp.pad(qj, ((0, pad), (0, 0)))
+        lj = jnp.pad(lj, ((0, pad), (0, 0)))
+        zj = jnp.pad(zj, ((0, pad), (0, 0)))
+    x = kv_dequantize_op(qj, lj, zj, dtype=dtype,
+                         blk=min(_QBLK, qj.shape[0]), interpret=_INTERPRET)
+    return x[:rows].reshape(shape)
+
+
+# ---------------------------------------------------------------- backends
+
+@dataclass
+class KVBackendConfig:
+    """Static knobs a backend needs to build its fused decode dispatch."""
+    max_slots: int
+    max_seq_len: int
+    eos_token: int = 1
+    max_new_tokens: int = 128
+    greedy: bool = True
+    temperature: float = 1.0
+    top_k: int = 0
+    quantize_offload: bool = True
+    page_size: int = 16            # paged backend only
+    attn_impl: str = "gather"      # paged attention: gather | kernel
+    seed: int = 0
+
+
+class KVBackend:
+    """Engine-facing device KV residency + the fused in-JIT decode step.
+
+    Decode lanes ("slots") give the decode batch its fixed shape; the
+    backing storage is implementation-defined (dense per-slot buffers or a
+    shared page pool).  ``decode()`` is the hot path: one jitted dispatch
+    covering token embedding, the layer stack, KV writes, attention,
+    sampling, and termination — the engine syncs a single small
+    ``(tokens, reasons)`` pair per iteration.
+    """
+
+    def __init__(self, model, cfg: KVBackendConfig):
+        self.model = model
+        self.cfg = cfg
+        self.slot_req: List[Optional[int]] = [None] * cfg.max_slots
+        self._steps = 0
+        self._base_key = jax.random.PRNGKey(cfg.seed)
+
+    # --------------------------------------------------------------- lanes
+    def slot_of(self, rid: int) -> Optional[int]:
+        try:
+            return self.slot_req.index(rid)
+        except ValueError:
+            return None
+
+    def has(self, rid: int) -> bool:
+        return rid in self.slot_req
+
+    def free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.slot_req):
+            if r is None:
+                return i
+        return None
+
+    def _next_key(self):
+        self._steps += 1
+        return jax.random.fold_in(self._base_key, self._steps)
+
+    def _sample_kwargs(self) -> dict:
+        c = self.cfg
+        return dict(greedy_sampling=c.greedy, temp=c.temperature,
+                    top_k=c.top_k, eos_token=c.eos_token,
+                    max_new_tokens=c.max_new_tokens,
+                    max_seq_len=c.max_seq_len)
+
+    # ----------------------------------------------------------- interface
+    def write_prefill(self, rid: int, pcache, length: int) -> None:
+        """Place batch-index-0 of a prefill cache into a free lane."""
+        raise NotImplementedError
+
+    def clear(self, rid: int) -> None:
+        raise NotImplementedError
+
+    def offload(self, rid: int) -> dict:
+        """Detach a request's KV into a host blob (INT8 via the Pallas
+        kv_quant kernel when quantize_offload); frees its lane/pages."""
+        raise NotImplementedError
+
+    def upload(self, rid: int, blob: dict) -> None:
+        raise NotImplementedError
+
+    def decode(self, params, tokens, active, new_gen, new_ctx, true_len):
+        """One fused iteration -> (sampled (B,), reason (B,)) numpy."""
+        raise NotImplementedError
+
+    def decode_logits(self, params, tokens, active):
+        """Legacy per-slot dispatch path (host-side sampling baseline)."""
+        raise NotImplementedError
+
+    def pages_shortfall(self, rids: List[int]) -> int:
+        """Physical pages missing to decode one token for each of ``rids``
+        (always 0 for the dense backend)."""
+        return 0
+
+
+class DenseKVBackend(KVBackend):
+    """The original slotted dense cache behind the KVBackend interface.
+
+    Storage is ``model.init_cache(max_slots, max_seq_len)``; every slot owns
+    a full ``max_seq_len`` stripe.  Supports every model family (attention,
+    SSM, hybrid, enc-dec) — per-key batch axes come from the cache spec.
+    """
+
+    def __init__(self, model, cfg: KVBackendConfig):
+        super().__init__(model, cfg)
+        self.cache = model.init_cache(cfg.max_slots, cfg.max_seq_len)
+        self._axes = self._cache_batch_axes()
+        self._fused = jax.jit(functools.partial(
+            model.decode_step_sampled, **self._sample_kwargs()))
+        self._decode = jax.jit(model.decode_step)
+
+    def _cache_batch_axes(self) -> Dict[str, int]:
+        fam = self.model.cfg.family
+        axes = {"lengths": 0}
+        if fam == "ssm":
+            axes.update(conv=1, ssm=1)
+        elif fam == "hybrid":
+            axes.update(k=1, v=1, conv=2, ssm=2)
+        else:
+            axes.update(k=1, v=1)
+            if self.model.cfg.is_encoder_decoder:
+                axes.update(xk=1, xv=1)
+        return axes
+
+    # ------------------------------------------------------------ helpers
+    def _slot_view(self, slot: int) -> Dict[str, jnp.ndarray]:
+        return {key: jnp.take(arr, slot, axis=self._axes[key])
+                for key, arr in self.cache.items()}
+
+    def _write_slot(self, slot: int, data: Dict) -> None:
+        new = {}
+        for key, arr in self.cache.items():
+            ax = self._axes[key]
+            idx = [slice(None)] * arr.ndim
+            idx[ax] = slot
+            new[key] = arr.at[tuple(idx)].set(
+                jnp.asarray(data[key]).astype(arr.dtype))
+        self.cache = new
+
+    def _slot_shape(self, key: str) -> list:
+        arr = self.cache[key]
+        shape = list(arr.shape)
+        del shape[self._axes[key]]
+        return shape
+
+    # ---------------------------------------------------------- interface
+    def write_prefill(self, rid: int, pcache, length: int) -> None:
+        slot = self.free_slot()
+        assert slot is not None, "caller must check slot availability"
+        data = {}
+        for key, arr in self.cache.items():
+            ax = self._axes[key]
+            if key == "lengths":
+                data[key] = jnp.asarray(length, jnp.int32)
+                continue
+            src = jnp.take(pcache[key], 0, axis=ax)
+            if key in ("k", "v"):   # seq axis: trim bucket pad, pad to Smax
+                buf = jnp.zeros(self._slot_shape(key), arr.dtype)
+                buf = buf.at[:, :length].set(
+                    src[:, :length].astype(arr.dtype))
+                data[key] = buf
+            else:
+                data[key] = src
+        self._write_slot(slot, data)
+        self.slot_req[slot] = rid
+
+    def clear(self, rid: int) -> None:
+        slot = self.slot_of(rid)
+        if slot is None:
+            return
+        self.cache = {**self.cache,
+                      "lengths": self.cache["lengths"].at[slot].set(0)}
+        self.slot_req[slot] = None
+
+    def offload(self, rid: int) -> dict:
+        slot = self.slot_of(rid)
+        data = self._slot_view(slot)
+        length = int(data["lengths"])
+        stored: dict = {"lengths": length}
+        for key, arr in data.items():
+            if key == "lengths":
+                continue
+            trimmed = arr[:, :length] if key in ("k", "v") else arr
+            if self.cfg.quantize_offload and key in ("k", "v"):
+                stored[key] = ("q8", quantize_kv_device(trimmed))
+            else:
+                stored[key] = ("raw", np.asarray(jax.device_get(trimmed)))
+        self.clear(rid)
+        return stored
+
+    def upload(self, rid: int, blob: dict) -> None:
+        slot = self.free_slot()
+        assert slot is not None
+        length = blob["lengths"]
+        data: dict = {"lengths": jnp.asarray(length, jnp.int32)}
+        for key in self.cache:
+            if key == "lengths":
+                continue
+            item = blob[key]
+            if item[0] == "q8":
+                src = dequantize_kv_device(item[1], dtype=jnp.float32)
+            else:
+                src = jnp.asarray(item[1])
+            if key in ("k", "v"):
+                buf = jnp.zeros(self._slot_shape(key),
+                                self.cache[key].dtype)
+                buf = buf.at[:, :length].set(
+                    src.astype(self.cache[key].dtype))
+                data[key] = buf
+            else:
+                data[key] = src
+        self._write_slot(slot, data)
+        self.slot_req[slot] = rid
+
+    def decode(self, params, tokens, active, new_gen, new_ctx, true_len):
+        tok, reason, cache = self._fused(
+            params, self.cache, jnp.asarray(tokens), jnp.asarray(active),
+            jnp.asarray(new_gen), jnp.asarray(new_ctx),
+            jnp.asarray(true_len), self._next_key())
+        self.cache = cache
+        tok, reason = jax.device_get((tok, reason))
+        return np.asarray(tok), np.asarray(reason)
+
+    def decode_logits(self, params, tokens, active):
+        logits, cache = self._decode(params, self.cache, jnp.asarray(tokens))
+        lengths = np.array(cache["lengths"])
+        lengths[~np.asarray(active)] -= 1
+        self.cache = {**cache, "lengths": jnp.asarray(lengths)}
+        return logits
+
+
+class PagedKVBackend(KVBackend):
+    """Paged KV storage: decode lanes share one physical page pool.
+
+    Attention-family decoder-only stacks only (see
+    :meth:`Model.supports_paged`).  Offload/upload move whole pages —
+    request-granular, page-aligned — and the fused step writes the new
+    token's KV directly into its page at ``(write_page, write_off)``;
+    inactive lanes write to a reserved scratch page.
+    """
+
+    def __init__(self, model, cfg: KVBackendConfig, num_pages: int):
+        super().__init__(model, cfg)
+        if not model.supports_paged():
+            raise ValueError(
+                "paged KV backend requires an attention-family decoder-only "
+                f"model (family={model.cfg.family}, "
+                f"enc_dec={model.cfg.is_encoder_decoder})")
+        if cfg.max_seq_len % cfg.page_size:
+            raise ValueError("max_seq_len must be a page_size multiple")
+        acfg = model.cfg
+        self.max_pages_per_seq = cfg.max_seq_len // cfg.page_size
+        self.pool = PagedKVPool(PagedKVConfig(
+            num_pages=num_pages + 1,           # +1 sacrificial scratch page
+            page_size=cfg.page_size, num_kv_heads=acfg.num_kv_heads,
+            head_dim=acfg.hd, num_layers=acfg.num_layers,
+            dtype=model.kv_dtype))
+        self.scratch_page = self.pool.reserve_scratch()
+        self._fused = jax.jit(functools.partial(
+            model.paged_decode_step_sampled, attn_impl=cfg.attn_impl,
+            interpret=_INTERPRET, **self._sample_kwargs()))
+
+    # ---------------------------------------------------------- interface
+    def write_prefill(self, rid: int, pcache, length: int) -> None:
+        slot = self.free_slot()
+        assert slot is not None, "caller must check slot availability"
+        k = jnp.take(pcache["k"], 0, axis=1)[:, :length]
+        v = jnp.take(pcache["v"], 0, axis=1)[:, :length]
+        self.pool.write_prefill(rid, k, v)
+        self.slot_req[slot] = rid
+
+    def clear(self, rid: int) -> None:
+        slot = self.slot_of(rid)
+        if slot is not None:
+            self.slot_req[slot] = None
+        self.pool.free(rid)
+
+    def offload(self, rid: int) -> dict:
+        pages = self.pool.page_table[rid]
+        idx = jnp.asarray(pages)
+        k, v = self.pool.k[:, idx], self.pool.v[:, idx]
+        stored: dict = {"lengths": self.pool.lengths[rid]}
+        for key, arr in (("k", k), ("v", v)):
+            if self.cfg.quantize_offload:
+                stored[key] = ("q8", quantize_kv_device(arr))
+            else:
+                stored[key] = ("raw", np.asarray(jax.device_get(arr)))
+        self.clear(rid)
+        return stored
+
+    def upload(self, rid: int, blob: dict) -> None:
+        slot = self.free_slot()
+        assert slot is not None
+        length = blob["lengths"]
+        pages = self.pool.allocate(rid, length)
+        idx = jnp.asarray(pages)
+        for key in ("k", "v"):
+            item = blob[key]
+            if item[0] == "q8":
+                src = dequantize_kv_device(item[1], dtype=jnp.float32)
+            else:
+                src = jnp.asarray(item[1])
+            arr = getattr(self.pool, key)
+            setattr(self.pool, key,
+                    arr.at[:, idx].set(src.astype(arr.dtype)))
+        self.slot_req[slot] = rid
+
+    def pages_shortfall(self, rids: List[int]) -> int:
+        need_new = sum(1 for rid in rids
+                       if self.pool.lengths[rid] % self.cfg.page_size == 0)
+        return max(0, need_new - len(self.pool.free_pages))
+
+    def decode(self, params, tokens, active, new_gen, new_ctx, true_len):
+        B, pg = self.cfg.max_slots, self.cfg.page_size
+        maxp = self.max_pages_per_seq
+        tables = np.full((B, maxp), self.scratch_page, np.int32)
+        lens = np.zeros((B,), np.int32)
+        wp = np.full((B,), self.scratch_page, np.int32)
+        wo = np.zeros((B,), np.int32)
+        for slot, rid in enumerate(self.slot_req):
+            if rid is None or not active[slot]:
+                continue
+            # the fed token's KV lands at logical position `pos`: grow the
+            # page table first (caller guarantees a free page via
+            # pages_shortfall), then point the write at its page slot
+            self.pool.extend(rid, 1)
+            pos = self.pool.lengths[rid] - 1
+            pt = self.pool.page_table[rid]
+            tables[slot, :len(pt)] = pt
+            lens[slot] = pos
+            wp[slot] = pt[pos // pg]
+            wo[slot] = pos % pg
+        tok, reason, kv = self._fused(
+            params, {"k": self.pool.k, "v": self.pool.v},
+            jnp.asarray(tokens), jnp.asarray(tables), jnp.asarray(lens),
+            jnp.asarray(wp), jnp.asarray(wo), jnp.asarray(active),
+            jnp.asarray(new_gen), jnp.asarray(new_ctx),
+            jnp.asarray(true_len), self._next_key())
+        self.pool.k, self.pool.v = kv["k"], kv["v"]
+        tok, reason = jax.device_get((tok, reason))
+        return np.asarray(tok), np.asarray(reason)

@@ -1,8 +1,21 @@
-"""Token samplers."""
+"""Token samplers, host-free: everything here is jit-traceable so the engine
+can fold sampling and termination into its single fused decode dispatch
+(one host sync per *iteration* instead of one ``int(jnp.argmax(...))`` per
+slot)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+# Termination reason codes returned by :func:`sample_and_reason` — index into
+# REASONS to recover the engine's string reasons.  Priority order matches the
+# engine's historical host-side chain (eos > length > ctx > true_len).
+REASON_NONE = 0
+REASON_EOS = 1
+REASON_LENGTH = 2
+REASON_CTX = 3
+REASON_TRUE_LEN = 4
+REASONS = ("", "eos", "length", "ctx", "true_len")
 
 
 def greedy(logits):
@@ -15,3 +28,34 @@ def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
         cutoff = vals[..., -1:]
         logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
     return jax.random.categorical(key, logits / max(temp, 1e-6)).astype(jnp.int32)
+
+
+def sample_tokens(logits, key, *, greedy_sampling: bool,
+                  temp: float = 1.0, top_k: int = 0):
+    """Batched sampling: logits (B, V) -> token ids (B,) int32."""
+    if greedy_sampling:
+        return greedy(logits)
+    return temperature(logits, key, temp=temp, top_k=top_k)
+
+
+def sample_and_reason(logits, key, *, greedy_sampling: bool,
+                      temp: float, top_k: int, eos_token: int,
+                      max_new_tokens: int, max_seq_len: int,
+                      new_gen, new_ctx, true_len):
+    """Fused sampling + termination, fully device-side.
+
+    ``new_gen``/``new_ctx`` are each slot's generated count / context length
+    *after* accepting this token; ``true_len`` is the per-slot trace stop
+    (pass a huge value when ``respect_true_len`` is off).  Returns
+    ``(tokens (B,) int32, reason (B,) int32)`` with reason codes from
+    REASON_* (0 = keep decoding).
+    """
+    tok = sample_tokens(logits, key, greedy_sampling=greedy_sampling,
+                        temp=temp, top_k=top_k)
+    reason = jnp.where(
+        tok == eos_token, REASON_EOS,
+        jnp.where(new_gen >= max_new_tokens, REASON_LENGTH,
+                  jnp.where(new_ctx >= max_seq_len - 1, REASON_CTX,
+                            jnp.where(new_gen >= true_len,
+                                      REASON_TRUE_LEN, REASON_NONE))))
+    return tok, reason.astype(jnp.int32)

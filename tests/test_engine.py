@@ -120,6 +120,36 @@ def test_fitted_latency_model_sane(model_and_params):
     assert lm.t0 >= 0 and lm.beta > 0
 
 
+def test_fused_matches_per_slot_dispatch(model_and_params):
+    """The fused in-JIT step (sampling + termination on device) is
+    bit-identical to the legacy per-slot host-argmax path."""
+    cfg, model, params = model_and_params
+    ref = _reference_outputs(cfg, model, params)      # fused (default)
+    reqs = _requests(cfg)
+    eng = ServingEngine(model, params, EngineConfig(
+        max_slots=8, max_seq_len=64, max_new_tokens=48, strategy="vllm",
+        quantize_offload=False, fused_decode=False),
+        predictor=OraclePredictor())
+    eng.serve(reqs)
+    for r in reqs:
+        assert ref[r.req_id] == list(r.output_tokens)
+
+
+def test_profiling_rings_bounded(model_and_params):
+    """iter_times / prefill_times are ring buffers: long-running gateway
+    serves must not grow them without bound."""
+    cfg, model, params = model_and_params
+    reqs = _requests(cfg, outs=(20, 20, 20, 20))
+    eng = ServingEngine(model, params, EngineConfig(
+        max_slots=2, max_seq_len=64, max_new_tokens=24, strategy="alise",
+        profile_window=8), predictor=OraclePredictor())
+    eng.serve(reqs)
+    assert len(eng.iter_times) <= 8
+    assert len(eng.prefill_times) <= 8
+    lm = eng.fit_latency_model()                      # still fittable from
+    assert lm.beta >= 0 and lm.t0 >= 0                # the ring tail alone
+
+
 def test_mamba_engine_state_swap():
     """SSM archs swap constant-size state instead of KV (DESIGN §5)."""
     cfg = get_smoke_config("mamba2-2.7b")

@@ -84,6 +84,31 @@ def test_gateway_streams_bit_identical_to_batch(model_and_params):
     assert all(d.engine.sched.finished for d in gw.router.drivers)
 
 
+def test_gateway_paged_engines_bit_identical(model_and_params):
+    """The streaming invariant holds with paged-backend replicas: tokens
+    match the dense batch reference exactly (greedy, quantize off)."""
+    cfg, model, params = model_and_params
+    reset_request_counter()
+    reqs = poisson_requests(cfg, n=12)
+    ref_reqs = clone_for_batch(reqs)
+    ref_eng = mk_engine(model, params, max_slots=8)
+    ref_eng.serve(ref_reqs)
+    ref = [list(r.output_tokens) for r in ref_reqs]
+
+    def mk_paged():
+        return ServingEngine(model, params, EngineConfig(
+            max_slots=2, max_seq_len=64, max_new_tokens=24,
+            strategy="alise", quantize_offload=False,
+            kv_backend="paged", page_size=16),
+            predictor=OraclePredictor())
+
+    gw = Gateway([mk_paged(), mk_paged()],
+                 GatewayConfig(virtual_dt=0.05, router_policy="ewt"))
+    streams = asyncio.run(gw.replay(reqs))
+    assert [s.token_values for s in streams] == ref
+    assert gw.metrics.completed() == 12
+
+
 def test_admission_sheds_batch_never_interactive(model_and_params):
     """Acceptance: under overload, batch-class is shed/deferred while
     interactive-class is always admitted and sees lower p50 TTFT."""
@@ -335,6 +360,40 @@ def test_ttft_observe_policy_never_gates(model_and_params):
         assert gw.metrics.per_class[c].deferred == 0
     assert gw.metrics.completed() == 10
     assert gw.admission.ttft_misses_predicted > 0   # recorded, not gated
+
+
+def test_deferred_release_slack_ordering(model_and_params):
+    """Deferred-queue releases dispatch the request with the least
+    predicted TTFT headroom first (longer prefill = larger intrinsic TTFT
+    term = less slack), and fall back to FIFO when configured."""
+    cfg, model, params = model_and_params
+
+    def order_after_release(release_order):
+        reset_request_counter()
+        rng = np.random.default_rng(5)
+        short = Request(prompt_len=4, arrival_time=0.0, true_out_len=4,
+                        prompt_tokens=rng.integers(
+                            2, cfg.vocab_size, 4).tolist())
+        long = Request(prompt_len=12, arrival_time=0.0, true_out_len=4,
+                       prompt_tokens=rng.integers(
+                           2, cfg.vocab_size, 12).tolist())
+        gw = Gateway([mk_engine(model, params)],
+                     GatewayConfig(virtual_dt=0.05),
+                     admission=AdmissionConfig(
+                         ttft_target_batch=30.0,
+                         release_order=release_order))
+        for r in (short, long):
+            gw.streams[r.req_id] = RequestStream(r)
+        gw.deferred.extend([short, long])          # arrival order
+        gw._release_deferred(0.0)
+        eng = gw.router.drivers[0].engine
+        dispatch_order = list(eng.sched.live.keys())
+        return short.req_id, long.req_id, dispatch_order
+
+    s_id, l_id, order = order_after_release("slack")
+    assert order == [l_id, s_id]       # least headroom (long prefill) first
+    s_id, l_id, order = order_after_release("fifo")
+    assert order == [s_id, l_id]       # strict arrival order
 
 
 def test_ttft_deferred_batch_holds_then_drains(model_and_params):

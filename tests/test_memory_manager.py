@@ -115,3 +115,47 @@ def test_property_accounting_never_leaks(ops):
         mem.free(r)
     assert mem.used_hbm == pytest.approx(0.0, abs=1e-6)
     assert mem.used_dram == pytest.approx(0.0, abs=1e-6)
+
+
+def test_page_granular_accounting():
+    """With page_size set, HBM bytes round token counts up to whole pages
+    (the accounting then upper-bounds the physical page pool exactly);
+    grow() charges a page only on boundary crossings."""
+    mem = TieredKVManager(MemoryConfig(
+        hbm_bytes=100 * BPT, dram_bytes=1e9, bytes_per_token_fp=BPT,
+        quantize_offload=False, admit_headroom=0.0, page_size=8))
+    r = mk_req(prompt=10)                     # reserves 11 -> 2 pages
+    mem.admit(r)
+    assert mem.used_hbm == 16 * BPT
+    assert mem.pages_of(mem.reserved[r.req_id]) == 2
+    # tokens 11..15 stay inside the reserved pages: no new bytes
+    for g in range(1, 6):
+        r.generated = g
+        assert mem.grow(r)
+    assert mem.used_hbm == 16 * BPT
+    # token 16 crosses into page 3
+    r.generated = 6
+    assert mem.grow(r)
+    assert mem.used_hbm == 24 * BPT
+    mem.check_invariants()
+    # offload/upload keep page-rounded books balanced
+    mem.offload(r, now=0.0)
+    assert mem.used_hbm == 0
+    mem.upload(r, now=1.0)
+    mem.check_invariants()
+    mem.free(r)
+    assert mem.used_hbm == 0
+
+
+def test_page_granular_admission_bounds_pool():
+    """can_admit says no once the page-rounded reservation exceeds the
+    budget, even though raw token bytes would still fit."""
+    mem = TieredKVManager(MemoryConfig(
+        hbm_bytes=4 * 8 * BPT, dram_bytes=1e9, bytes_per_token_fp=BPT,
+        quantize_offload=False, admit_headroom=0.0, page_size=8))
+    a = mk_req(prompt=9)                      # 10 reserved -> 2 pages
+    mem.admit(a)
+    b = mk_req(prompt=9)
+    mem.admit(b)                              # 4 pages used: pool full
+    c = mk_req(prompt=1)                      # 2 raw tokens would fit...
+    assert not mem.can_admit(c)               # ...but need a whole page
