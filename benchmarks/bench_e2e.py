@@ -82,6 +82,40 @@ def run_engine_decode(arch: str = "granite-3-8b") -> dict:
     return results
 
 
+def run_prefill_interleave_sim(model: str = "opt-13b") -> dict:
+    """Simulator twin of bench_hol's prefill_interleave: ALISE on the
+    long-prompt-heavy ShareGPT mix, monolithic vs chunked IterationPlans.
+    Reports normalized latency, TTFT p50/p99 (first chunk scheduling to
+    first token), and completion."""
+    import numpy as np
+    out = {}
+    kw = dict(model=model, strategy="alise", dataset="sharegpt",
+              rate=pick(2.0, 1.0), duration=pick(60.0, 6.0), seed=0)
+    modes = {"mono": {}, "chunked": dict(prefill_chunk=256,
+                                         iter_token_budget=1024)}
+    for mode, mkw in modes.items():
+        t0 = time.perf_counter()
+        r = run_sim(**kw, **mkw)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        ttfts = np.array([q.first_token_time - q.arrival_time
+                          for q in r.requests
+                          if q.first_token_time is not None] or [0.0])
+        out[mode] = dict(norm_ms=r.normalized_latency * 1e3,
+                         ttft_p50=float(np.percentile(ttfts, 50)),
+                         ttft_p99=float(np.percentile(ttfts, 99)))
+        emit(f"e2e/prefill_interleave/{mode}", wall_us,
+             f"norm_latency_ms={out[mode]['norm_ms']:.2f};"
+             f"ttft_p50_s={out[mode]['ttft_p50']:.3f};"
+             f"ttft_p99_s={out[mode]['ttft_p99']:.3f};"
+             f"done={r.completed}/{r.total}")
+    note(f"[prefill_interleave/sim] TTFT p99 "
+         f"{out['mono']['ttft_p99']:.2f}s mono -> "
+         f"{out['chunked']['ttft_p99']:.2f}s chunked; norm "
+         f"{out['mono']['norm_ms']:.1f} -> {out['chunked']['norm_ms']:.1f}"
+         f" ms/token")
+    return out
+
+
 def run(model: str = "opt-13b") -> dict:
     results = {}
     rates_by_ds = pick(RATES, {"alpaca": (8.0,), "sharegpt": (1.0,)})
@@ -114,6 +148,7 @@ def run(model: str = "opt-13b") -> dict:
              f"advantage = {sp:.2f}x (paper: up to "
              f"{'1.8x' if dataset == 'alpaca' else '2.1x'})")
     results["engine_decode"] = run_engine_decode()
+    results["prefill_interleave"] = run_prefill_interleave_sim(model)
     return results
 
 

@@ -1,5 +1,20 @@
 """Paper Fig. 2 (motivation): end-to-end latency, FCFS vs ALISE speculative
-scheduling, OPT-13B on ShareGPT with rising request rates."""
+scheduling, OPT-13B on ShareGPT with rising request rates.
+
+Plus ``hol/prefill_interleave/*``: the execution-level head-of-line story —
+a long-prompt arrival lands on an engine with resident decode lanes, served
+monolithic vs chunked (token-budgeted IterationPlan).  Reports decode-lane
+TPOT p99 (the stall a whole-prompt prefill dispatch inflicts on resident
+lanes), the long prompt's TTFT, and decode tok/s, on both KV backends;
+greedy outputs are asserted bit-identical chunked-vs-monolithic.
+
+Reading the numbers on the 2-core CI box: the paged backend shows the
+chunked TPOT-p99 win clearly (~2x); on the dense backend the smoke model
+is so small that per-dispatch XLA-CPU overhead (full-cache output copies,
+no buffer donation on CPU) rivals the prefill compute itself, so the
+dense ratio sits near 1x and is load-noisy — the compute-bound regime
+that motivates chunking grows with model size and context.
+"""
 from __future__ import annotations
 
 import time
@@ -8,6 +23,117 @@ from benchmarks.common import emit, note, pick
 from repro.core.simulator import run_sim
 
 RATES = (0.5, 1.0, 2.0, 3.0, 4.0, 5.0)
+
+
+def run_prefill_interleave(arch: str = "granite-3-8b") -> dict:
+    """Real-engine interleaving benchmark: monolithic vs chunked prefill."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core.engine import EngineConfig, ServingEngine
+    from repro.core.predictor import OraclePredictor
+    from repro.core.request import Request, reset_request_counter
+    from repro.models.model import Model
+
+    cfg = get_smoke_config(arch)
+    model = Model(cfg, attn_chunk=32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    long_prompt = pick(160, 40)
+    out_res = pick(48, 10)
+    chunk = pick(16, 8)
+    max_seq = 256
+    n_res = 3
+
+    def mk_reqs():
+        reset_request_counter()
+        rng = np.random.default_rng(0)
+        reqs = [Request(prompt_len=8, arrival_time=0.0, true_out_len=out_res,
+                        prompt_tokens=rng.integers(
+                            2, cfg.vocab_size, 8).tolist())
+                for _ in range(n_res)]
+        reqs.append(Request(
+            prompt_len=long_prompt, arrival_time=0.0, true_out_len=4,
+            prompt_tokens=rng.integers(
+                2, cfg.vocab_size, long_prompt).tolist()))
+        return reqs
+
+    backends = {"dense": dict(),
+                "paged": dict(kv_backend="paged", page_size=16)}
+    modes = {"mono": dict(),
+             "chunked": dict(prefill_chunk=chunk,
+                             iter_token_budget=chunk + 2 * n_res)}
+    results: dict = {}
+    tokens_of: dict = {}
+    for bname, bkw in backends.items():
+        for mode, mkw in modes.items():
+            eng = ServingEngine(model, params, EngineConfig(
+                max_slots=8, max_seq_len=max_seq, max_new_tokens=out_res,
+                strategy="alise", quantize_offload=False, **bkw, **mkw),
+                predictor=OraclePredictor())
+            # warm the jit caches (prefill buckets + fused decode)
+            eng.serve(mk_reqs())
+            reqs = mk_reqs()
+            long_r = reqs[-1]
+            eng.stream_events = True
+            events = []
+            first_long = [None]
+            t0 = time.perf_counter()
+
+            def pump(stop_fn, max_iters=20000):
+                for _ in range(max_iters):
+                    if stop_fn():
+                        return
+                    eng.step(time.perf_counter() - t0)
+                    events.extend(eng.poll_events())
+                    # engine event stamps are step-*start* times; observe
+                    # the long prompt's first token host-side so monolithic
+                    # TTFT includes the prefill dispatch it waited on
+                    if first_long[0] is None and long_r.generated >= 1:
+                        first_long[0] = time.perf_counter() - t0
+
+            for r in reqs[:n_res]:
+                eng.submit(r, 0.0)
+            pump(lambda: all(r.generated >= 3 for r in reqs[:n_res]))
+            t_arrival = time.perf_counter() - t0
+            eng.submit(long_r, t_arrival)
+            pump(lambda: not eng.sched.live)
+            wall = time.perf_counter() - t0
+
+            res_ids = {r.req_id for r in reqs[:n_res]}
+            stamps: dict = {}
+            for ev in events:
+                if ev.kind == "token" and ev.req_id in res_ids:
+                    stamps.setdefault(ev.req_id, []).append(ev.t)
+            gaps = [b - a for ts in stamps.values()
+                    for a, b in zip(ts, ts[1:])]
+            tpot_p99 = float(np.percentile(gaps, 99)) if gaps else 0.0
+            ttft_long = (first_long[0] or wall) - t_arrival
+            toks = sum(r.generated for r in reqs)
+            tok_s = toks / max(wall, 1e-9)
+            results[(bname, mode)] = dict(tpot_p99=tpot_p99,
+                                          ttft_long=ttft_long, tok_s=tok_s)
+            tokens_of[(bname, mode)] = {r.req_id: list(r.output_tokens)
+                                        for r in reqs}
+            emit(f"hol/prefill_interleave/{bname}/{mode}", tpot_p99 * 1e6,
+                 f"tpot_p99_ms={tpot_p99*1e3:.2f};"
+                 f"ttft_long_ms={ttft_long*1e3:.2f};tok_per_s={tok_s:.1f}")
+        # acceptance: greedy outputs bit-identical chunked vs monolithic
+        assert tokens_of[(bname, "mono")] == tokens_of[(bname, "chunked")], \
+            f"{bname}: chunked prefill changed greedy outputs"
+        ratio = (results[(bname, "mono")]["tpot_p99"]
+                 / max(results[(bname, "chunked")]["tpot_p99"], 1e-9))
+        emit(f"hol/prefill_interleave/{bname}/tpot_p99_improvement", 0.0,
+             f"{ratio:.2f}x")
+        note(f"[prefill_interleave] {bname}: TPOT p99 "
+             f"{results[(bname, 'mono')]['tpot_p99']*1e3:.2f}ms mono -> "
+             f"{results[(bname, 'chunked')]['tpot_p99']*1e3:.2f}ms chunked "
+             f"({ratio:.2f}x); long-prompt TTFT "
+             f"{results[(bname, 'mono')]['ttft_long']*1e3:.1f} -> "
+             f"{results[(bname, 'chunked')]['ttft_long']*1e3:.1f}ms")
+    assert tokens_of[("dense", "chunked")] == tokens_of[("paged", "chunked")], \
+        "chunked greedy outputs diverge across KV backends"
+    return results
 
 
 def run(model: str = "opt-13b") -> dict:
@@ -27,6 +153,7 @@ def run(model: str = "opt-13b") -> dict:
         note(f"[fig2] rate={rate:4.1f} FCFS={fcfs.mean_latency:7.2f}s "
              f"ALISE={alise.mean_latency:7.2f}s "
              f"({fcfs.mean_latency/max(alise.mean_latency,1e-9):.2f}x)")
+    out["prefill_interleave"] = run_prefill_interleave()
     return out
 
 

@@ -32,7 +32,8 @@ from benchmarks import common
 from benchmarks.common import note
 
 # rows whose ``derived`` tok_per_s lands in the artifact's headline metrics
-PERF_METRIC_PREFIXES = ("e2e/engine_decode/", "gateway/wall/")
+PERF_METRIC_PREFIXES = ("e2e/engine_decode/", "gateway/wall/",
+                        "hol/prefill_interleave/")
 
 
 def _perf_metrics() -> dict:

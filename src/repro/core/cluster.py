@@ -87,60 +87,21 @@ class Replica:
         return len(self.sim.sched.live)
 
     def advance_to(self, t: float) -> List[Request]:
-        """Run iterations until the replica clock reaches t; returns finishes."""
+        """Run iterations until the replica clock reaches t; returns
+        finishes.  Each iteration plans and executes the same
+        ``IterationPlan`` contract as the single-node simulator / the real
+        engine (``ServingSimulator.execute_plan`` / ``account_tokens``)."""
         finished_before = len(self.sim.sched.finished)
         sched, sim = self.sim.sched, self.sim
         while self.clock < t and sched.live:
             plan = sched.plan(self.clock)
-            for r in plan.drop:
-                sim.mem.drop(r); r.state = RequestState.QUEUED
-                r.preempt_count += 1
-            for r in plan.swap_out:
-                sim.mem.offload(r, self.clock)
-                r.state = RequestState.PREEMPTED
-                r.preempt_count += 1
-            for r in plan.dequantize_cold:
-                sim.mem.dequantize_cold(r, self.clock)
-            for r in plan.swap_in:
-                op = sim.mem.upload(r, self.clock)
-                r.state = RequestState.SWAPPING
-                sched._swap_ready_at[r.req_id] = op.done_time
-
-            t_iter, ctx, ran = 0.0, 0, False
-            for r in plan.prefill + plan.recompute:
-                sim.mem.admit(r); r.state = RequestState.RUNNING
-                if r.first_scheduled_time is None:
-                    r.first_scheduled_time = self.clock
-                t_iter += sim.latency.prefill_time(r.context_len)
-                ran = True
-            decoders = [r for r in plan.run if sim.mem.location_of(r) == KVLocation.HBM]
-            for r in decoders:
-                r.state = RequestState.RUNNING
-                ctx += r.context_len
-                ran = True
-            if decoders:
-                t_iter += sim.latency.beta + sim.latency.alpha * ctx
+            t_iter, ran = sim.execute_plan(plan, self.clock)
             if not ran:
                 nxt = [x for x in sched._swap_ready_at.values() if x > self.clock]
                 self.clock = min(nxt) if nxt else t
                 continue
             self.clock += t_iter
-            for r in plan.prefill + plan.recompute + decoders:
-                if sim.mem.location_of(r) != KVLocation.HBM:
-                    continue
-                if r in plan.recompute and r.generated > 0:
-                    pass
-                else:
-                    r.generated += 1
-                    if r.first_token_time is None:
-                        r.first_token_time = self.clock
-                if not sim.mem.grow(r):
-                    sim._handle_oom(r, self.clock)
-                    if sim.mem.location_of(r) != KVLocation.HBM:
-                        continue
-                sched.note_generated(r, self.clock)
-                if r.generated >= r.true_out_len:
-                    sched.note_finished(r, self.clock)
+            sim.account_tokens(plan, self.clock)
         self.clock = max(self.clock, t)
         return self.sim.sched.finished[finished_before:]
 

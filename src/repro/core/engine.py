@@ -1,10 +1,19 @@
 """Real-execution serving engine: continuous batching + ALISE scheduling over
 an actual JAX model (paper §3.3).
 
-The engine drives the same Scheduler / TieredKVManager as the simulator, but
-executes true ``Model.prefill`` / fused decode calls over a pluggable
+The engine drives the same Scheduler / TieredKVManager as the simulator and
+executes the scheduler's :class:`~repro.core.scheduler.IterationPlan` — a
+token-budgeted list of typed work items — over a pluggable
 :class:`~repro.serving.kv_cache.KVBackend`:
 
+  * **chunked, resumable prefill**: each :class:`PrefillChunk` item runs
+    ``prefill_chunk``-sized pieces of a prompt through
+    ``Model.prefill_chunk`` (dense) / ``Model.paged_prefill_chunk`` (paged,
+    KV written device-side through the page pool, mid-page chunk boundaries
+    included), resuming from the partially-filled cache — so one long
+    prompt no longer stalls every resident decode lane for a whole-prompt
+    dispatch.  Families without chunk support (SSM / hybrid / enc-dec)
+    fall back to the monolithic ``Model.prefill`` path;
   * decode lanes ("slots") give the batch a fixed shape => one compiled step;
     storage is either the dense slotted cache or the paged KV pool
     (``EngineConfig.kv_backend``);
@@ -13,7 +22,8 @@ executes true ``Model.prefill`` / fused decode calls over a pluggable
     temperature/top-k) and EOS/length termination all run on device — the
     host syncs a single ``(tokens, reasons)`` pair instead of one
     ``int(jnp.argmax(...))`` per slot (``fused_decode=False`` keeps the
-    legacy per-slot dispatch for comparison);
+    legacy per-slot dispatch for comparison); prefill first tokens and the
+    legacy path sample through the same ``sampler.sample_and_reason``;
   * request-level KV swapping between the device cache ("HBM") and a host
     pool ("DRAM"), quantized INT8 *on device* via the Pallas kv_quant
     kernels per the paper's Eq. 8 — the host link carries the INT8 payload;
@@ -23,7 +33,8 @@ executes true ``Model.prefill`` / fused decode calls over a pluggable
 
 Correctness invariant (tested): with greedy sampling and quantization off,
 generated tokens are bit-identical no matter how jobs are preempted/swapped,
-and identical across the dense and paged backends.
+identical across the dense and paged backends, and identical chunked vs
+monolithic at any chunk size / token budget.
 """
 from __future__ import annotations
 
@@ -41,12 +52,13 @@ from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import MemoryConfig, TieredKVManager
 from repro.core.predictor import LengthPredictor, RetrievalPredictor
 from repro.core.quantization import kv_bytes_per_token
-from repro.core.request import Request, RequestState
-from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.request import KVLocation, Request, RequestState
+from repro.core.scheduler import (DecodeLane, PrefillChunk, Scheduler,
+                                  SchedulerConfig)
 from repro.models.model import Model
 from repro.serving.kv_cache import (DenseKVBackend, KVBackendConfig,
                                     PagedKVBackend)
-from repro.serving.sampler import REASONS, temperature as sample_temperature
+from repro.serving.sampler import REASONS, sample_and_reason
 
 
 @dataclass
@@ -90,6 +102,12 @@ class EngineConfig:
                                            # kernel (Pallas paged attention)
     fused_decode: bool = True              # one in-jit dispatch per iter
                                            # (False: legacy per-slot sampling)
+    prefill_chunk: Optional[int] = None    # max prompt tokens per prefill
+                                           # chunk (None = monolithic);
+                                           # ignored for families without
+                                           # chunked-prefill support
+    iter_token_budget: Optional[int] = None  # scheduler token budget per
+                                             # iteration (None = unbounded)
     profile_window: int = 4096             # iter/prefill ring-buffer size
     strategy: str = "alise"
     n_queues: int = 4
@@ -119,11 +137,16 @@ class ServingEngine:
         self.mem = TieredKVManager(mem_cfg)
         self.predictor = predictor or RetrievalPredictor(seed=cfg.seed)
         self.latency = latency or LatencyModel(t0=1e-4, alpha=1e-6, beta=1e-2)
+        # chunked prefill needs backend support (attention-family
+        # decoder-only); other families keep monolithic whole-prompt spans
+        self._chunked_ok = model.supports_chunked_prefill()
         sched_cfg = SchedulerConfig(
             max_batch=cfg.max_slots, n_queues=cfg.n_queues,
             base_quantum=cfg.base_quantum, quantum_growth=cfg.quantum_growth,
             age_threshold=cfg.age_threshold, strategy=cfg.strategy,
-            max_new_tokens=cfg.max_new_tokens)
+            max_new_tokens=cfg.max_new_tokens,
+            prefill_chunk=(cfg.prefill_chunk if self._chunked_ok else None),
+            iter_token_budget=cfg.iter_token_budget)
         self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
 
         # --- device state: the pluggable KV backend owns slots + storage
@@ -171,11 +194,12 @@ class ServingEngine:
         self._submit_lock = threading.Lock()
 
     # -------------------------------------------------------------- prefill
-    def _run_prefill(self, req: Request, tokens: List[int]) -> int:
-        """Prefill `tokens`, place KV into a free lane; returns sampled token."""
+    def _run_prefill(self, req: Request, tokens: List[int]):
+        """Monolithic prefill fallback for families without chunked-prefill
+        support (SSM / hybrid / enc-dec): one ``Model.prefill`` dispatch,
+        KV placed into a free lane.  Returns the last-token logits row."""
         assert self.kv.free_slot() is not None, \
             "caller must check slot availability"
-        t0 = time.perf_counter()
         S = len(tokens)
         fam = self.model.cfg.family
         if fam in ("ssm", "hybrid"):
@@ -188,21 +212,100 @@ class ServingEngine:
             batch = {"tokens": jnp.asarray(padded, jnp.int32)[None, :],
                      "last_index": jnp.asarray([S - 1], jnp.int32)}
         logits, pcache = self._prefill(self.params, batch)
-        nxt = self._sample(logits[0])
         self.kv.write_prefill(req.req_id, pcache, S)
-        dt = time.perf_counter() - t0
-        self.prefill_times.append((S, dt))
-        return int(nxt)
+        return logits
 
-    def _sample(self, logits: jnp.ndarray) -> int:
-        """Host-side sampling (prefill first-token + legacy per-slot path)."""
-        if self.cfg.greedy:
-            return int(jnp.argmax(logits))
+    def _sample_host(self, logits_row, new_gen: int, new_ctx: int,
+                     true_len: int):
+        """One-row host-side sampling + termination for prefill first
+        tokens and the legacy per-slot decode path — the same
+        ``sample_and_reason`` chain the fused decode step runs on device,
+        so every code path shares one sampling implementation.  Returns
+        ``(token, reason_str)``."""
         self._sample_count += 1
         key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
                                  self._sample_count)
-        return int(sample_temperature(logits, key, self.cfg.temperature,
-                                      self.cfg.top_k))
+        tok, reason = sample_and_reason(
+            logits_row[None], key, greedy_sampling=self.cfg.greedy,
+            temp=self.cfg.temperature, top_k=self.cfg.top_k,
+            eos_token=self.cfg.eos_token,
+            max_new_tokens=self.cfg.max_new_tokens,
+            max_seq_len=self.cfg.max_seq_len,
+            new_gen=jnp.asarray([new_gen], jnp.int32),
+            new_ctx=jnp.asarray([new_ctx], jnp.int32),
+            true_len=jnp.asarray([true_len], jnp.int32))
+        return int(tok[0]), REASONS[int(reason[0])]
+
+    def _true_len_of(self, req: Request) -> int:
+        return (req.true_out_len if self.cfg.respect_true_len
+                else np.iinfo(np.int32).max)
+
+    def _exec_prefill_chunk(self, chunk: PrefillChunk, generated_of,
+                            t: float) -> bool:
+        """Execute one PrefillChunk item: (first chunk) claim a lane and
+        admit memory, run the chunk through the backend's resumable prefill
+        (or the monolithic fallback), and — when the final chunk of a fresh
+        prefill completes — sample the request's first token.  Returns
+        whether the chunk ran."""
+        r = chunk.req
+        rid = r.req_id
+        if self.mem.location_of(r) == KVLocation.DRAM:
+            # spilled by an earlier item *this* iteration (page shortfall /
+            # mid-iteration grow): its prefix KV now lives in the host
+            # pool, so the chunk cannot resume until swap-in restores it
+            return False
+        if chunk.start > 0 and not self.kv.has(rid):
+            # prefix KV vanished since planning (drop path): the scheduler
+            # re-plans from Request.prefilled (reset to 0) next iteration
+            return False
+        if not self.kv.has(rid) and self.kv.free_slot() is None:
+            return False               # lanes exhausted; retry next iteration
+        # paged backend: the chunk's coverage may need fresh physical pages;
+        # spill the largest-context other resident until it fits (same
+        # victim rule as the decode-path page shortfall).  Prefer fully-
+        # prefilled victims — evicting a mid-prefill request whose own
+        # chunk is still queued this iteration would just bounce it back.
+        while self.kv.chunk_pages_shortfall(rid, chunk.end) > 0:
+            others = [x for x in self.sched.live.values()
+                      if x.req_id != rid and self.kv.has(x.req_id)
+                      and self.mem.resident_hbm(x)]
+            if not others:
+                return False           # cannot make room this iteration
+            done = [x for x in others if x.prefill_pending == 0]
+            victim = max(done or others, key=lambda x: x.context_len)
+            self._offload(victim)
+            self.mem.offload(victim, t)
+            victim.state = RequestState.PREEMPTED
+            victim.preempt_count += 1
+        if self.mem.location_of(r) == KVLocation.NONE:
+            self.mem.admit(r)
+        r.state = RequestState.RUNNING
+        if r.first_scheduled_time is None:
+            r.first_scheduled_time = t
+        gen = generated_of[rid]
+        # cache invariant: the most recent sampled token's KV is not yet
+        # written (the next decode step feeds it), so a recompute prefill
+        # covers prompt + generated[:-1].
+        target_toks = list(r.prompt_tokens) + (gen[:-1] if gen else [])
+        t0 = time.perf_counter()
+        if self._chunked_ok:
+            logits = self.kv.prefill_chunk(
+                self.params, rid, target_toks[chunk.start:chunk.end],
+                chunk.start)
+            r.prefilled = chunk.end
+            self.prefill_times.append((chunk.size, time.perf_counter() - t0))
+        else:
+            assert chunk.start == 0 and chunk.last, \
+                "monolithic fallback cannot resume a partial chunk"
+            logits = self._run_prefill(r, target_toks)
+            r.prefilled = len(target_toks)
+            self.prefill_times.append((len(target_toks),
+                                       time.perf_counter() - t0))
+        if chunk.last and r.generated == 0:   # fresh prefill emits a token
+            tok, reason = self._sample_host(
+                logits[0], 1, r.context_len + 1, self._true_len_of(r))
+            self._accept_token(r, tok, generated_of, t, reason=reason)
+        return True
 
     # ------------------------------------------------------------ swapping
     def _swap_stall(self, n_tokens: int, t0: float) -> None:
@@ -338,12 +441,27 @@ class ServingEngine:
         never race a step mutating scheduler state in an executor thread.
         Between engine-state changes the cache is exact, which keeps
         virtual-clock routing decisions bit-identical to a fresh compute.
-        Mailbox arrivals not yet scheduled contribute their prefill
-        estimate so back-to-back dispatches don't all see a stale zero."""
+        Mailbox arrivals not yet scheduled contribute their remaining
+        prefill estimate (the chunked-prefill cost model over the actual
+        prefill target — prompt plus recompute tokens for a re-routed
+        request, minus anything already materialized) so back-to-back
+        dispatches don't all see a stale zero and wall-mode routing doesn't
+        mis-estimate parked work."""
+        chunk = self.sched.cfg.prefill_chunk
         with self._submit_lock:
-            pending = sum(self.latency.prefill_time(req.prompt_len)
+            pending = sum(self.latency.prefill_time_remaining(
+                              req.prefill_target, req.prefilled, chunk)
                           for req, _ in self._submit_box)
         return self._backlog_cache + pending
+
+    def prefill_estimate(self, prompt_len: int) -> float:
+        """Prefill latency term for the gateway's expected-TTFT admission
+        gate: with chunked prefill enabled, only the *first chunk* gates
+        (later chunks interleave with resident decode instead of
+        serializing behind the backlog); monolithic prefill charges the
+        whole prompt."""
+        return self.latency.first_chunk_time(prompt_len,
+                                             self.sched.cfg.prefill_chunk)
 
     def serve(self, requests: List[Request], realtime: bool = False,
               max_wall_s: float = 600.0) -> List[Request]:
@@ -425,27 +543,18 @@ class ServingEngine:
                 self.sched._swap_ready_at[r.req_id] = 0.0
 
             ran_any = False
-            # fresh prefills + recomputes
-            for r in plan.prefill + plan.recompute:
-                if self.kv.free_slot() is None:
-                    continue               # slots (not bytes) exhausted
-                # cache invariant: the most recent sampled token's KV is not
-                # yet written (the next decode step feeds it), so a recompute
-                # prefill covers prompt + generated[:-1].
-                gen = generated_of[r.req_id]
-                toks = list(r.prompt_tokens) + (gen[:-1] if gen else [])
-                self.mem.admit(r)
-                r.state = RequestState.RUNNING
-                if r.first_scheduled_time is None:
-                    r.first_scheduled_time = now()
-                was_fresh = r.generated == 0
-                tok = self._run_prefill(r, toks)
-                ran_any = True
-                if was_fresh:              # first prefill emits a token
-                    self._accept_token(r, tok, generated_of, now())
+            # compute items in priority order: prefill chunks execute as
+            # encountered; decode lanes collect into one fused batch
+            decode_lanes: List[Request] = []
+            for item in plan.items:
+                if isinstance(item, DecodeLane):
+                    decode_lanes.append(item.req)
+                else:
+                    ran_any |= self._exec_prefill_chunk(item, generated_of,
+                                                        now())
 
             # decode batch
-            runnable = [r for r in plan.run if self.kv.has(r.req_id)]
+            runnable = [r for r in decode_lanes if self.kv.has(r.req_id)]
             if runnable and self.cfg.kv_backend == "paged":
                 runnable = self._reserve_pages(runnable, now())
             if runnable:
@@ -494,8 +603,11 @@ class ServingEngine:
                                            now(),
                                            reason=REASONS[int(reasons[slot])])
                     else:
-                        tok = self._sample(logits[slot])
-                        self._accept_token(r, tok, generated_of, now())
+                        tok, reason = self._sample_host(
+                            logits[slot], r.generated + 1, r.context_len + 1,
+                            self._true_len_of(r))
+                        self._accept_token(r, tok, generated_of, now(),
+                                           reason=reason)
                 ran_any = True
 
             self._backlog_cache = self.sched.predicted_backlog()
@@ -513,11 +625,15 @@ class ServingEngine:
         return ran, self.poll_events()
 
     def _accept_token(self, req: Request, tok: int, generated_of, t: float,
-                      reason: Optional[str] = None):
-        """Record a sampled token.  ``reason`` carries the device-computed
-        termination verdict from the fused step; None (prefill first token,
-        legacy path) recomputes the identical chain host-side."""
+                      reason: str = ""):
+        """Record a sampled token.  ``reason`` carries the termination
+        verdict from ``sample_and_reason`` — computed on device by the
+        fused step, host-side (same function) for prefill first tokens and
+        the legacy per-slot path."""
         req.generated += 1
+        # the fed/just-sampled token's predecessors are all materialized:
+        # context minus the one token whose KV the next decode step writes
+        req.prefilled = req.prompt_len + max(req.generated - 1, 0)
         generated_of[req.req_id].append(tok)
         req.output_tokens.append(tok)
         if self.stream_events:
@@ -539,17 +655,6 @@ class ServingEngine:
                 victim.state = RequestState.PREEMPTED
                 victim.preempt_count += 1
                 self.mem.grow(req)
-        if reason is None:
-            reason = ""
-            if tok == self.cfg.eos_token:
-                reason = "eos"
-            elif req.generated >= self.cfg.max_new_tokens:
-                reason = "length"
-            elif req.context_len >= self.cfg.max_seq_len - 1:
-                reason = "ctx"
-            elif (self.cfg.respect_true_len
-                  and req.generated >= req.true_out_len):
-                reason = "true_len"
         if reason:
             self._drop_kv(req.req_id)      # lane/pages or host-pool copy
             self.sched.note_finished(req, t)

@@ -13,7 +13,7 @@ timings on this host.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, Tuple
+from typing import Iterable, Optional, Tuple
 
 import numpy as np
 
@@ -27,6 +27,39 @@ class LatencyModel:
     def prefill_time(self, s: int) -> float:
         return s * self.t0
 
+    def prefill_chunk_time(self, start: int, size: int) -> float:
+        """Cost of prefilling tokens [start, start+size) of a prompt.
+
+        The first chunk (start=0) costs exactly ``prefill_time(size)``; a
+        resumed chunk additionally re-reads the ``start`` tokens of prefix
+        KV its queries attend over — the same per-context-token ``alpha``
+        the decode model charges (Eq. 5 applied per chunk token)."""
+        return size * self.t0 + self.alpha * size * start
+
+    def prefill_time_remaining(self, total: int, prefilled: int,
+                               chunk: Optional[int] = None) -> float:
+        """Remaining prefill cost for a (possibly partially) prefilled
+        prompt of ``total`` tokens, executed in ``chunk``-token pieces
+        (None/0 = one monolithic chunk).  Sums ``prefill_chunk_time`` over
+        the chunks still to run."""
+        prefilled = min(max(prefilled, 0), total)
+        if prefilled >= total:
+            return 0.0
+        if not chunk:
+            return self.prefill_chunk_time(prefilled, total - prefilled)
+        t, start = 0.0, prefilled
+        while start < total:
+            size = min(chunk, total - start)
+            t += self.prefill_chunk_time(start, size)
+            start += size
+        return t
+
+    def first_chunk_time(self, s: int, chunk: Optional[int] = None) -> float:
+        """Prefill latency until a prompt first occupies the accelerator:
+        the whole prompt when monolithic, one chunk when chunked (later
+        chunks interleave with resident decode work)."""
+        return self.prefill_time(min(s, chunk) if chunk else s)
+
     def decode_iter_time(self, s: int) -> float:
         """One decode iteration for a job with context length s."""
         return self.alpha * s + self.beta
@@ -38,12 +71,18 @@ class LatencyModel:
         return self.prefill_time(s) + self.decode_time(s, n)
 
     def remaining_time(self, s: int, generated: int, predicted: int,
-                       prefilled: bool) -> float:
-        """Estimated remaining execution time (SRTF key)."""
+                       prefilled, chunk: Optional[int] = None) -> float:
+        """Estimated remaining execution time (SRTF key).
+
+        ``prefilled`` is the count of prompt tokens whose KV is already
+        materialized (partially-prefilled jobs owe only their remaining
+        chunks); legacy bool callers still work — True means fully
+        prefilled, False means cold."""
+        if isinstance(prefilled, bool):
+            prefilled = s if prefilled else 0
         rem_tokens = max(predicted - generated, 1)
         t = rem_tokens * self.decode_iter_time(s + generated)
-        if not prefilled:
-            t += self.prefill_time(s)
+        t += self.prefill_time_remaining(s, prefilled, chunk)
         return t
 
     # ------------------------------------------------------------------ fit

@@ -213,6 +213,7 @@ class TieredKVManager:
         self.location.pop(rid, None)
         req.kv_location = KVLocation.NONE
         req.kv_quantized = False
+        req.prefilled = 0                  # chunked prefill restarts from 0
         req.recompute_tokens += req.context_len
 
     def free(self, req: Request) -> None:
@@ -227,6 +228,7 @@ class TieredKVManager:
         self.reserved.pop(rid, None)
         self.location.pop(rid, None)
         req.kv_location = KVLocation.NONE
+        req.prefilled = 0
 
     # -------------------------------------------------------------- checks
     def check_invariants(self) -> None:

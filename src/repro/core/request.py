@@ -57,6 +57,9 @@ class Request:
     # --- progress ---
     state: RequestState = RequestState.QUEUED
     generated: int = 0
+    prefilled: int = 0                     # tokens with KV materialized by
+                                           # (possibly chunked) prefill; reset
+                                           # to 0 when KV is dropped
     kv_location: KVLocation = KVLocation.NONE
     kv_quantized: bool = False
     output_tokens: List[int] = field(default_factory=list)
@@ -74,6 +77,19 @@ class Request:
     @property
     def context_len(self) -> int:
         return self.prompt_len + self.generated
+
+    @property
+    def prefill_target(self) -> int:
+        """Tokens a (re-)prefill must materialize before decode can run:
+        the prompt, plus all but the last generated token on a recompute
+        (the engine's cache invariant keeps the most recent sampled token's
+        KV unwritten — the next decode step feeds it)."""
+        return self.prompt_len + max(self.generated - 1, 0)
+
+    @property
+    def prefill_pending(self) -> int:
+        """Prefill tokens still to run before this request can decode."""
+        return max(self.prefill_target - self.prefilled, 0)
 
     @property
     def remaining_tokens_true(self) -> int:
@@ -110,6 +126,7 @@ def reset_runtime_state(req: Request) -> None:
     req.demotions = 0
     req.state = RequestState.QUEUED
     req.generated = 0
+    req.prefilled = 0
     req.kv_location = KVLocation.NONE
     req.kv_quantized = False
     req.output_tokens = []

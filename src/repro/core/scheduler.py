@@ -11,6 +11,22 @@ ALISE mechanics implemented faithfully:
     by EWT-ordered offloads of lower-priority jobs (Eq. 6-7), bounded by the
     GPU job limit M; swap ops overlap with compute.
 
+Scheduler <-> engine contract — the :class:`IterationPlan`:
+
+One iteration's compute is a **token-budgeted list of typed work items** in
+priority order — :class:`PrefillChunk` (prefill tokens ``[start, end)`` of a
+request's prompt, resumable across iterations) and :class:`DecodeLane` (one
+decode step for a resident request) — plus the swap/quantize memory ops.
+``plan(now, budget_tokens)`` packs items up to the budget (a decode lane
+costs one token, a chunk its span), splitting long prompts into
+``prefill_chunk``-sized pieces so a single long prefill can no longer stall
+every resident decode lane for a whole-prompt dispatch (the long-prefill
+head-of-line pathology FastServe's skip-join MLFQ targets).  Chunks are
+ordered by the same speculative priorities as everything else, so an
+INTERACTIVE arrival's first chunk preempts a BATCH job's remaining chunks
+between iterations; a partially-prefilled job resumes from
+``Request.prefilled``.
+
 Baselines:
   * ``orca``  — iteration-level FCFS, run-to-completion, reserve-max KV;
   * ``vllm``  — iteration-level FCFS, on-demand paged KV, preempt-latest with
@@ -21,7 +37,7 @@ Baselines:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import TieredKVManager
@@ -43,19 +59,69 @@ class SchedulerConfig:
     max_new_tokens: int = 2048       # hard generation cap
     interactive_level_cap: int = 1   # deepest band an INTERACTIVE job may
                                      # occupy (SLO mapping onto MLFQ bands)
+    prefill_chunk: Optional[int] = None  # max prompt tokens per PrefillChunk
+                                         # (None = monolithic prefill)
+    iter_token_budget: Optional[int] = None  # default token budget per
+                                             # iteration (None = unbounded)
 
 
 @dataclass
-class Plan:
-    """One iteration's decisions (executed by the simulator or engine)."""
-    run: List[Request] = field(default_factory=list)          # decode this iter
-    prefill: List[Request] = field(default_factory=list)      # fresh prefills
-    recompute: List[Request] = field(default_factory=list)    # re-prefill (dropped KV)
+class PrefillChunk:
+    """Prefill tokens ``[start, end)`` of ``req``'s prefill target (the
+    prompt, plus regenerated tokens on a recompute).  ``last`` marks the
+    chunk that completes the target: executing it yields the prompt's final
+    logits, and — for a fresh prefill — the request's first token."""
+    req: Request
+    start: int
+    end: int
+    last: bool
+
+    @property
+    def size(self) -> int:
+        return self.end - self.start
+
+    @property
+    def fresh(self) -> bool:
+        """First-ever prefill (a completed one emits the first token);
+        False = recompute of dropped KV (no token is re-emitted)."""
+        return self.req.generated == 0
+
+
+@dataclass
+class DecodeLane:
+    """One decode step for a fully-prefilled, HBM-resident request."""
+    req: Request
+
+
+WorkItem = Union[PrefillChunk, DecodeLane]
+
+
+@dataclass
+class IterationPlan:
+    """One iteration's decisions (executed by the simulator or engine).
+
+    ``items`` holds the compute work in priority order; the remaining
+    fields are memory-plane ops (executed before the compute items).
+    ``used_tokens`` is the budget the packed items consume: 1 per decode
+    lane, ``size`` per prefill chunk.
+    """
+    items: List[WorkItem] = field(default_factory=list)
     swap_in: List[Request] = field(default_factory=list)
     swap_out: List[Request] = field(default_factory=list)
     drop: List[Request] = field(default_factory=list)         # recompute-strategy evictions
     quantize_cold: List[Request] = field(default_factory=list)
     dequantize_cold: List[Request] = field(default_factory=list)
+    budget_tokens: Optional[int] = None
+    used_tokens: int = 0
+
+    # ---------------------------------------------------- convenience views
+    @property
+    def chunks(self) -> List[PrefillChunk]:
+        return [it for it in self.items if isinstance(it, PrefillChunk)]
+
+    @property
+    def decodes(self) -> List[Request]:
+        return [it.req for it in self.items if isinstance(it, DecodeLane)]
 
 
 class Scheduler:
@@ -82,10 +148,13 @@ class Scheduler:
 
     # ------------------------------------------------------------ priority
     def _remaining(self, req: Request) -> float:
-        prefilled = self.mem.location_of(req) != KVLocation.NONE
+        """Eq. 3-5 remaining time, counting partially-prefilled jobs as
+        owing only their unfinished chunks (not the whole prompt)."""
+        prefilled = (req.prefilled
+                     if self.mem.location_of(req) != KVLocation.NONE else 0)
         return self.latency.remaining_time(
             req.prompt_len, req.generated, req.remaining_tokens_pred(),
-            prefilled=prefilled)
+            prefilled=prefilled, chunk=self.cfg.prefill_chunk)
 
     def _clamp_level(self, req: Request, lvl: int) -> int:
         """SLO mapping: interactive jobs live in the top bands (§gateway)."""
@@ -164,17 +233,43 @@ class Scheduler:
         rem = {r.req_id: self._remaining(r) for r in ordered}
         return self._ewt_table(ordered, rem, now).get(req.req_id, 0.0)
 
+    # --------------------------------------------------------- item packing
+    def _chunk_span(self, req: Request, budget_left: float) -> PrefillChunk:
+        """Next prefill chunk for ``req``: resumes at ``req.prefilled``,
+        capped by the chunk size and the remaining token budget (always at
+        least one token so a tiny budget cannot livelock a prefill).  With
+        chunking disabled (``prefill_chunk=None``) the span always covers
+        the whole remaining target — the engine's monolithic prefill cannot
+        resume mid-prompt, so the budget may overshoot instead of splitting."""
+        start = req.prefilled
+        target = req.prefill_target
+        size = target - start
+        if self.cfg.prefill_chunk:
+            size = min(size, self.cfg.prefill_chunk)
+            if budget_left != float("inf"):
+                size = min(size, int(max(budget_left, 1)))
+        size = max(size, 1)
+        return PrefillChunk(req, start, start + size,
+                            last=(start + size >= target))
+
     # ----------------------------------------------------------------- plan
-    def plan(self, now: float) -> Plan:
+    def plan(self, now: float,
+             budget_tokens: Optional[int] = None) -> IterationPlan:
+        """Pack one iteration's work items up to ``budget_tokens`` (default
+        ``cfg.iter_token_budget``; None = unbounded)."""
+        if budget_tokens is None:
+            budget_tokens = self.cfg.iter_token_budget
         if self.cfg.strategy == "orca":
-            return self._plan_fcfs(now, reserve_max=True)
+            return self._plan_fcfs(now, budget_tokens)
         if self.cfg.strategy == "vllm":
-            return self._plan_fcfs(now, reserve_max=False)
-        return self._plan_alise(now)
+            return self._plan_fcfs(now, budget_tokens)
+        return self._plan_alise(now, budget_tokens)
 
     # ------------------------------------------------------ FCFS baselines
-    def _plan_fcfs(self, now: float, reserve_max: bool) -> Plan:
-        plan = Plan()
+    def _plan_fcfs(self, now: float,
+                   budget_tokens: Optional[int]) -> IterationPlan:
+        plan = IterationPlan(budget_tokens=budget_tokens)
+        left = float("inf") if budget_tokens is None else float(budget_tokens)
         running = [r for r in self.live.values()
                    if r.state == RequestState.RUNNING]
         running.sort(key=lambda r: r.arrival_time)
@@ -184,20 +279,37 @@ class Scheduler:
         # vLLM OOM handling: if a running job can't grow, preempt the latest
         # arrival (recompute).  ORCA reserves up front so growth never fails.
         for r in running:
-            plan.run.append(r)
+            if left < 1:
+                break
+            if r.prefill_pending > 0:       # mid-chunked-prefill: continue it
+                chunk = self._chunk_span(r, left)
+                plan.items.append(chunk)
+                left -= chunk.size
+                plan.used_tokens += chunk.size
+            else:
+                plan.items.append(DecodeLane(r))
+                left -= 1
+                plan.used_tokens += 1
         # admit new arrivals into free slots, FCFS order, memory permitting
+        n_active = len(running)
         for r in queued:
-            if len(plan.run) + len(plan.prefill) >= self.cfg.max_batch:
+            if n_active >= self.cfg.max_batch or left < 1:
                 break
             if self.mem.can_admit(r):
-                plan.prefill.append(r)
+                chunk = self._chunk_span(r, left)
+                plan.items.append(chunk)
+                left -= chunk.size
+                plan.used_tokens += chunk.size
+                n_active += 1
             else:
                 break   # strict FCFS: no lookahead past a blocked head
         return plan
 
     # --------------------------------------------------------------- ALISE
-    def _plan_alise(self, now: float) -> Plan:
-        plan = Plan()
+    def _plan_alise(self, now: float,
+                    budget_tokens: Optional[int]) -> IterationPlan:
+        plan = IterationPlan(budget_tokens=budget_tokens)
+        left = float("inf") if budget_tokens is None else float(budget_tokens)
         strategy = self.cfg.strategy
         live = list(self.live.values())
 
@@ -241,14 +353,30 @@ class Scheduler:
                     - self.mem._bytes(r.context_len, True)
             return self.mem._bytes(r.context_len + 1, False)
 
+        def emit(r: Request) -> None:
+            """Append r's work item (chunk continuation or decode lane)."""
+            nonlocal left
+            if r.prefill_pending > 0 or self.mem.location_of(r) == \
+                    KVLocation.NONE:
+                chunk = self._chunk_span(r, left)
+                plan.items.append(chunk)
+                left -= chunk.size
+                plan.used_tokens += chunk.size
+            else:
+                plan.items.append(DecodeLane(r))
+                left -= 1
+                plan.used_tokens += 1
+
         max_resident = self.cfg.max_resident or self.cfg.max_batch
         n_resident = sum(1 for r in live if self.mem.resident_hbm(r))
         free = self.mem.hbm_free()
         evict_iter = iter(residents)
         for r in desired:
+            if left < 1:
+                break           # budget spent: the rest waits an iteration
             need = hbm_need(r)
             if need == 0.0:
-                plan.run.append(r)
+                emit(r)
                 continue
             # free memory/slots by offloading high-EWT residents
             while free < need or n_resident >= max_resident:
@@ -270,10 +398,7 @@ class Scheduler:
             n_resident += 1
             loc = self.mem.location_of(r)
             if loc == KVLocation.NONE:
-                if r.generated > 0:      # dropped KV -> recompute prefill
-                    plan.recompute.append(r)
-                else:
-                    plan.prefill.append(r)
+                emit(r)                  # fresh prefill / recompute chunk
             elif loc == KVLocation.DRAM:
                 plan.swap_in.append(r)
             elif loc == KVLocation.HBM_Q8:
@@ -281,15 +406,21 @@ class Scheduler:
 
         # work-conserving backfill: idle batch width goes to resident jobs
         # that lost the SRTF race but can still make progress this iteration
-        planned = (desired_ids | {r.req_id for r in plan.swap_out}
+        planned = ({it.req.req_id for it in plan.items}
+                   | {r.req_id for r in plan.swap_out}
                    | {r.req_id for r in plan.drop})
-        if len(plan.run) < self.cfg.max_batch:
+        n_lanes = len(plan.decodes)
+        if n_lanes < self.cfg.max_batch:
             for r in candidates:
-                if len(plan.run) >= self.cfg.max_batch:
+                if n_lanes >= self.cfg.max_batch or left < 1:
                     break
                 if (r.req_id not in planned
-                        and self.mem.location_of(r) == KVLocation.HBM):
-                    plan.run.append(r)
+                        and self.mem.location_of(r) == KVLocation.HBM
+                        and r.prefill_pending == 0):
+                    plan.items.append(DecodeLane(r))
+                    plan.used_tokens += 1
+                    left -= 1
+                    n_lanes += 1
         return plan
 
     # ------------------------------------------------------------- summary

@@ -5,12 +5,22 @@ execution time supplied by the analytical latency model (Eq. 3-5) that the
 paper itself uses — this is what produces the paper-scale end-to-end curves
 (Figs. 2/6/8/9) on a CPU-only container.
 
-Cost model for one continuous-batching iteration (ORCA-style mixed batch):
-    t_iter = sum_prefill(s_j * t0)  +  [beta + alpha * sum_decode(ctx_j)]
-i.e. prefills are compute-bound and additive; the decode batch reads weights
-once (beta) plus each job's KV (alpha per context token) — the batched analog
-of Eq. 5.  Swaps run on a DMA queue overlapped with compute; a job only
-becomes schedulable when its upload completes (paper §3.2).
+Cost model for one continuous-batching iteration (ORCA-style mixed batch,
+now over the scheduler's token-budgeted :class:`IterationPlan`):
+    t_iter = sum_chunks(prefill_chunk_time(start_j, size_j))
+             + [beta + alpha * sum_decode(ctx_j)]
+i.e. prefill chunks are compute-bound and additive (a resumed chunk pays the
+per-context ``alpha`` cross-read of its prefix); the decode batch reads
+weights once (beta) plus each job's KV (alpha per context token) — the
+batched analog of Eq. 5.  Swaps run on a DMA queue overlapped with compute;
+a job only becomes schedulable when its upload completes (paper §3.2).
+
+The simulator executes the *same* ``IterationPlan`` contract as the real
+engine (``execute_plan`` / ``account_tokens``, also driven by
+``core/cluster.py``'s replicas), so scheduler-policy results stay
+comparable between simulated and real execution — including chunked
+prefill, where a fresh prefill's first token is emitted only by its *last*
+chunk and partially-prefilled jobs resume across iterations.
 """
 from __future__ import annotations
 
@@ -27,7 +37,7 @@ from repro.core.predictor import (DefaultPredictor, LengthPredictor,
                                   RetrievalPredictor)
 from repro.core.quantization import kv_bytes_per_token
 from repro.core.request import KVLocation, Request, RequestState
-from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.scheduler import IterationPlan, Scheduler, SchedulerConfig
 from repro.core.trace import SyntheticTrace, TraceConfig, generate_trace
 
 
@@ -45,6 +55,8 @@ class SimConfig:
     quantum_growth: float = 4.0
     age_threshold: float = 15.0
     max_new_tokens: int = 2048
+    prefill_chunk: Optional[int] = None    # chunked prefill span (None = mono)
+    iter_token_budget: Optional[int] = None  # per-iteration token budget
     drain_timeout: float = 600.0       # extra time after last arrival
     latency_model: Optional[LatencyModel] = None
     pretrain_requests: int = 512       # history corpus for predictor warmup
@@ -138,9 +150,85 @@ class ServingSimulator:
             max_batch=cfg.max_batch, n_queues=cfg.n_queues,
             base_quantum=cfg.base_quantum, quantum_growth=cfg.quantum_growth,
             age_threshold=cfg.age_threshold, strategy=strategy_impl,
-            max_new_tokens=cfg.max_new_tokens)
+            max_new_tokens=cfg.max_new_tokens,
+            prefill_chunk=cfg.prefill_chunk,
+            iter_token_budget=cfg.iter_token_budget)
         self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
         self.pred_overhead = 0.0
+
+    # --------------------------------------------------- plan execution
+    def execute_plan(self, plan: IterationPlan, now: float):
+        """Execute one IterationPlan's memory ops and cost its compute
+        items (the simulated twin of ``ServingEngine.step``'s execution
+        phase; also driven by ``core/cluster.py`` replicas).  Returns
+        ``(t_iter, ran_any)``; the caller advances the clock and then calls
+        :meth:`account_tokens`."""
+        sched, mem = self.sched, self.mem
+        for r in plan.drop:
+            mem.drop(r)
+            r.state = RequestState.QUEUED
+            r.preempt_count += 1
+        for r in plan.swap_out:
+            mem.offload(r, now)
+            r.state = RequestState.PREEMPTED
+            r.preempt_count += 1
+        for r in plan.dequantize_cold:
+            mem.dequantize_cold(r, now)
+        for r in plan.swap_in:
+            op = mem.upload(r, now)
+            r.state = RequestState.SWAPPING
+            sched._swap_ready_at[r.req_id] = op.done_time
+
+        t_iter = 0.0
+        decode_ctx = 0
+        ran_any = False
+        for chunk in plan.chunks:
+            r = chunk.req
+            if mem.location_of(r) == KVLocation.NONE:
+                mem.admit(r)
+            r.state = RequestState.RUNNING
+            if r.first_scheduled_time is None:
+                r.first_scheduled_time = now
+            t_iter += self.latency.prefill_chunk_time(chunk.start, chunk.size)
+            r.prefilled = chunk.end
+            ran_any = True
+        decoders = 0
+        for r in plan.decodes:
+            if mem.location_of(r) != KVLocation.HBM:
+                continue               # lost residency earlier this iteration
+            r.state = RequestState.RUNNING
+            decode_ctx += r.context_len
+            decoders += 1
+            ran_any = True
+        if decoders:
+            t_iter += self.latency.beta + self.latency.alpha * decode_ctx
+        return t_iter, ran_any
+
+    def account_tokens(self, plan: IterationPlan, now: float) -> None:
+        """Post-iteration token accounting for an executed plan: a *last*
+        chunk of a fresh prefill and every decode lane emit one token
+        (recompute completions rebuild KV without re-emitting); growth OOM
+        triggers the strategy's preemption path."""
+        finishing = [c.req for c in plan.chunks if c.last]
+        recompute_ids = {r.req_id for r in finishing if r.generated > 0}
+        for r in finishing + plan.decodes:
+            if self.mem.location_of(r) != KVLocation.HBM:
+                continue    # became an OOM victim earlier this iteration
+            if r.req_id in recompute_ids:
+                pass        # recompute rebuilds KV; no new token emitted
+            else:
+                r.generated += 1
+                r.prefilled = r.prompt_len + max(r.generated - 1, 0)
+                if r.first_token_time is None:
+                    r.first_token_time = now
+            if not self.mem.grow(r):
+                self._handle_oom(r, now)
+                if self.mem.location_of(r) != KVLocation.HBM:
+                    continue
+            self.sched.note_generated(r, now)
+            if (r.generated >= r.true_out_len
+                    or r.generated >= self.sched.cfg.max_new_tokens):
+                self.sched.note_finished(r, now)
 
     # ------------------------------------------------------------------ run
     def run(self, max_iters: int = 20_000_000) -> SimResult:
@@ -167,43 +255,7 @@ class ServingSimulator:
                 i_arr += 1
 
             plan = self.sched.plan(now)
-
-            # ---- execute memory plan (swaps overlap with compute)
-            for r in plan.drop:
-                self.mem.drop(r)
-                r.state = RequestState.QUEUED
-                r.preempt_count += 1
-            for r in plan.swap_out:
-                self.mem.offload(r, now)
-                r.state = RequestState.PREEMPTED
-                r.preempt_count += 1
-            for r in plan.dequantize_cold:
-                self.mem.dequantize_cold(r, now)
-            for r in plan.swap_in:
-                op = self.mem.upload(r, now)
-                r.state = RequestState.SWAPPING
-                self.sched._swap_ready_at[r.req_id] = op.done_time
-
-            # ---- execute compute
-            t_iter = 0.0
-            decode_ctx = 0
-            ran_any = False
-            for r in plan.prefill + plan.recompute:
-                self.mem.admit(r)
-                r.state = RequestState.RUNNING
-                if r.first_scheduled_time is None:
-                    r.first_scheduled_time = now
-                t_iter += self.latency.prefill_time(r.context_len)
-                ran_any = True
-            decoders = [r for r in plan.run
-                        if r.state == RequestState.RUNNING
-                        or r.state == RequestState.PREEMPTED]
-            for r in decoders:
-                r.state = RequestState.RUNNING
-                decode_ctx += r.context_len
-                ran_any = True
-            if decoders:
-                t_iter += self.latency.beta + self.latency.alpha * decode_ctx
+            t_iter, ran_any = self.execute_plan(plan, now)
 
             if not ran_any:
                 # idle: fast-forward to the next actionable instant
@@ -217,27 +269,7 @@ class ServingSimulator:
                 continue
 
             now += t_iter
-
-            # ---- token accounting
-            newly_prefilled = plan.prefill + plan.recompute
-            recompute_ids = {r.req_id for r in plan.recompute}
-            for r in newly_prefilled + decoders:
-                if self.mem.location_of(r) != KVLocation.HBM:
-                    continue    # became an OOM victim earlier this iteration
-                if r.req_id in recompute_ids and r.generated > 0:
-                    pass        # recompute rebuilds KV; no new token emitted
-                else:
-                    r.generated += 1
-                    if r.first_token_time is None:
-                        r.first_token_time = now
-                if not self.mem.grow(r):
-                    self._handle_oom(r, now)
-                    if self.mem.location_of(r) != KVLocation.HBM:
-                        continue
-                self.sched.note_generated(r, now)
-                if (r.generated >= r.true_out_len
-                        or r.generated >= cfg.max_new_tokens):
-                    self.sched.note_finished(r, now)
+            self.account_tokens(plan, now)
 
         return self._result(now, n_total)
 

@@ -45,7 +45,8 @@ def build_requests(cfg, n: int, seed: int = 0):
 def serve(arch: str = "granite-3-8b", strategy: str = "alise",
           n_requests: int = 12, max_slots: int = 4, seed: int = 0,
           predictor_kind: str = "oracle", quantize: bool = True,
-          kv_backend: str = "dense"):
+          kv_backend: str = "dense", prefill_chunk: Optional[int] = None,
+          iter_token_budget: Optional[int] = None):
     cfg = get_smoke_config(arch)
     model = Model(cfg, attn_chunk=32, remat=False)
     params = model.init(jax.random.PRNGKey(seed))
@@ -54,7 +55,8 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
     eng = ServingEngine(model, params, EngineConfig(
         max_slots=max_slots, max_seq_len=96, max_new_tokens=48,
         strategy=strategy, quantize_offload=quantize,
-        kv_backend=kv_backend), predictor=predictor)
+        kv_backend=kv_backend, prefill_chunk=prefill_chunk,
+        iter_token_budget=iter_token_budget), predictor=predictor)
     reqs = build_requests(cfg, n_requests, seed)
     eng.serve(reqs)
     lat = [r.e2e_latency for r in reqs if r.e2e_latency is not None]
@@ -80,7 +82,9 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                   ttft_target_interactive: Optional[float] = None,
                   ttft_target_batch: Optional[float] = None,
                   ttft_miss_policy: str = "shed",
-                  kv_backend: str = "dense"):
+                  kv_backend: str = "dense",
+                  prefill_chunk: Optional[int] = None,
+                  iter_token_budget: Optional[int] = None):
     """Replay a synthetic Poisson trace through the online Gateway and print
     per-class TTFT/E2E percentiles (and SLO attainment when targets are
     set).  ``virtual_dt=None`` serves in wall clock; ``pump`` selects the
@@ -95,7 +99,8 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
         return ServingEngine(model, params, EngineConfig(
             max_slots=max_slots, max_seq_len=96, max_new_tokens=48,
             strategy=strategy, quantize_offload=False,
-            kv_backend=kv_backend), predictor=predictor)
+            kv_backend=kv_backend, prefill_chunk=prefill_chunk,
+            iter_token_budget=iter_token_budget), predictor=predictor)
 
     reset_request_counter()
     trace = generate_trace(TraceConfig(dataset=dataset, rate=rate,
@@ -140,6 +145,15 @@ def main():
                     choices=["dense", "paged"],
                     help="device KV storage: dense slotted cache or the "
                          "paged block pool (Pallas paged-attention path)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="max prompt tokens per prefill chunk (chunked, "
+                         "resumable prefill; default: monolithic). Long "
+                         "prompts no longer stall resident decode lanes "
+                         "for a whole-prompt dispatch")
+    ap.add_argument("--iter-token-budget", type=int, default=None,
+                    help="scheduler token budget per iteration (decode "
+                         "lane = 1 token, prefill chunk = its span; "
+                         "default: unbounded)")
     ap.add_argument("--gateway", action="store_true",
                     help="online mode: replay a Poisson trace through the "
                          "streaming gateway instead of a pre-built batch")
@@ -175,10 +189,14 @@ def main():
                       ttft_target_interactive=args.ttft_target_interactive,
                       ttft_target_batch=args.ttft_target_batch,
                       ttft_miss_policy=args.ttft_miss_policy,
-                      kv_backend=args.kv_backend)
+                      kv_backend=args.kv_backend,
+                      prefill_chunk=args.prefill_chunk,
+                      iter_token_budget=args.iter_token_budget)
     else:
         serve(args.arch, args.strategy, args.n_requests, args.max_slots,
-              predictor_kind=args.predictor, kv_backend=args.kv_backend)
+              predictor_kind=args.predictor, kv_backend=args.kv_backend,
+              prefill_chunk=args.prefill_chunk,
+              iter_token_budget=args.iter_token_budget)
 
 
 if __name__ == "__main__":

@@ -490,6 +490,121 @@ class Model:
         reason = jnp.where(active, reason, 0)
         return tok, reason, cache
 
+    # ------------------------------------------------------ chunked prefill
+    def supports_chunked_prefill(self) -> bool:
+        """Chunked (resumable) prefill covers attention-family decoder-only
+        stacks: an attention chunk resumes from cached prefix KV exactly,
+        while SSM/hybrid recurrent state would need a cross-chunk state
+        handoff and enc-dec a static cross cache — both fall back to
+        monolithic prefill."""
+        cfg = self.cfg
+        return (cfg.family not in ("ssm", "hybrid")
+                and not cfg.is_encoder_decoder)
+
+    def prefill_chunk(self, params, k_stripe, v_stripe, tokens, start,
+                      chunk_len):
+        """One resumable prefill chunk over a dense per-request KV stripe.
+
+        ``k_stripe``/``v_stripe``: (L, Smax, KVH, hd) — the request's slot
+        stripes with tokens ``[0, start)`` already materialized by earlier
+        chunks; ``tokens``: (1, C) int32, right-padded past ``chunk_len``;
+        ``start``/``chunk_len`` are dynamic scalars.  Writes the chunk's KV
+        at absolute positions ``[start, start+C)`` (out-of-range padded
+        rows are dropped by JAX's scatter OOB semantics) and attends each
+        chunk query at absolute position ``start+i`` over stripe keys
+        ``j <= start+i`` — unwritten stripe positions are masked, so stale
+        lane contents never leak into the output.
+
+        Returns ``(last_logits (1, V) f32, new_k, new_v)`` where
+        ``last_logits`` is taken at local index ``chunk_len - 1`` (the
+        prompt's next-token logits when this is the final chunk).
+        """
+        cfg = self.cfg
+        if not self.supports_chunked_prefill():
+            raise ValueError(f"chunked prefill unsupported for family="
+                             f"{cfg.family} enc_dec={cfg.is_encoder_decoder}")
+        C = tokens.shape[1]
+        Smax = k_stripe.shape[1]
+        x = self._embed_in(params, tokens)                    # (1, C, D)
+        x = shard_hint(x, "batch", None, None)
+        q_pos = (start + jnp.arange(C))[None, :]              # (1, C)
+        kv_pos = jnp.arange(Smax)[None, :]                    # (1, Smax)
+        write_idx = start + jnp.arange(C)                     # (C,)
+        ffn_kind = cfg.ffn_kind(0)
+
+        def body(h, inp):
+            p_l, k_l, v_l = inp                               # (Smax, KVH, hd)
+            h1 = L.apply_norm(cfg, p_l["ln1"], h)
+            q, k, v = L._project_qkv(cfg, p_l["attn"], h1, q_pos)
+            k_l = k_l.at[write_idx].set(k[0].astype(k_l.dtype))
+            v_l = v_l.at[write_idx].set(v[0].astype(v_l.dtype))
+            attn = L.full_attention(cfg, q, k_l[None], v_l[None], causal=True,
+                                    q_positions=q_pos, kv_positions=kv_pos)
+            h = h + attn.reshape(1, C, -1) @ p_l["attn"]["wo"]
+            h, _ = _apply_ffn_part(cfg, p_l, h, ffn_kind, self.moe_groups)
+            return h, (k_l, v_l)
+
+        x, (k_new, v_new) = lax.scan(body, x,
+                                     (params["layers"], k_stripe, v_stripe))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        last = jnp.clip(chunk_len - 1, 0, C - 1)
+        x_last = jax.lax.dynamic_index_in_dim(x, last, axis=1,
+                                              keepdims=False)
+        logits = self._logits(params, x_last)
+        return logits.astype(jnp.float32), k_new, v_new
+
+    def paged_prefill_chunk(self, params, kv, tokens, block_tables,
+                            write_page, write_off, start, chunk_len):
+        """Paged twin of :meth:`prefill_chunk`: the chunk's KV lands
+        directly in the page pool (device-side, mid-page chunk boundaries
+        included) and attention gathers the request's pages in logical
+        order — the same masked ops as the dense stripe path, so greedy
+        outputs stay bit-identical across backends.
+
+        ``kv``: {"k","v"} (L, num_pages, page, KVH, hd); ``block_tables``:
+        (1, max_pages) int32 with unused entries pointing at the scratch
+        page; ``write_page``/``write_off``: (C,) physical destination of
+        each chunk token (scratch for padded rows).
+        """
+        cfg = self.cfg
+        if not self.supports_chunked_prefill():
+            raise ValueError(f"chunked prefill unsupported for family="
+                             f"{cfg.family} enc_dec={cfg.is_encoder_decoder}")
+        C = tokens.shape[1]
+        page = kv["k"].shape[2]
+        n_pages = block_tables.shape[1]
+        Smax = n_pages * page
+        x = self._embed_in(params, tokens)
+        x = shard_hint(x, "batch", None, None)
+        q_pos = (start + jnp.arange(C))[None, :]
+        kv_pos = jnp.arange(Smax)[None, :]
+        ffn_kind = cfg.ffn_kind(0)
+
+        def body(h, inp):
+            p_l, k_pool, v_pool = inp
+            h1 = L.apply_norm(cfg, p_l["ln1"], h)
+            q, k, v = L._project_qkv(cfg, p_l["attn"], h1, q_pos)
+            k_pool = k_pool.at[write_page, write_off].set(
+                k[0].astype(k_pool.dtype))
+            v_pool = v_pool.at[write_page, write_off].set(
+                v[0].astype(v_pool.dtype))
+            kg = k_pool[block_tables[0]].reshape(1, Smax, *k_pool.shape[2:])
+            vg = v_pool[block_tables[0]].reshape(1, Smax, *v_pool.shape[2:])
+            attn = L.full_attention(cfg, q, kg, vg, causal=True,
+                                    q_positions=q_pos, kv_positions=kv_pos)
+            h = h + attn.reshape(1, C, -1) @ p_l["attn"]["wo"]
+            h, _ = _apply_ffn_part(cfg, p_l, h, ffn_kind, self.moe_groups)
+            return h, (k_pool, v_pool)
+
+        x, (k_new, v_new) = lax.scan(body, x,
+                                     (params["layers"], kv["k"], kv["v"]))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        last = jnp.clip(chunk_len - 1, 0, C - 1)
+        x_last = jax.lax.dynamic_index_in_dim(x, last, axis=1,
+                                              keepdims=False)
+        logits = self._logits(params, x_last)
+        return logits.astype(jnp.float32), {"k": k_new, "v": v_new}
+
     # ------------------------------------------------------- paged decode
     def supports_paged(self) -> bool:
         """Paged KV decode covers attention-family decoder-only stacks

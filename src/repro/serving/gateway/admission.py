@@ -21,7 +21,12 @@ TTFT-attainment admission (proxy-predictor-style latency gating): when a
 per-class ``ttft_target_*`` is set, the gateway computes the request's
 *expected* TTFT — the best replica's ``predicted_backlog()`` (EWT queueing
 delay) plus the latency-model prefill estimate plus the predictor's own
-mean prediction latency — and gates on it.  A request whose target would be
+mean prediction latency — and gates on it.  The prefill estimate is the
+engine's ``prefill_estimate``: with chunked prefill enabled it charges only
+the *first chunk* (the remaining chunks interleave with resident decode
+lanes instead of serializing behind the backlog), so long prompts that
+chunking specifically de-head-of-line-blocks are no longer over-rejected
+on a whole-prompt term.  A request whose target would be
 missed is shed (interactive default: fail fast so the client can retry a
 healthier cell) or deferred (batch default: the target only shapes the
 holding queue), per ``ttft_miss_policy``.  Admitting work that is already

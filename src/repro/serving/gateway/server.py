@@ -147,12 +147,16 @@ class Gateway:
         backlog of the replica the router would actually dispatch to
         (Eq. 6-7 signal), and the request's own prefill estimate plus the
         predictor's mean prediction latency (Table 2 counts prediction time
-        against TTFT).  None with no live replicas."""
+        against TTFT).  The prefill term is the engine's
+        ``prefill_estimate`` — first-chunk latency when chunked prefill is
+        on (the rest of the prompt interleaves with resident decode rather
+        than serializing behind the backlog), whole-prompt when monolithic.
+        None with no live replicas."""
         target = self.router.peek_driver()
         if target is None:
             return None
         eng = target.engine
-        intrinsic = (eng.latency.prefill_time(req.prompt_len)
+        intrinsic = (eng.prefill_estimate(req.prompt_len)
                      + eng.predictor.mean_latency_s())
         return target.predicted_backlog(), intrinsic
 

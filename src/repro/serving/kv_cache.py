@@ -92,6 +92,18 @@ class PagedKVPool:
         self.lengths[req_id] = length
         return new_page
 
+    def extend_to(self, req_id: int, tokens: int) -> None:
+        """Grow a sequence to cover ``tokens`` logical positions (chunked
+        prefill: each chunk extends coverage, including mid-page boundaries
+        where the next chunk continues inside a partially-filled page)."""
+        pages = self.page_table[req_id]
+        need = self.pages_needed(tokens)
+        while len(pages) < need:
+            if not self.free_pages:
+                raise RuntimeError("page pool exhausted on extend_to")
+            pages.append(self.free_pages.pop())
+        self.lengths[req_id] = max(self.lengths.get(req_id, 0), tokens)
+
     def reserve_scratch(self) -> int:
         """Permanently remove one physical page from the allocator — the
         sacrificial write target for inactive decode lanes in the fused
@@ -258,10 +270,29 @@ class KVBackend:
                     max_new_tokens=c.max_new_tokens,
                     max_seq_len=c.max_seq_len)
 
+    @staticmethod
+    def _chunk_bucket(n: int) -> int:
+        """Pow2 chunk-length buckets (min 8) bound jit recompiles."""
+        return max(8, 1 << (n - 1).bit_length())
+
     # ----------------------------------------------------------- interface
     def write_prefill(self, rid: int, pcache, length: int) -> None:
         """Place batch-index-0 of a prefill cache into a free lane."""
         raise NotImplementedError
+
+    def prefill_chunk(self, params, rid: int, tokens: List[int],
+                      start: int):
+        """Run one resumable prefill chunk for ``rid``: write KV for
+        absolute positions ``[start, start+len(tokens))`` device-side
+        (assigning a lane on the first chunk) and return the chunk's
+        last-position logits (jnp (1, V)) — the prompt's next-token logits
+        when this chunk completes the prefill target."""
+        raise NotImplementedError
+
+    def chunk_pages_shortfall(self, rid: int, end: int) -> int:
+        """Physical pages missing to extend ``rid``'s KV coverage to
+        ``end`` tokens (always 0 for the dense backend)."""
+        return 0
 
     def clear(self, rid: int) -> None:
         raise NotImplementedError
@@ -303,6 +334,21 @@ class DenseKVBackend(KVBackend):
         self._fused = jax.jit(functools.partial(
             model.decode_step_sampled, **self._sample_kwargs()))
         self._decode = jax.jit(model.decode_step)
+        self._chunk = None
+        if model.supports_chunked_prefill():
+            # one jitted dispatch per chunk over the *full* cache: the slot
+            # gather, chunk compute, and slot scatter all fuse — no eager
+            # whole-cache copies on the host side per chunk (the batch axis
+            # of k/v is 1 for every chunk-capable family)
+            def chunk_cache(params, k_cache, v_cache, toks, slot, start,
+                            chunk_len):
+                logits, k_new, v_new = model.prefill_chunk(
+                    params, k_cache[:, slot], v_cache[:, slot], toks,
+                    start, chunk_len)
+                return (logits,
+                        k_cache.at[:, slot].set(k_new.astype(k_cache.dtype)),
+                        v_cache.at[:, slot].set(v_new.astype(v_cache.dtype)))
+            self._chunk = jax.jit(chunk_cache)
 
     def _cache_batch_axes(self) -> Dict[str, int]:
         fam = self.model.cfg.family
@@ -358,6 +404,24 @@ class DenseKVBackend(KVBackend):
                 data[key] = src
         self._write_slot(slot, data)
         self.slot_req[slot] = rid
+
+    def prefill_chunk(self, params, rid: int, tokens: List[int],
+                      start: int):
+        slot = self.slot_of(rid)
+        if slot is None:                    # first chunk: claim a lane
+            slot = self.free_slot()
+            assert slot is not None, "caller must check slot availability"
+            self.slot_req[slot] = rid
+        C = len(tokens)
+        Cb = self._chunk_bucket(C)
+        toks = jnp.asarray(list(tokens) + [0] * (Cb - C), jnp.int32)[None, :]
+        logits, k_new, v_new = self._chunk(
+            params, self.cache["k"], self.cache["v"], toks,
+            jnp.asarray(slot, jnp.int32), jnp.asarray(start, jnp.int32),
+            jnp.asarray(C, jnp.int32))
+        self.cache = {**self.cache, "k": k_new, "v": v_new,
+                      "lengths": self.cache["lengths"].at[slot].set(start + C)}
+        return logits
 
     def clear(self, rid: int) -> None:
         slot = self.slot_of(rid)
@@ -454,6 +518,10 @@ class PagedKVBackend(KVBackend):
         self._fused = jax.jit(functools.partial(
             model.paged_decode_step_sampled, attn_impl=cfg.attn_impl,
             interpret=_INTERPRET, **self._sample_kwargs()))
+        # chunked prefill always attends via the logical-order page gather
+        # (bit-exact vs the dense stripe path); attn_impl only selects the
+        # decode-step kernel
+        self._chunk = jax.jit(model.paged_prefill_chunk)
 
     # ---------------------------------------------------------- interface
     def write_prefill(self, rid: int, pcache, length: int) -> None:
@@ -463,6 +531,45 @@ class PagedKVBackend(KVBackend):
         v = jnp.take(pcache["v"], 0, axis=1)[:, :length]
         self.pool.write_prefill(rid, k, v)
         self.slot_req[slot] = rid
+
+    def prefill_chunk(self, params, rid: int, tokens: List[int],
+                      start: int):
+        slot = self.slot_of(rid)
+        if slot is None:                    # first chunk: claim a lane
+            slot = self.free_slot()
+            assert slot is not None, "caller must check slot availability"
+            self.slot_req[slot] = rid
+            if rid not in self.pool.page_table:
+                self.pool.allocate(rid, 0)  # empty table; chunks extend it
+        C = len(tokens)
+        end = start + C
+        pg = self.cfg.page_size
+        # grow page coverage to the chunk's end (caller checked
+        # chunk_pages_shortfall); a chunk may start/end mid-page
+        self.pool.extend_to(rid, end)
+        pt = self.pool.page_table[rid]
+        Cb = self._chunk_bucket(C)
+        toks = jnp.asarray(list(tokens) + [0] * (Cb - C), jnp.int32)[None, :]
+        wp = np.full((Cb,), self.scratch_page, np.int32)
+        wo = np.arange(Cb, dtype=np.int32) % pg     # harmless scratch offsets
+        for i in range(C):
+            pos = start + i
+            wp[i] = pt[pos // pg]
+            wo[i] = pos % pg
+        tables = np.full((1, self.max_pages_per_seq), self.scratch_page,
+                         np.int32)
+        tables[0, :len(pt)] = pt
+        logits, kv = self._chunk(
+            params, {"k": self.pool.k, "v": self.pool.v}, toks,
+            jnp.asarray(tables), jnp.asarray(wp), jnp.asarray(wo),
+            jnp.asarray(start, jnp.int32), jnp.asarray(C, jnp.int32))
+        self.pool.k, self.pool.v = kv["k"], kv["v"]
+        return logits
+
+    def chunk_pages_shortfall(self, rid: int, end: int) -> int:
+        have = len(self.pool.page_table.get(rid, []))
+        return max(0, self.pool.pages_needed(end) - have
+                   - len(self.pool.free_pages))
 
     def clear(self, rid: int) -> None:
         slot = self.slot_of(rid)

@@ -32,6 +32,43 @@ def test_remaining_time_includes_prefill_when_cold():
     assert cold - warm == pytest.approx(m.prefill_time(100))
 
 
+def test_remaining_time_credits_partial_prefill():
+    """A partially-prefilled job owes only its unfinished chunks."""
+    m = LatencyModel(t0=1e-4, alpha=1e-6, beta=0.01)
+    cold = m.remaining_time(100, 0, 50, prefilled=0)
+    part = m.remaining_time(100, 0, 50, prefilled=60)
+    warm = m.remaining_time(100, 0, 50, prefilled=100)
+    assert warm < part < cold
+    assert part - warm == pytest.approx(m.prefill_chunk_time(60, 40))
+
+
+def test_chunked_prefill_cost_model():
+    m = LatencyModel(t0=1e-4, alpha=1e-6, beta=0.01)
+    # the first chunk is free of prefix re-reads: identical to monolithic
+    assert m.prefill_chunk_time(0, 128) == pytest.approx(m.prefill_time(128))
+    # a resumed chunk pays alpha per (chunk token, prefix token) pair
+    assert m.prefill_chunk_time(96, 32) == pytest.approx(
+        32 * m.t0 + m.alpha * 32 * 96)
+    # the chunked sum == sum of per-chunk costs, and exceeds monolithic by
+    # exactly the cross-read overhead
+    total = m.prefill_time_remaining(100, 0, chunk=32)
+    manual = sum(m.prefill_chunk_time(s, min(32, 100 - s))
+                 for s in (0, 32, 64, 96))
+    assert total == pytest.approx(manual)
+    assert total >= m.prefill_time(100)
+    # fully-prefilled jobs owe nothing; partial resumes mid-prompt
+    assert m.prefill_time_remaining(100, 100, chunk=32) == 0.0
+    assert m.prefill_time_remaining(100, 40, chunk=None) == pytest.approx(
+        m.prefill_chunk_time(40, 60))
+
+
+def test_first_chunk_time_gates_ttft():
+    m = LatencyModel(t0=1e-4, alpha=1e-6, beta=0.01)
+    assert m.first_chunk_time(512, None) == pytest.approx(m.prefill_time(512))
+    assert m.first_chunk_time(512, 64) == pytest.approx(m.prefill_time(64))
+    assert m.first_chunk_time(32, 64) == pytest.approx(m.prefill_time(32))
+
+
 def test_calibrated_scales_with_model_size():
     small, big = calibrated("opt-2.7b"), calibrated("opt-13b")
     assert big.beta > small.beta

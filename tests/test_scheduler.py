@@ -1,24 +1,28 @@
-"""Unit tests for the ALISE scheduler (priority, aging, demotion, Alg. 2)."""
+"""Unit tests for the ALISE scheduler (priority, aging, demotion, Alg. 2)
+and the token-budgeted IterationPlan contract (chunked prefill packing)."""
 import pytest
 
 from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import MemoryConfig, TieredKVManager
 from repro.core.predictor import OraclePredictor
-from repro.core.request import Request, RequestState
+from repro.core.request import Request, RequestState, SLOClass
 from repro.core.scheduler import Scheduler, SchedulerConfig
 
 LM = LatencyModel(t0=1e-4, alpha=1e-6, beta=0.01)
 
 
 def mk_sched(strategy="alise", hbm_tokens=1000, max_batch=4, bpt=100,
-             age_threshold=5.0, max_resident=None):
+             age_threshold=5.0, max_resident=None, prefill_chunk=None,
+             iter_token_budget=None):
     mem = TieredKVManager(MemoryConfig(hbm_bytes=hbm_tokens * bpt,
                                        bytes_per_token_fp=bpt,
                                        admit_headroom=0.0))
     cfg = SchedulerConfig(max_batch=max_batch, strategy=strategy,
                           age_threshold=age_threshold,
                           base_quantum=0.1, quantum_growth=4.0,
-                          max_resident=max_resident)
+                          max_resident=max_resident,
+                          prefill_chunk=prefill_chunk,
+                          iter_token_budget=iter_token_budget)
     return Scheduler(cfg, OraclePredictor(), LM, mem), mem
 
 
@@ -33,7 +37,7 @@ def test_srtf_orders_short_first():
     sched.submit(long_r, 0.0)
     sched.submit(short_r, 0.0)
     plan = sched.plan(0.0)
-    assert plan.prefill[0].req_id == short_r.req_id
+    assert plan.chunks[0].req.req_id == short_r.req_id
 
 
 def test_fcfs_orders_by_arrival():
@@ -42,7 +46,7 @@ def test_fcfs_orders_by_arrival():
     sched.submit(long_r, 0.0)
     sched.submit(short_r, 1.0)
     plan = sched.plan(1.0)
-    assert plan.prefill[0].req_id == long_r.req_id
+    assert plan.chunks[0].req.req_id == long_r.req_id
 
 
 def test_priority_levels_band_by_remaining_time():
@@ -85,12 +89,13 @@ def test_alg2_evicts_highest_ewt_for_short_job():
     for r in (a, b):
         sched.submit(r, 0.0)
         mem.admit(r)
+        r.prefilled = r.prefill_target          # decode-ready residents
         r.state = RequestState.RUNNING
     short = mk_req(2, prompt=4)
     sched.submit(short, 0.0)
     plan = sched.plan(0.0)
     # the shorter job must displace a long resident (job limit M = 2)
-    assert [r.req_id for r in plan.prefill] == [short.req_id]
+    assert [c.req.req_id for c in plan.chunks] == [short.req_id]
     assert len(plan.swap_out) >= 1
     evicted = plan.swap_out[0]
     assert evicted.req_id in (a.req_id, b.req_id)
@@ -103,12 +108,13 @@ def test_defer_strategy_never_evicts():
     for r in (a, b):
         sched.submit(r, 0.0)
         mem.admit(r)
+        r.prefilled = r.prefill_target          # decode-ready residents
         r.state = RequestState.RUNNING
     short = mk_req(2, prompt=4)
     sched.submit(short, 0.0)
     plan = sched.plan(0.0)
     assert not plan.swap_out and not plan.drop
-    assert short not in plan.prefill
+    assert short not in [c.req for c in plan.chunks]
 
 
 def test_recompute_strategy_drops_instead_of_swapping():
@@ -118,6 +124,7 @@ def test_recompute_strategy_drops_instead_of_swapping():
     for r in (a, b):
         sched.submit(r, 0.0)
         mem.admit(r)
+        r.prefilled = r.prefill_target          # decode-ready residents
         r.state = RequestState.RUNNING
     short = mk_req(2, prompt=4)
     sched.submit(short, 0.0)
@@ -145,9 +152,102 @@ def test_backfill_is_work_conserving():
     for r in runners:
         sched.submit(r, 0.0)
         mem.admit(r)
+        r.prefilled = r.prefill_target          # decode-ready
         r.state = RequestState.RUNNING
     plan = sched.plan(0.0)
-    assert len(plan.run) == 3
+    assert len(plan.decodes) == 3
+
+
+# ------------------------------------------- token-budgeted iteration plans
+
+def test_chunked_prefill_splits_and_resumes():
+    """A long prompt packs as successive PrefillChunk items; only the last
+    chunk is marked ``last`` (it emits the first token)."""
+    sched, mem = mk_sched(prefill_chunk=16)
+    r = mk_req(5, prompt=40)
+    sched.submit(r, 0.0)
+    spans = []
+    while True:
+        plan = sched.plan(0.0)
+        assert len(plan.chunks) == 1 and not plan.decodes
+        c = plan.chunks[0]
+        spans.append((c.start, c.end, c.last))
+        if mem.location_of(r).name == "NONE":
+            mem.admit(r)
+        r.prefilled = c.end                     # simulate execution
+        if c.last:
+            break
+    assert spans == [(0, 16, False), (16, 32, False), (32, 40, True)]
+
+
+def test_budget_caps_chunk_and_decode_mix():
+    """Budget packing: decode lanes cost 1 token, a prefill chunk its span;
+    the chunk shrinks to the budget left after higher-priority decodes."""
+    sched, mem = mk_sched(max_batch=4, prefill_chunk=32,
+                          iter_token_budget=10)
+    runners = [mk_req(4, prompt=6), mk_req(4, prompt=6)]
+    for r in runners:
+        sched.submit(r, 0.0)
+        mem.admit(r)
+        r.prefilled = r.prefill_target
+        r.state = RequestState.RUNNING
+        r.generated = 1                         # mid-decode (short remaining)
+    long_r = mk_req(400, prompt=100)
+    sched.submit(long_r, 0.0)
+    plan = sched.plan(0.0)
+    assert len(plan.decodes) == 2
+    assert len(plan.chunks) == 1
+    chunk = plan.chunks[0]
+    assert chunk.req is long_r
+    assert chunk.size == 8                      # 10 budget - 2 decode lanes
+    assert plan.used_tokens == 10
+
+
+def test_monolithic_span_ignores_budget_split():
+    """Without prefill_chunk the span must stay whole-prompt (the engine's
+    monolithic fallback cannot resume a partial chunk), even under budget."""
+    sched, mem = mk_sched(iter_token_budget=10)
+    r = mk_req(5, prompt=64)
+    sched.submit(r, 0.0)
+    plan = sched.plan(0.0)
+    assert [(c.start, c.end, c.last) for c in plan.chunks] == [(0, 64, True)]
+
+
+def test_interactive_first_chunk_preempts_batch_chunks():
+    """An INTERACTIVE arrival's first chunk outranks a BATCH job's
+    remaining chunks between iterations (speculative MLFQ priorities order
+    chunks like everything else)."""
+    sched, mem = mk_sched(max_batch=2, prefill_chunk=8, iter_token_budget=8)
+    batch_r = mk_req(400, prompt=64)
+    sched.submit(batch_r, 0.0)
+    plan = sched.plan(0.0)
+    assert plan.chunks[0].req is batch_r
+    mem.admit(batch_r)
+    batch_r.prefilled = plan.chunks[0].end      # one chunk executed
+    inter = mk_req(4, prompt=8)
+    inter.slo_class = SLOClass.INTERACTIVE
+    sched.submit(inter, 0.0)
+    plan = sched.plan(0.0)
+    assert plan.chunks[0].req is inter          # newcomer's chunk goes first
+    assert plan.used_tokens <= 8                # batch chunk waits its turn
+    assert [c.req for c in plan.chunks] == [inter]
+
+
+def test_recompute_target_covers_generated_tokens():
+    """A dropped-KV job's chunks span prompt + generated[:-1] (the engine's
+    cache invariant keeps the newest sampled token's KV unwritten)."""
+    sched, mem = mk_sched(prefill_chunk=16)
+    r = mk_req(50, prompt=20)
+    sched.submit(r, 0.0)
+    mem.admit(r)
+    r.prefilled = r.prefill_target
+    r.generated = 9
+    mem.drop(r)                                 # recompute eviction
+    assert r.prefilled == 0
+    assert r.prefill_target == 20 + 8
+    plan = sched.plan(0.0)
+    c = plan.chunks[0]
+    assert (c.start, c.end, c.fresh) == (0, 16, False)
 
 
 def test_interactive_slo_clamped_to_top_bands():
