@@ -33,7 +33,7 @@ from benchmarks.common import note
 
 # rows whose ``derived`` tok_per_s lands in the artifact's headline metrics
 PERF_METRIC_PREFIXES = ("e2e/engine_decode/", "gateway/wall/",
-                        "hol/prefill_interleave/")
+                        "hol/prefill_interleave/", "hol/shared_prefix/")
 
 
 def _perf_metrics() -> dict:

@@ -108,6 +108,15 @@ class EngineConfig:
                                            # chunked-prefill support
     iter_token_budget: Optional[int] = None  # scheduler token budget per
                                              # iteration (None = unbounded)
+    prefix_cache: bool = False             # cross-request shared-prefix KV
+                                           # cache: admit/resume matches the
+                                           # longest cached prefix and starts
+                                           # chunked prefill at the hit
+                                           # watermark (needs chunked-prefill
+                                           # support; greedy outputs stay
+                                           # bit-identical on vs off)
+    prefix_cache_pages: int = 0            # dense backend: private store
+                                           # capacity (0 = one batch's worth)
     profile_window: int = 4096             # iter/prefill ring-buffer size
     strategy: str = "alise"
     n_queues: int = 4
@@ -127,7 +136,18 @@ class ServingEngine:
         self.cfg = cfg
         acfg = model.cfg
         bpt = kv_bytes_per_token(acfg.num_layers, acfg.num_kv_heads, acfg.hd)
-        hbm = cfg.hbm_bytes or (cfg.max_slots * cfg.max_seq_len * bpt)
+        # the dense backend's prefix cache owns a private page store — a
+        # real device allocation outside per-request accounting.  Charge
+        # it against the budget (and grow the auto-sized default by it,
+        # so enabling the cache doesn't silently shrink the slot cache).
+        dense_store_bytes = 0.0
+        if (cfg.prefix_cache and cfg.kv_backend == "dense"
+                and model.supports_chunked_prefill()):
+            capacity = cfg.prefix_cache_pages or (
+                cfg.max_slots * cfg.max_seq_len // cfg.page_size)
+            dense_store_bytes = capacity * cfg.page_size * bpt
+        hbm = cfg.hbm_bytes or (cfg.max_slots * cfg.max_seq_len * bpt
+                                + dense_store_bytes)
         mem_cfg = MemoryConfig(
             hbm_bytes=hbm, dram_bytes=1e12, bytes_per_token_fp=bpt,
             swap_bw=cfg.swap_bw, quantize_offload=cfg.quantize_offload,
@@ -155,7 +175,9 @@ class ServingEngine:
             eos_token=cfg.eos_token, max_new_tokens=cfg.max_new_tokens,
             greedy=cfg.greedy, temperature=cfg.temperature, top_k=cfg.top_k,
             quantize_offload=cfg.quantize_offload, page_size=cfg.page_size,
-            attn_impl=cfg.paged_attn_impl, seed=cfg.seed)
+            attn_impl=cfg.paged_attn_impl,
+            prefix_cache=(cfg.prefix_cache and self._chunked_ok),
+            prefix_cache_pages=cfg.prefix_cache_pages, seed=cfg.seed)
         if cfg.kv_backend == "paged":
             if not cfg.fused_decode:
                 raise ValueError("the paged backend only implements the "
@@ -166,7 +188,23 @@ class ServingEngine:
             self.kv = DenseKVBackend(model, bcfg)
         else:
             raise ValueError(f"unknown kv_backend: {cfg.kv_backend!r}")
+        # shared-prefix cache active?  (needs chunked-prefill support: a hit
+        # resumes mid-prompt through the PR-4 resumable-chunk machinery)
+        self._prefix_ok = self.kv.prefix is not None
+        if self._prefix_ok:
+            # cached-but-unreferenced pages are the lowest KV tier: every
+            # page-shortfall path reclaims them before spilling a resident
+            self.mem.register_prefix_cache(self.kv.prefix_reclaim,
+                                           self.kv.prefix_pages)
+            if dense_store_bytes:
+                self.mem.charge_static(dense_store_bytes)
         self.host_pool: Dict[int, dict] = {}       # req_id -> offloaded KV
+        # requests whose device KV went through a lossy (INT8) offload/
+        # upload round-trip: their pages must never be published into the
+        # prefix index — a later hit would hand other requests lossy KV
+        # where cache-off recompute is exact, breaking on/off bit-identity.
+        # Cleared on drop (recompute rebuilds exact KV).
+        self._lossy_kv: set = set()
         self._prefill = jax.jit(model.prefill)
         # bounded profiling rings: week-long gateway serves must not leak
         self.iter_times: Deque[tuple] = deque(maxlen=cfg.profile_window)
@@ -240,13 +278,23 @@ class ServingEngine:
         return (req.true_out_len if self.cfg.respect_true_len
                 else np.iinfo(np.int32).max)
 
+    def _prefill_target_tokens(self, req: Request) -> List[int]:
+        """Tokens a (re-)prefill must materialize.  Cache invariant: the
+        most recent sampled token's KV is not yet written (the next decode
+        step feeds it), so a recompute covers prompt + generated[:-1]."""
+        gen = self._generated_of.get(req.req_id)
+        if gen is None:
+            gen = list(req.output_tokens)
+        return list(req.prompt_tokens) + (gen[:-1] if gen else [])
+
     def _exec_prefill_chunk(self, chunk: PrefillChunk, generated_of,
                             t: float) -> bool:
-        """Execute one PrefillChunk item: (first chunk) claim a lane and
-        admit memory, run the chunk through the backend's resumable prefill
-        (or the monolithic fallback), and — when the final chunk of a fresh
+        """Execute one PrefillChunk item: (first chunk) match the shared-
+        prefix cache, claim a lane and admit memory, run the uncached part
+        of the chunk through the backend's resumable prefill (or the
+        monolithic fallback), and — when the final chunk of a fresh
         prefill completes — sample the request's first token.  Returns
-        whether the chunk ran."""
+        whether the chunk made progress."""
         r = chunk.req
         rid = r.req_id
         if self.mem.location_of(r) == KVLocation.DRAM:
@@ -260,12 +308,27 @@ class ServingEngine:
             return False
         if not self.kv.has(rid) and self.kv.free_slot() is None:
             return False               # lanes exhausted; retry next iteration
+        target_toks = self._prefill_target_tokens(r)
+        if (self._prefix_ok and chunk.start == 0 and r.prefilled == 0
+                and not self.kv.has(rid)):
+            # fresh prefill (or recompute): re-match the index *now* — the
+            # submit-time hint may be stale in either direction (pages
+            # published or evicted since).  A hit maps/copies the cached
+            # prefix in and moves the resume watermark forward.
+            hit = self.kv.prefix_acquire(rid, target_toks)
+            if hit:
+                r.prefilled = hit
+                r.cached_prefix_hint = hit
+        start = max(chunk.start, r.prefilled)
         # paged backend: the chunk's coverage may need fresh physical pages;
-        # spill the largest-context other resident until it fits (same
-        # victim rule as the decode-path page shortfall).  Prefer fully-
-        # prefilled victims — evicting a mid-prefill request whose own
-        # chunk is still queued this iteration would just bounce it back.
-        while self.kv.chunk_pages_shortfall(rid, chunk.end) > 0:
+        # cached-but-unreferenced prefix pages yield first (priority-aware
+        # LRU), then spill the largest-context other resident (same victim
+        # rule as the decode-path page shortfall).  Prefer fully-prefilled
+        # victims — evicting a mid-prefill request whose own chunk is still
+        # queued this iteration would just bounce it back.
+        while (short := self.kv.chunk_pages_shortfall(rid, chunk.end)) > 0:
+            if self.mem.reclaim_cache(short) > 0:
+                continue
             others = [x for x in self.sched.live.values()
                       if x.req_id != rid and self.kv.has(x.req_id)
                       and self.mem.resident_hbm(x)]
@@ -282,18 +345,19 @@ class ServingEngine:
         r.state = RequestState.RUNNING
         if r.first_scheduled_time is None:
             r.first_scheduled_time = t
-        gen = generated_of[rid]
-        # cache invariant: the most recent sampled token's KV is not yet
-        # written (the next decode step feeds it), so a recompute prefill
-        # covers prompt + generated[:-1].
-        target_toks = list(r.prompt_tokens) + (gen[:-1] if gen else [])
+        if start >= chunk.end and not chunk.last:
+            # chunk entirely covered by the cached prefix: no compute this
+            # item; the scheduler re-plans from the new watermark (a *last*
+            # chunk always runs — hits are capped at target-1, the first-
+            # token logits must come from a real dispatch)
+            return True
         t0 = time.perf_counter()
         if self._chunked_ok:
             logits = self.kv.prefill_chunk(
-                self.params, rid, target_toks[chunk.start:chunk.end],
-                chunk.start)
+                self.params, rid, target_toks[start:chunk.end], start)
             r.prefilled = chunk.end
-            self.prefill_times.append((chunk.size, time.perf_counter() - t0))
+            self.prefill_times.append((chunk.end - start,
+                                       time.perf_counter() - t0))
         else:
             assert chunk.start == 0 and chunk.last, \
                 "monolithic fallback cannot resume a partial chunk"
@@ -301,6 +365,11 @@ class ServingEngine:
             r.prefilled = len(target_toks)
             self.prefill_times.append((len(target_toks),
                                        time.perf_counter() - t0))
+        if chunk.last and self._prefix_ok and rid not in self._lossy_kv:
+            # prefill complete: publish the full pages covering the target
+            # back to the index so the *next* request sharing this prefix
+            # hits (the partial tail page stays private — decode writes it)
+            self.kv.prefix_publish(rid, target_toks, r.prefilled)
         if chunk.last and r.generated == 0:   # fresh prefill emits a token
             tok, reason = self._sample_host(
                 logits[0], 1, r.context_len + 1, self._true_len_of(r))
@@ -332,6 +401,8 @@ class ServingEngine:
         t0 = time.perf_counter()
         blob = self.kv.offload(req.req_id)
         self.host_pool[req.req_id] = blob
+        if self.cfg.quantize_offload:
+            self._lossy_kv.add(req.req_id)
         self._swap_stall(blob["lengths"], t0)
 
     def _upload(self, req: Request) -> None:
@@ -344,6 +415,7 @@ class ServingEngine:
         """Delete all engine-side KV for a request (slot/pages + host pool)."""
         self.kv.clear(req_id)
         self.host_pool.pop(req_id, None)
+        self._lossy_kv.discard(req_id)
 
     # ------------------------------------------------------------ main loop
     def submit(self, req: Request, now: float = 0.0) -> None:
@@ -353,13 +425,25 @@ class ServingEngine:
         with self.step_lock:
             self.sched.submit(req, now)
             self._generated_of[req.req_id] = list(req.output_tokens)
+            if self._prefix_ok and req.prompt_tokens:
+                # speculative pricing: the scheduler/EWT charge only the
+                # uncached suffix (re-matched for real at prefill time)
+                req.cached_prefix_hint = self.kv.prefix_probe(
+                    self._prefill_target_tokens(req))
             self._backlog_cache = self.sched.predicted_backlog()
 
     def submit_nowait(self, req: Request, now: float = 0.0) -> None:
         """Non-blocking intake for the concurrent pump: park the request in
         the submit mailbox (drained at the start of the next step) instead
         of waiting on ``step_lock`` behind an in-flight iteration.  Depth
-        and backlog signals account for parked requests immediately."""
+        and backlog signals account for parked requests immediately — with
+        the cached-prefix hint set here, *before* parking, so the mailbox
+        term of ``predicted_backlog`` prices only the uncached suffix
+        (the probe is lock-free: it reads the index without step_lock and
+        degrades to 0 on a racing mutation)."""
+        if self._prefix_ok and req.prompt_tokens:
+            req.cached_prefix_hint = self.kv.prefix_probe(
+                self._prefill_target_tokens(req))
         with self._submit_lock:
             self._submit_box.append((req, now))
 
@@ -450,18 +534,36 @@ class ServingEngine:
         chunk = self.sched.cfg.prefill_chunk
         with self._submit_lock:
             pending = sum(self.latency.prefill_time_remaining(
-                              req.prefill_target, req.prefilled, chunk)
+                              req.prefill_target,
+                              max(req.prefilled, req.cached_prefix_hint),
+                              chunk)
                           for req, _ in self._submit_box)
         return self._backlog_cache + pending
 
-    def prefill_estimate(self, prompt_len: int) -> float:
+    def prefix_probe(self, prompt_tokens) -> int:
+        """Expected shared-prefix cache hit for a prompt on *this* replica
+        (router affinity + admission pricing; 0 when the cache is off).
+        Lock-free: reads race a step thread at worst into a 0 hint."""
+        if not self._prefix_ok or not prompt_tokens:
+            return 0
+        return self.kv.prefix_probe(prompt_tokens)
+
+    def prefill_estimate(self, prompt_len: int,
+                         prompt_tokens=None) -> float:
         """Prefill latency term for the gateway's expected-TTFT admission
         gate: with chunked prefill enabled, only the *first chunk* gates
         (later chunks interleave with resident decode instead of
         serializing behind the backlog); monolithic prefill charges the
-        whole prompt."""
-        return self.latency.first_chunk_time(prompt_len,
-                                             self.sched.cfg.prefill_chunk)
+        whole prompt.  With the shared-prefix cache, only the *uncached
+        suffix* is charged — a cache-hit long prompt gates like the short
+        job it really is."""
+        chunk = self.sched.cfg.prefill_chunk
+        hit = min(self.prefix_probe(prompt_tokens), max(prompt_len - 1, 0))
+        if hit <= 0:
+            return self.latency.first_chunk_time(prompt_len, chunk)
+        rem = prompt_len - hit
+        return self.latency.prefill_chunk_time(
+            hit, min(rem, chunk) if chunk else rem)
 
     def serve(self, requests: List[Request], realtime: bool = False,
               max_wall_s: float = 600.0) -> List[Request]:
@@ -501,6 +603,8 @@ class ServingEngine:
             short = self.kv.pages_shortfall([r.req_id for r in runnable])
             if short <= 0:
                 break
+            if self.mem.reclaim_cache(short) > 0:
+                continue       # cached-but-unreferenced pages yielded first
             victim = max(runnable, key=lambda r: r.context_len)
             runnable.remove(victim)
             self._offload(victim)
@@ -656,8 +760,21 @@ class ServingEngine:
                 victim.preempt_count += 1
                 self.mem.grow(req)
         if reason:
+            if self._prefix_ok and req.prompt_tokens \
+                    and req.req_id not in self._lossy_kv:
+                # finish-time publish: a multi-turn follow-up resends this
+                # whole conversation, so the generated tokens' full pages
+                # are worth caching too (everything up to the prefilled
+                # watermark is materialized; the fed token's KV is not)
+                self.kv.prefix_publish(
+                    req.req_id, self._prefill_target_tokens(req),
+                    req.prefilled)
             self._drop_kv(req.req_id)      # lane/pages or host-pool copy
             self.sched.note_finished(req, t)
+            # the token mirror is per-live-request state: dropping it here
+            # (as release() already does) keeps week-long serves from
+            # accumulating one token list per request ever served
+            self._generated_of.pop(req.req_id, None)
             if self.stream_events:
                 self._emit_event(EngineEvent(
                     "finish", req.req_id, t, reason=reason))
@@ -669,3 +786,20 @@ class ServingEngine:
         """Fit Eq. 3-5 coefficients from this engine's measured step times."""
         decode = [(ctx / max(b, 1), dt / 1.0) for ctx, b, dt in self.iter_times]
         return LatencyModel.fit(list(self.prefill_times), decode)
+
+    def autotune_token_budget(self, target_tpot: float) -> Optional[int]:
+        """Set ``iter_token_budget`` from the fitted latency model: the
+        budget whose predicted mixed-iteration time (full decode batch +
+        prefill-chunk fill) matches ``target_tpot``.  Needs profiled
+        iterations (run a warmup batch first); returns the chosen budget
+        (None leaves the budget unbounded)."""
+        lm = self.fit_latency_model()
+        if self.iter_times:
+            ctx = float(np.mean([c / max(b, 1)
+                                 for c, b, _ in self.iter_times]))
+        else:
+            ctx = self.cfg.max_seq_len / 2
+        budget = lm.budget_for_tpot(target_tpot, self.cfg.max_slots, ctx)
+        with self.step_lock:
+            self.sched.cfg.iter_token_budget = budget
+        return budget

@@ -85,6 +85,36 @@ class LatencyModel:
         t += self.prefill_time_remaining(s, prefilled, chunk)
         return t
 
+    def budget_for_tpot(self, target_tpot: float, lanes: int,
+                        ctx: float) -> Optional[int]:
+        """Iteration token budget whose *predicted* mixed-iteration time
+        matches a target TPOT (auto-tuning ``--iter-token-budget``).
+
+        A budget-``T`` iteration serves ``lanes`` decode lanes (1 token
+        each) plus ``T - lanes`` prefill-chunk tokens; its time is
+
+            t(T) = decode_iter_time(ctx)                 (decode batch)
+                 + (T - lanes) * (t0 + alpha * ctx)      (chunk tokens,
+                                                          incl. the prefix
+                                                          cross-read)
+
+        ``ctx`` must be in the model's own decode-sample units: the
+        engine fits ``alpha``/``beta`` against per-lane context with the
+        whole batched iteration as ``y`` (``fit_latency_model`` feeds
+        ``ctx/batch``), so the batch factor is already inside ``alpha``
+        — do NOT multiply by ``lanes`` again.  Solving
+        ``t(T) = target_tpot`` caps how much prefill one iteration may
+        carry before resident lanes' TPOT degrades past the target.
+        Returns None (unbounded) when the model has no fitted prefill
+        cost; always leaves room for at least one prefill token so long
+        prompts cannot livelock."""
+        per_tok = self.t0 + self.alpha * max(ctx, 0.0)
+        if per_tok <= 0.0:
+            return None
+        decode_t = self.decode_iter_time(max(ctx, 0.0))
+        extra = max(target_tpot - decode_t, 0.0)
+        return max(int(lanes + extra / per_tok), lanes + 1)
+
     # ------------------------------------------------------------------ fit
     @classmethod
     def fit(cls, prefill_samples: Iterable[Tuple[int, float]],

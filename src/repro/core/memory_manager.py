@@ -13,7 +13,7 @@ the scheduler via EWT ordering and executed through :meth:`offload` /
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.request import KVLocation, Request
 
@@ -57,6 +57,17 @@ class TieredKVManager:
         self.used_dram = 0.0
         self.swap_log: List[SwapOp] = []
         self._swap_free_at = 0.0                    # swap engine busy-until
+        # shared-prefix KV cache hooks (registered by the engine when the
+        # cache is enabled): cached-but-unreferenced pages are *reclaimable*
+        # HBM — they are evicted (priority-aware LRU, leaf-first) before any
+        # resident job's pages are offloaded, extending Alg. 2's victim
+        # ordering below the request level
+        self._cache_reclaim: Optional[Callable[[int], int]] = None
+        self._cache_pages: Optional[Callable[[], Tuple[int, int]]] = None
+        self.cache_reclaimed_pages = 0              # lifetime eviction count
+        self.static_bytes = 0.0                     # fixed device charges
+                                                    # (e.g. the dense prefix
+                                                    # cache's private store)
 
     # ------------------------------------------------------------- helpers
     def _round_tokens(self, tokens: int) -> int:
@@ -82,7 +93,39 @@ class TieredKVManager:
         return req.context_len + 1
 
     def hbm_free(self) -> float:
-        return self.cfg.hbm_bytes - self.used_hbm
+        return self.cfg.hbm_bytes - self.used_hbm - self.static_bytes
+
+    # ------------------------------------------------ prefix-cache tier
+    def charge_static(self, nbytes: float) -> None:
+        """Reserve a fixed, unreclaimable device allocation against the
+        HBM budget (the dense prefix cache's private store lives outside
+        per-request accounting but is physically real — without this
+        charge the accounting would stop upper-bounding device memory)."""
+        self.static_bytes += nbytes
+
+    def register_prefix_cache(self, reclaim: Callable[[int], int],
+                              pages: Callable[[], Tuple[int, int]]) -> None:
+        """Wire the shared-prefix cache in as the lowest-priority KV
+        tier: ``reclaim(n_pages) -> freed`` evicts unreferenced cached
+        pages LRU-first; ``pages() -> (held, reclaimable)`` reports its
+        footprint."""
+        self._cache_reclaim = reclaim
+        self._cache_pages = pages
+
+    def reclaim_cache(self, n_pages: int) -> int:
+        """Free up to ``n_pages`` physical pages by evicting
+        cached-but-unreferenced prefix pages — always tried before any
+        resident job is spilled (they hold no live request's state, so
+        evicting them costs a possible future hit, never a recompute)."""
+        if self._cache_reclaim is None or n_pages <= 0:
+            return 0
+        freed = self._cache_reclaim(n_pages)
+        self.cache_reclaimed_pages += freed
+        return freed
+
+    def cached_pages(self) -> Tuple[int, int]:
+        """(pages the prefix cache holds, pages reclaimable right now)."""
+        return self._cache_pages() if self._cache_pages else (0, 0)
 
     def hbm_bytes_of(self, req: Request) -> float:
         quant = self.location.get(req.req_id) == KVLocation.HBM_Q8
@@ -240,7 +283,7 @@ class TieredKVManager:
                    for r in self.location if self.location[r] == KVLocation.DRAM)
         assert abs(hbm - self.used_hbm) < 1.0, (hbm, self.used_hbm)
         assert abs(dram - self.used_dram) < 1.0, (dram, self.used_dram)
-        assert self.used_hbm <= self.cfg.hbm_bytes + 1.0
+        assert self.used_hbm + self.static_bytes <= self.cfg.hbm_bytes + 1.0
 
     def _quant_of(self, rid: int) -> bool:
         return self.cfg.quantize_offload

@@ -60,6 +60,13 @@ class Request:
     prefilled: int = 0                     # tokens with KV materialized by
                                            # (possibly chunked) prefill; reset
                                            # to 0 when KV is dropped
+    cached_prefix_hint: int = 0            # expected shared-prefix cache hit
+                                           # (speculative pricing signal: the
+                                           # scheduler/gateway charge only the
+                                           # uncached suffix; the engine
+                                           # re-matches at prefill time, so a
+                                           # stale hint costs accuracy, never
+                                           # correctness)
     kv_location: KVLocation = KVLocation.NONE
     kv_quantized: bool = False
     output_tokens: List[int] = field(default_factory=list)
@@ -127,6 +134,7 @@ def reset_runtime_state(req: Request) -> None:
     req.state = RequestState.QUEUED
     req.generated = 0
     req.prefilled = 0
+    req.cached_prefix_hint = 0
     req.kv_location = KVLocation.NONE
     req.kv_quantized = False
     req.output_tokens = []

@@ -149,9 +149,17 @@ class Scheduler:
     # ------------------------------------------------------------ priority
     def _remaining(self, req: Request) -> float:
         """Eq. 3-5 remaining time, counting partially-prefilled jobs as
-        owing only their unfinished chunks (not the whole prompt)."""
-        prefilled = (req.prefilled
-                     if self.mem.location_of(req) != KVLocation.NONE else 0)
+        owing only their unfinished chunks (not the whole prompt).  A job
+        with no KV yet is still priced from its shared-prefix cache hint:
+        a cache-hit long prompt owes only its uncached suffix, so the
+        speculative SRTF order ranks it like the short job it really is
+        (the engine re-matches at prefill time — a stale hint skews the
+        estimate, never correctness)."""
+        if self.mem.location_of(req) != KVLocation.NONE:
+            prefilled = req.prefilled
+        else:
+            prefilled = min(req.cached_prefix_hint,
+                            max(req.prefill_target - 1, 0))
         return self.latency.remaining_time(
             req.prompt_len, req.generated, req.remaining_tokens_pred(),
             prefilled=prefilled, chunk=self.cfg.prefill_chunk)

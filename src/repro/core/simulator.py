@@ -57,6 +57,12 @@ class SimConfig:
     max_new_tokens: int = 2048
     prefill_chunk: Optional[int] = None    # chunked prefill span (None = mono)
     iter_token_budget: Optional[int] = None  # per-iteration token budget
+    prefix_cache: bool = False             # shared-prefix KV cache (hit
+                                           # lengths + LRU capacity modeled;
+                                           # a hit skips the cached prefix's
+                                           # prefill cost)
+    prefix_cache_pages: int = 4096         # index capacity (pages)
+    prefix_page_size: int = 16
     drain_timeout: float = 600.0       # extra time after last arrival
     latency_model: Optional[LatencyModel] = None
     pretrain_requests: int = 512       # history corpus for predictor warmup
@@ -155,6 +161,11 @@ class ServingSimulator:
             iter_token_budget=cfg.iter_token_budget)
         self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
         self.pred_overhead = 0.0
+        self.prefix_index = None
+        if cfg.prefix_cache:
+            from repro.serving.prefix_cache import SimPrefixIndex
+            self.prefix_index = SimPrefixIndex(cfg.prefix_page_size,
+                                               cfg.prefix_cache_pages)
 
     # --------------------------------------------------- plan execution
     def execute_plan(self, plan: IterationPlan, now: float):
@@ -189,8 +200,25 @@ class ServingSimulator:
             r.state = RequestState.RUNNING
             if r.first_scheduled_time is None:
                 r.first_scheduled_time = now
-            t_iter += self.latency.prefill_chunk_time(chunk.start, chunk.size)
-            r.prefilled = chunk.end
+            start = chunk.start
+            if (self.prefix_index is not None and chunk.start == 0
+                    and r.prefilled == 0 and r.prompt_tokens):
+                # shared-prefix hit: the cached prefix costs nothing to
+                # "prefill" — only the uncached suffix is charged (same
+                # contract as the real engine's prefix_acquire)
+                hit = self.prefix_index.hit(r.prompt_tokens,
+                                            r.prefill_target - 1)
+                r.prefilled = hit
+                r.cached_prefix_hint = hit
+                start = min(hit, chunk.end)
+            if chunk.end > start:
+                t_iter += self.latency.prefill_chunk_time(
+                    start, chunk.end - start)
+            r.prefilled = max(chunk.end, r.prefilled)
+            if chunk.last and self.prefix_index is not None \
+                    and r.prompt_tokens:
+                self.prefix_index.insert(r.prompt_tokens,
+                                         min(r.prefilled, r.prompt_len))
             ran_any = True
         decoders = 0
         for r in plan.decodes:
@@ -249,6 +277,9 @@ class ServingSimulator:
                 break
             while i_arr < n_total and arrivals[i_arr].arrival_time <= now:
                 req = arrivals[i_arr]
+                if self.prefix_index is not None and req.prompt_tokens:
+                    req.cached_prefix_hint = self.prefix_index.probe(
+                        req.prompt_tokens)
                 self.sched.submit(req, now)
                 # prediction latency is serving-path overhead (Table 2)
                 self.pred_overhead += getattr(self.predictor, "last_latency", 0.0)

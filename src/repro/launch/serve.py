@@ -46,17 +46,27 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
           n_requests: int = 12, max_slots: int = 4, seed: int = 0,
           predictor_kind: str = "oracle", quantize: bool = True,
           kv_backend: str = "dense", prefill_chunk: Optional[int] = None,
-          iter_token_budget: Optional[int] = None):
+          iter_token_budget=None, prefix_cache: bool = False,
+          target_tpot: float = 0.05):
     cfg = get_smoke_config(arch)
     model = Model(cfg, attn_chunk=32, remat=False)
     params = model.init(jax.random.PRNGKey(seed))
     predictor = (OraclePredictor() if predictor_kind == "oracle"
                  else RetrievalPredictor(seed=seed))
+    autotune = iter_token_budget == "auto"
     eng = ServingEngine(model, params, EngineConfig(
         max_slots=max_slots, max_seq_len=96, max_new_tokens=48,
         strategy=strategy, quantize_offload=quantize,
         kv_backend=kv_backend, prefill_chunk=prefill_chunk,
-        iter_token_budget=iter_token_budget), predictor=predictor)
+        iter_token_budget=None if autotune else iter_token_budget,
+        prefix_cache=prefix_cache), predictor=predictor)
+    if autotune:
+        # profile a small warmup batch, then pick the budget whose
+        # predicted mixed-iteration time matches the target TPOT
+        eng.serve(build_requests(cfg, max(4, max_slots), seed + 1))
+        budget = eng.autotune_token_budget(target_tpot)
+        print(f"[serve] auto-tuned iter_token_budget={budget} "
+              f"(target TPOT {target_tpot*1e3:.1f}ms)")
     reqs = build_requests(cfg, n_requests, seed)
     eng.serve(reqs)
     lat = [r.e2e_latency for r in reqs if r.e2e_latency is not None]
@@ -84,7 +94,8 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                   ttft_miss_policy: str = "shed",
                   kv_backend: str = "dense",
                   prefill_chunk: Optional[int] = None,
-                  iter_token_budget: Optional[int] = None):
+                  iter_token_budget: Optional[int] = None,
+                  prefix_cache: bool = False):
     """Replay a synthetic Poisson trace through the online Gateway and print
     per-class TTFT/E2E percentiles (and SLO attainment when targets are
     set).  ``virtual_dt=None`` serves in wall clock; ``pump`` selects the
@@ -100,7 +111,8 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
             max_slots=max_slots, max_seq_len=96, max_new_tokens=48,
             strategy=strategy, quantize_offload=False,
             kv_backend=kv_backend, prefill_chunk=prefill_chunk,
-            iter_token_budget=iter_token_budget), predictor=predictor)
+            iter_token_budget=iter_token_budget,
+            prefix_cache=prefix_cache), predictor=predictor)
 
     reset_request_counter()
     trace = generate_trace(TraceConfig(dataset=dataset, rate=rate,
@@ -150,10 +162,19 @@ def main():
                          "resumable prefill; default: monolithic). Long "
                          "prompts no longer stall resident decode lanes "
                          "for a whole-prompt dispatch")
-    ap.add_argument("--iter-token-budget", type=int, default=None,
+    ap.add_argument("--iter-token-budget", default=None,
                     help="scheduler token budget per iteration (decode "
                          "lane = 1 token, prefill chunk = its span; "
+                         "an integer, or 'auto' to fit it from the "
+                         "profiled latency model against --target-tpot; "
                          "default: unbounded)")
+    ap.add_argument("--target-tpot", type=float, default=0.05,
+                    help="TPOT target (s) for --iter-token-budget auto")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="cross-request shared-prefix KV cache: repeated "
+                         "prompt prefixes (multi-turn chats, shared "
+                         "system prompts) reuse cached KV instead of "
+                         "re-prefilling; greedy outputs are unchanged")
     ap.add_argument("--gateway", action="store_true",
                     help="online mode: replay a Poisson trace through the "
                          "streaming gateway instead of a pre-built batch")
@@ -162,7 +183,8 @@ def main():
     ap.add_argument("--rate", type=float, default=8.0)
     ap.add_argument("--n-engines", type=int, default=2)
     ap.add_argument("--router", default="ewt",
-                    choices=["ewt", "join_shortest_queue", "round_robin"])
+                    choices=["ewt", "join_shortest_queue", "round_robin",
+                             "prefix_ewt"])
     ap.add_argument("--interactive-frac", type=float, default=0.25)
     ap.add_argument("--wall", action="store_true",
                     help="gateway mode: serve in wall clock (default is "
@@ -178,6 +200,12 @@ def main():
     ap.add_argument("--ttft-miss-policy", default="shed",
                     choices=["shed", "defer", "observe"])
     args = ap.parse_args()
+    budget = args.iter_token_budget
+    if budget is not None and budget != "auto":
+        budget = int(budget)
+    if args.gateway and budget == "auto":
+        print("[serve] --iter-token-budget auto is batch-mode only "
+              "(per-replica profiling); gateway runs unbounded")
     if args.gateway:
         serve_gateway(args.arch, args.strategy, args.dataset, args.rate,
                       args.n_requests, args.n_engines, args.max_slots,
@@ -191,12 +219,15 @@ def main():
                       ttft_miss_policy=args.ttft_miss_policy,
                       kv_backend=args.kv_backend,
                       prefill_chunk=args.prefill_chunk,
-                      iter_token_budget=args.iter_token_budget)
+                      iter_token_budget=(None if budget == "auto"
+                                         else budget),
+                      prefix_cache=args.prefix_cache)
     else:
         serve(args.arch, args.strategy, args.n_requests, args.max_slots,
               predictor_kind=args.predictor, kv_backend=args.kv_backend,
               prefill_chunk=args.prefill_chunk,
-              iter_token_budget=args.iter_token_budget)
+              iter_token_budget=budget, prefix_cache=args.prefix_cache,
+              target_tpot=args.target_tpot)
 
 
 if __name__ == "__main__":

@@ -26,7 +26,10 @@ engine's ``prefill_estimate``: with chunked prefill enabled it charges only
 the *first chunk* (the remaining chunks interleave with resident decode
 lanes instead of serializing behind the backlog), so long prompts that
 chunking specifically de-head-of-line-blocks are no longer over-rejected
-on a whole-prompt term.  A request whose target would be
+on a whole-prompt term; with the shared-prefix KV cache enabled it
+charges only the *uncached suffix* of the prompt on the target replica,
+so a cache-hit long prompt (a multi-turn resend, a shared system prompt)
+is admitted like the short job it really is.  A request whose target would be
 missed is shed (interactive default: fail fast so the client can retry a
 healthier cell) or deferred (batch default: the target only shapes the
 holding queue), per ``ttft_miss_policy``.  Admitting work that is already

@@ -4,7 +4,10 @@ Reuses the cluster-level placement policy from ``core/cluster.py``
 (``pick_replica``): ``ewt`` places each request on the replica with the
 minimum predicted completion time (speculative shortest-queue routing,
 cluster-level Eq. 6-7); ``join_shortest_queue`` and ``round_robin`` are
-the standard baselines.
+the standard baselines.  ``prefix_ewt`` adds shared-prefix **affinity**:
+route to the replica whose prefix-cache index already holds the longest
+prefix of the prompt (its prefill shrinks to the uncached suffix),
+tie-broken by EWT — with no hit anywhere it degrades to plain ``ewt``.
 
 Drain: removing an engine releases its in-flight requests (KV freed on the
 old replica) and re-routes them across the survivors.  The engine's
@@ -75,11 +78,23 @@ class GatewayRouter:
         return moved
 
     # ------------------------------------------------------------- routing
-    def dispatch(self, req: Request, now: float) -> EngineDriver:
+    def _pick(self, req: Optional[Request]) -> EngineDriver:
+        """Resolve the configured policy to a driver (no side effects)."""
         alive = self.alive_drivers()
-        d = pick_replica(self.policy, alive, rr_counter=self._rr,
-                         queue_len=lambda d: d.queue_depth(),
-                         backlog=lambda d: d.predicted_backlog())
+        if self.policy == "prefix_ewt" and req is not None:
+            # prefix affinity: longest cached-prefix hit wins; predicted
+            # backlog (EWT) breaks ties and decides when nobody has a hit
+            return min(alive,
+                       key=lambda d: (-d.engine.prefix_probe(
+                                          req.prompt_tokens),
+                                      d.predicted_backlog()))
+        return pick_replica(self.policy if self.policy != "prefix_ewt"
+                            else "ewt", alive, rr_counter=self._rr,
+                            queue_len=lambda d: d.queue_depth(),
+                            backlog=lambda d: d.predicted_backlog())
+
+    def dispatch(self, req: Request, now: float) -> EngineDriver:
+        d = self._pick(req)
         if self.policy == "round_robin":
             self._rr += 1
         if self.nowait:
@@ -96,16 +111,15 @@ class GatewayRouter:
     def total_backlog(self) -> float:
         return sum(d.predicted_backlog() for d in self.alive_drivers())
 
-    def peek_driver(self) -> Optional[EngineDriver]:
+    def peek_driver(self, req: Optional[Request] = None
+                    ) -> Optional[EngineDriver]:
         """The replica the *configured policy* would dispatch the next
         request to, without committing (rr counter untouched).  Its
         predicted backlog is the queueing-delay term of the gateway's
         expected-TTFT estimate — gating on the replica actually about to
         receive the request, whatever the policy (None with no live
-        replicas)."""
-        alive = self.alive_drivers()
-        if not alive:
+        replicas).  ``req`` lets prefix-affinity peek at the same replica
+        dispatch would pick."""
+        if not self.alive_drivers():
             return None
-        return pick_replica(self.policy, alive, rr_counter=self._rr,
-                            queue_len=lambda d: d.queue_depth(),
-                            backlog=lambda d: d.predicted_backlog())
+        return self._pick(req)

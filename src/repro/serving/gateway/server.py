@@ -150,13 +150,15 @@ class Gateway:
         against TTFT).  The prefill term is the engine's
         ``prefill_estimate`` — first-chunk latency when chunked prefill is
         on (the rest of the prompt interleaves with resident decode rather
-        than serializing behind the backlog), whole-prompt when monolithic.
-        None with no live replicas."""
-        target = self.router.peek_driver()
+        than serializing behind the backlog), whole-prompt when monolithic,
+        and only the *uncached suffix* when the target replica's shared-
+        prefix cache already holds a prefix of the prompt.  None with no
+        live replicas."""
+        target = self.router.peek_driver(req)
         if target is None:
             return None
         eng = target.engine
-        intrinsic = (eng.prefill_estimate(req.prompt_len)
+        intrinsic = (eng.prefill_estimate(req.prompt_len, req.prompt_tokens)
                      + eng.predictor.mean_latency_s())
         return target.predicted_backlog(), intrinsic
 

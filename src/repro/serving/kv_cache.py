@@ -36,6 +36,17 @@ from repro.kernels.kv_quant import kv_dequantize_op, kv_quantize_op
 _INTERPRET = jax.default_backend() == "cpu"   # Pallas interpret off-TPU
 _QBLK = 128                                   # kv_quant row-tile
 
+# buffer donation on the jitted cache-update dispatches: the decode/chunk
+# step rewrites the whole cache/pool functionally, so donating the input
+# buffer lets XLA update in place instead of copying the full cache every
+# iteration.  CPU XLA ignores donation (with a warning per compile), so
+# gate it off there — a no-op on CPU, the full-cache copy disappears on TPU.
+_DONATE_OK = jax.default_backend() != "cpu"
+
+
+def _donate(*argnums):
+    return dict(donate_argnums=argnums) if _DONATE_OK else {}
+
 
 # --------------------------------------------------------------- page pool
 
@@ -50,7 +61,15 @@ class PagedKVConfig:
 
 
 class PagedKVPool:
-    """Physical page pool + per-request page tables (one layer set each)."""
+    """Physical page pool + per-request page tables (one layer set each).
+
+    Pages are **refcounted** so the shared-prefix cache can alias one
+    physical page into many page tables (and its own index): every table
+    entry and every index entry holds one reference; a page returns to
+    the free list only when its count reaches zero.  The classic
+    single-owner paths (allocate/extend/free) are the refcount-1 special
+    case, so existing callers are unchanged.
+    """
 
     def __init__(self, cfg: PagedKVConfig):
         self.cfg = cfg
@@ -61,6 +80,43 @@ class PagedKVPool:
         self.free_pages: List[int] = list(range(cfg.num_pages))
         self.page_table: Dict[int, List[int]] = {}       # req -> pages
         self.lengths: Dict[int, int] = {}
+        self.refs: Dict[int, int] = {}                   # page -> refcount
+        # CoW page duplication as one jitted, donated dispatch: without
+        # donation each eager at[].set would materialize a whole new pool
+        self._cow_copy = jax.jit(
+            lambda k, v, s, d: (k.at[:, d].set(k[:, s][:, None]),
+                                v.at[:, d].set(v[:, s][:, None])),
+            **_donate(0, 1))
+
+    # ----------------------------------------------------------- refcounts
+    def take_page(self) -> int:
+        """Claim one free page (refcount 1)."""
+        page = self.free_pages.pop()
+        self.refs[page] = 1
+        return page
+
+    def incref(self, page: int) -> None:
+        self.refs[page] = self.refs.get(page, 0) + 1
+
+    def decref(self, page: int) -> int:
+        """Drop one reference; a page at zero returns to the free list."""
+        n = self.refs.get(page, 0) - 1
+        if n <= 0:
+            self.refs.pop(page, None)
+            self.free_pages.append(page)
+            return 0
+        self.refs[page] = n
+        return n
+
+    def cow_page(self, src: int) -> int:
+        """Copy-on-write: duplicate ``src``'s KV into a fresh page the
+        caller owns exclusively — one jitted dispatch, pool buffers
+        donated (in-place on TPU), dynamic indices so every (src, dst)
+        pair reuses the same compiled program."""
+        dst = self.take_page()
+        self.k, self.v = self._cow_copy(self.k, self.v, jnp.asarray(src),
+                                        jnp.asarray([dst]))
+        return dst
 
     # ------------------------------------------------------------ allocator
     def pages_needed(self, tokens: int) -> int:
@@ -74,7 +130,7 @@ class PagedKVPool:
         if len(self.free_pages) < n:
             raise RuntimeError(
                 f"page pool exhausted: need {n}, free {len(self.free_pages)}")
-        pages = [self.free_pages.pop() for _ in range(n)]
+        pages = [self.take_page() for _ in range(n)]
         self.page_table[req_id] = pages
         self.lengths[req_id] = tokens
         return pages
@@ -87,7 +143,7 @@ class PagedKVPool:
         if need > len(self.page_table[req_id]):
             if not self.free_pages:
                 raise RuntimeError("page pool exhausted on extend")
-            new_page = self.free_pages.pop()
+            new_page = self.take_page()
             self.page_table[req_id].append(new_page)
         self.lengths[req_id] = length
         return new_page
@@ -101,17 +157,18 @@ class PagedKVPool:
         while len(pages) < need:
             if not self.free_pages:
                 raise RuntimeError("page pool exhausted on extend_to")
-            pages.append(self.free_pages.pop())
+            pages.append(self.take_page())
         self.lengths[req_id] = max(self.lengths.get(req_id, 0), tokens)
 
     def reserve_scratch(self) -> int:
         """Permanently remove one physical page from the allocator — the
         sacrificial write target for inactive decode lanes in the fused
         batched step (their token writes must land *somewhere* harmless)."""
-        return self.free_pages.pop()
+        return self.take_page()
 
     def free(self, req_id: int) -> None:
-        self.free_pages.extend(self.page_table.pop(req_id, []))
+        for page in self.page_table.pop(req_id, []):
+            self.decref(page)
         self.lengths.pop(req_id, None)
 
     def utilization(self) -> float:
@@ -222,6 +279,9 @@ class KVBackendConfig:
     quantize_offload: bool = True
     page_size: int = 16            # paged backend only
     attn_impl: str = "gather"      # paged attention: gather | kernel
+    prefix_cache: bool = False     # cross-request shared-prefix KV cache
+    prefix_cache_pages: int = 0    # dense backend: private store capacity
+                                   # (0 = one full batch of stripes)
     seed: int = 0
 
 
@@ -240,6 +300,7 @@ class KVBackend:
         self.model = model
         self.cfg = cfg
         self.slot_req: List[Optional[int]] = [None] * cfg.max_slots
+        self.prefix = None                 # shared-prefix cache (optional)
         self._steps = 0
         self._base_key = jax.random.PRNGKey(cfg.seed)
 
@@ -318,6 +379,41 @@ class KVBackend:
         (always 0 for the dense backend)."""
         return 0
 
+    # --------------------------------------------- shared-prefix cache
+    def prefix_probe(self, tokens) -> int:
+        """Expected cached-prefix hit length for ``tokens`` (pricing /
+        routing hint; touch-free, so probes cannot skew the LRU)."""
+        if self.prefix is None or not tokens:
+            return 0
+        return self.prefix.probe(list(tokens))
+
+    def prefix_acquire(self, rid: int, tokens) -> int:
+        """Materialize the longest cached prefix of ``tokens`` for ``rid``
+        (claiming its decode lane) and return the hit length — the
+        request's starting ``prefilled`` watermark.  0 = miss / disabled."""
+        return 0
+
+    def prefix_publish(self, rid: int, tokens, upto: int) -> int:
+        """Share ``rid``'s materialized KV for ``tokens[:upto]`` (full
+        pages only) back into the index; returns pages newly shared."""
+        return 0
+
+    def prefix_reclaim(self, n_pages: int) -> int:
+        """Evict up to ``n_pages`` cached-but-unreferenced pages (LRU) —
+        the first spill victims, ahead of any resident job's pages."""
+        if self.prefix is None:
+            return 0
+        return self.prefix.reclaim(n_pages)
+
+    def prefix_pages(self):
+        """(pages held by the cache, pages reclaimable right now)."""
+        if self.prefix is None:
+            return (0, 0)
+        return self.prefix.held_pages()
+
+    def prefix_stats(self):
+        return None if self.prefix is None else self.prefix.stats
+
 
 class DenseKVBackend(KVBackend):
     """The original slotted dense cache behind the KVBackend interface.
@@ -331,9 +427,12 @@ class DenseKVBackend(KVBackend):
         super().__init__(model, cfg)
         self.cache = model.init_cache(cfg.max_slots, cfg.max_seq_len)
         self._axes = self._cache_batch_axes()
+        # the cache pytree (arg 1) is consumed and fully re-emitted by the
+        # fused step: donate it so TPU updates in place (no-op on CPU)
         self._fused = jax.jit(functools.partial(
-            model.decode_step_sampled, **self._sample_kwargs()))
-        self._decode = jax.jit(model.decode_step)
+            model.decode_step_sampled, **self._sample_kwargs()),
+            **_donate(1))
+        self._decode = jax.jit(model.decode_step, **_donate(1))
         self._chunk = None
         if model.supports_chunked_prefill():
             # one jitted dispatch per chunk over the *full* cache: the slot
@@ -348,7 +447,24 @@ class DenseKVBackend(KVBackend):
                 return (logits,
                         k_cache.at[:, slot].set(k_new.astype(k_cache.dtype)),
                         v_cache.at[:, slot].set(v_new.astype(v_cache.dtype)))
-            self._chunk = jax.jit(chunk_cache)
+            self._chunk = jax.jit(chunk_cache, **_donate(1, 2))
+        if cfg.prefix_cache and model.supports_chunked_prefill():
+            from repro.serving.prefix_cache import DensePrefixCache
+            acfg = model.cfg
+            capacity = cfg.prefix_cache_pages or (
+                cfg.max_slots * cfg.max_seq_len // cfg.page_size)
+            self.prefix = DensePrefixCache(
+                acfg.num_layers, acfg.num_kv_heads, acfg.hd,
+                cfg.page_size, capacity, self.cache["k"].dtype)
+
+            # hit placement as one jitted, cache-donated dispatch (the
+            # eager per-tensor at[].set would copy the whole cache twice)
+            def place(kc, vc, lengths, k, v, slot, hit):
+                span = k.shape[1]
+                kc = kc.at[:, slot, :span].set(k.astype(kc.dtype))
+                vc = vc.at[:, slot, :span].set(v.astype(vc.dtype))
+                return kc, vc, lengths.at[slot].set(hit)
+            self._place = jax.jit(place, **_donate(0, 1, 2))
 
     def _cache_batch_axes(self) -> Dict[str, int]:
         fam = self.model.cfg.family
@@ -422,6 +538,42 @@ class DenseKVBackend(KVBackend):
         self.cache = {**self.cache, "k": k_new, "v": v_new,
                       "lengths": self.cache["lengths"].at[slot].set(start + C)}
         return logits
+
+    # --------------------------------------------- shared-prefix cache
+    def prefix_acquire(self, rid: int, tokens) -> int:
+        """Copy-based hit: claim a lane and copy the cached prefix's KV
+        from the private page store into the slot stripe, so chunked
+        prefill resumes at the hit watermark (the prefix's prefill
+        compute — the TTFT-dominant cost — is skipped)."""
+        if self.prefix is None or self.has(rid):
+            return 0
+        slot = self.free_slot()
+        if slot is None:
+            return 0
+        hit, k, v = self.prefix.fetch(list(tokens))
+        if hit == 0:
+            return 0
+        self.slot_req[slot] = rid
+        # the fetched span is page-bucketed (pow2): positions past `hit`
+        # carry pad garbage that chunked prefill overwrites before any
+        # query attends there, and the placement compiles O(log) programs
+        span = min(k.shape[1], self.cfg.max_seq_len)
+        kc, vc, lengths = self._place(
+            self.cache["k"], self.cache["v"], self.cache["lengths"],
+            k[:, :span], v[:, :span], jnp.asarray(slot),
+            jnp.asarray(hit, jnp.int32))
+        self.cache = {**self.cache, "k": kc, "v": vc, "lengths": lengths}
+        return hit
+
+    def prefix_publish(self, rid: int, tokens, upto: int) -> int:
+        if self.prefix is None:
+            return 0
+        slot = self.slot_of(rid)
+        if slot is None:
+            return 0
+        return self.prefix.publish(list(tokens), upto,
+                                   self.cache["k"][:, slot],
+                                   self.cache["v"][:, slot])
 
     def clear(self, rid: int) -> None:
         slot = self.slot_of(rid)
@@ -515,13 +667,18 @@ class PagedKVBackend(KVBackend):
             head_dim=acfg.hd, num_layers=acfg.num_layers,
             dtype=model.kv_dtype))
         self.scratch_page = self.pool.reserve_scratch()
+        # kv (arg 1) is the whole page pool, consumed and re-emitted: donate
+        # so TPU writes pages in place (no-op on CPU)
         self._fused = jax.jit(functools.partial(
             model.paged_decode_step_sampled, attn_impl=cfg.attn_impl,
-            interpret=_INTERPRET, **self._sample_kwargs()))
+            interpret=_INTERPRET, **self._sample_kwargs()), **_donate(1))
         # chunked prefill always attends via the logical-order page gather
         # (bit-exact vs the dense stripe path); attn_impl only selects the
         # decode-step kernel
-        self._chunk = jax.jit(model.paged_prefill_chunk)
+        self._chunk = jax.jit(model.paged_prefill_chunk, **_donate(1))
+        if cfg.prefix_cache:
+            from repro.serving.prefix_cache import PagedPrefixCache
+            self.prefix = PagedPrefixCache(self.pool, cfg.page_size)
 
     # ---------------------------------------------------------- interface
     def write_prefill(self, rid: int, pcache, length: int) -> None:
@@ -571,6 +728,28 @@ class PagedKVBackend(KVBackend):
         return max(0, self.pool.pages_needed(end) - have
                    - len(self.pool.free_pages))
 
+    # --------------------------------------------- shared-prefix cache
+    def prefix_acquire(self, rid: int, tokens) -> int:
+        """Zero-copy hit: map the cached prefix's pages into ``rid``'s
+        page table (refcount +1 each; partial page served copy-on-write)
+        and claim its decode lane, so chunked prefill resumes at the hit
+        watermark."""
+        if self.prefix is None or self.has(rid) \
+                or rid in self.pool.page_table:
+            return 0
+        slot = self.free_slot()
+        if slot is None:
+            return 0
+        hit = self.prefix.acquire(rid, list(tokens))
+        if hit:
+            self.slot_req[slot] = rid
+        return hit
+
+    def prefix_publish(self, rid: int, tokens, upto: int) -> int:
+        if self.prefix is None:
+            return 0
+        return self.prefix.publish(rid, list(tokens), upto)
+
     def clear(self, rid: int) -> None:
         slot = self.slot_of(rid)
         if slot is not None:
@@ -594,6 +773,10 @@ class PagedKVBackend(KVBackend):
         slot = self.free_slot()
         assert slot is not None
         length = blob["lengths"]
+        short = (self.pool.pages_needed(length)
+                 - len(self.pool.free_pages))
+        if short > 0:       # cached-but-unreferenced pages yield first
+            self.prefix_reclaim(short)
         pages = self.pool.allocate(rid, length)
         idx = jnp.asarray(pages)
         for key in ("k", "v"):

@@ -1,0 +1,525 @@
+"""Cross-request shared-prefix KV cache (beyond-paper memory reuse).
+
+Real traffic re-prefills the same token prefix over and over: multi-turn
+chats resend the whole conversation, fleets of requests share one system
+prompt or few-shot template.  With per-request page tables (PR 3) the KV
+for a shared prefix can be *shared* instead of recomputed — a radix-tree
+token-prefix index over refcounted pages:
+
+  * the index is **page-granular**: one radix node per full page of
+    tokens (``page_size`` tokens -> one physical page).  Matching walks
+    full-page token keys exactly (O(1) dict hops); when the walk stops
+    mid-page, the longest partially-matching child is reused via
+    **copy-on-write** — the cached page is copied into a fresh page the
+    request owns, and its chunked prefill overwrites from the divergence
+    point (positions past the prefill watermark are causally masked, so a
+    hit is bit-indistinguishable from recompute);
+  * pages referenced by the index hold one refcount; every request
+    mapping a shared page holds another.  A page returns to the free
+    list only at refcount zero, so eviction can never free KV a resident
+    request still attends over;
+  * eviction is **priority-aware LRU**: only *unreferenced* cached pages
+    (refcount 1 — held by the index alone) are evictable, leaf-first in
+    least-recently-matched order.  ``TieredKVManager.reclaim_cache``
+    routes page shortfalls here before any resident job is spilled —
+    cached-but-unreferenced pages are the first victims (paper Alg. 2
+    extended below the request level).
+
+Two front-ends share the radix core:
+
+  * :class:`PagedPrefixCache` — zero-copy over the engine's
+    ``PagedKVPool``: a hit maps shared pages straight into the request's
+    page table;
+  * :class:`DensePrefixCache` — the dense slotted backend cannot alias
+    storage, so the cache owns a *private* page store and hits/publishes
+    copy KV between it and the slot stripes (still skips the prefill
+    compute, which is what dominates TTFT).
+
+:class:`SimPrefixIndex` is the simulator's token-only twin (no storage):
+it reproduces hit lengths and capacity-bounded LRU so scheduler-policy
+results stay comparable with the real engine.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- radix core
+
+class _Node:
+    """One full page of cached prefix: ``key`` is the page's token tuple,
+    ``page`` the physical page id holding its KV."""
+
+    __slots__ = ("key", "page", "children", "parent", "last_used")
+
+    def __init__(self, key: Tuple[int, ...], page: int,
+                 parent: Optional["_Node"]):
+        self.key = key
+        self.page = page
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.parent = parent
+        self.last_used = 0
+
+
+@dataclass
+class PrefixCacheStats:
+    hits: int = 0                 # requests that matched >= 1 full page
+    partial_hits: int = 0         # matches extended mid-page via CoW
+    misses: int = 0
+    hit_tokens: int = 0           # total tokens served from cache
+    inserted_pages: int = 0
+    evicted_pages: int = 0
+    cow_pages: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.__dict__)
+
+
+class RadixPageIndex:
+    """Page-granular radix tree: token prefixes -> physical page ids.
+
+    The tree stores *which* pages cache *which* token spans; ownership
+    (refcounts, storage) belongs to the caller.  Children are keyed by
+    their full page token tuple, so a full-page walk is one dict lookup
+    per page; partial (mid-page) matches scan the divergence node's
+    children once.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.root: Dict[Tuple[int, ...], _Node] = {}
+        self.nodes: set = set()               # flat view for eviction scans
+        self._tick = 0
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.nodes)
+
+    def _touch(self, node: _Node) -> None:
+        self._tick += 1
+        node.last_used = self._tick
+
+    # ------------------------------------------------------------- match
+    def match(self, tokens, max_len: Optional[int] = None, *,
+              touch: bool = True
+              ) -> Tuple[List[_Node], Optional[Tuple[_Node, int]]]:
+        """Longest cached prefix of ``tokens[:max_len]``.
+
+        Returns ``(full_nodes, partial)``: the chain of fully-matched
+        page nodes, plus ``(node, m)`` when a child of the divergence
+        point shares the next ``0 < m < page_size`` tokens (the
+        copy-on-write candidate).  Matched nodes are LRU-touched unless
+        ``touch=False`` — pricing/routing probes must not pin entries
+        that never get a real hit ahead of ones that do.
+        """
+        pg = self.page_size
+        limit = len(tokens) if max_len is None else min(len(tokens), max_len)
+        full: List[_Node] = []
+        children = self.root
+        i = 0
+        while i + pg <= limit:
+            node = children.get(tuple(tokens[i:i + pg]))
+            if node is None:
+                break
+            if touch:
+                self._touch(node)
+            full.append(node)
+            children = node.children
+            i += pg
+        partial: Optional[Tuple[_Node, int]] = None
+        if i < limit:
+            tail = tuple(tokens[i:limit])
+            best_m, best_node = 0, None
+            # snapshot: probes may race a step-thread mutation (gateway
+            # routing); a stale view is fine, a RuntimeError is not
+            for key, node in list(children.items()):
+                m = 0
+                for a, b in zip(key, tail):
+                    if a != b:
+                        break
+                    m += 1
+                if m > best_m:
+                    best_m, best_node = m, node
+            if best_node is not None:
+                if touch:
+                    self._touch(best_node)
+                partial = (best_node, best_m)
+        return full, partial
+
+    def probe_len(self, tokens, max_len: Optional[int] = None, *,
+                  touch: bool = False) -> int:
+        """Cached-prefix length in tokens (full pages + partial match).
+        Touch-free by default — this is the pricing/routing estimate."""
+        full, partial = self.match(tokens, max_len, touch=touch)
+        return len(full) * self.page_size + (partial[1] if partial else 0)
+
+    # ------------------------------------------------------------ insert
+    def insert(self, tokens, upto: int, page_of) -> List[_Node]:
+        """Index the full pages covering ``tokens[:upto]``.
+
+        ``page_of(i)`` supplies the physical page id caching page ``i``
+        (tokens ``[i*pg, (i+1)*pg)``) — consulted only for pages not
+        already indexed.  Returns the newly-created nodes (the caller
+        takes an index refcount on each).  Existing nodes keep their
+        page (first writer wins; a duplicate copy stays private to its
+        request).
+        """
+        pg = self.page_size
+        created: List[_Node] = []
+        children = self.root
+        parent: Optional[_Node] = None
+        for i in range(upto // pg):
+            key = tuple(tokens[i * pg:(i + 1) * pg])
+            node = children.get(key)
+            if node is None:
+                page = page_of(i)
+                if page is None:        # storage full and not evictable
+                    break
+                node = _Node(key, page, parent)
+                children[key] = node
+                self.nodes.add(node)
+                created.append(node)
+            self._touch(node)
+            children = node.children
+            parent = node
+        return created
+
+    # ------------------------------------------------------------- evict
+    def evict_lru(self, n_pages: int, can_evict) -> List[int]:
+        """Remove up to ``n_pages`` least-recently-used *leaf* nodes whose
+        page passes ``can_evict`` (shared pages are pinned); returns the
+        freed page ids.  Interior nodes become evictable as their
+        subtrees drain — a prefix is never orphaned below a hole.  Each
+        scan evicts a whole batch of leaves (oldest first), so freeing
+        ``k`` pages costs O(depth * N log N), not one full scan per page
+        — this runs on the engine's page-shortfall path, under step_lock."""
+        freed: List[int] = []
+        while len(freed) < n_pages:
+            leaves = [nd for nd in self.nodes
+                      if not nd.children and can_evict(nd.page)]
+            if not leaves:
+                break
+            leaves.sort(key=lambda nd: nd.last_used)
+            for victim in leaves[:n_pages - len(freed)]:
+                siblings = (victim.parent.children
+                            if victim.parent is not None else self.root)
+                siblings.pop(victim.key, None)
+                self.nodes.discard(victim)
+                freed.append(victim.page)
+        return freed
+
+    def clear(self) -> List[int]:
+        pages = [n.page for n in self.nodes]
+        self.root = {}
+        self.nodes = set()
+        return pages
+
+
+# ------------------------------------------------- paged (zero-copy) cache
+
+class PagedPrefixCache:
+    """Shared-prefix cache over the engine's :class:`PagedKVPool`.
+
+    Hits map index-held pages directly into the request's page table
+    (refcount +1 per page, no data movement); a partial-page match is
+    served copy-on-write.  Publishing hands the index a refcount on the
+    request's full prompt pages — the pages outlive the request until
+    LRU eviction reclaims them.
+    """
+
+    def __init__(self, pool, page_size: int):
+        self.pool = pool
+        self.index = RadixPageIndex(page_size)
+        self.stats = PrefixCacheStats()
+
+    # ------------------------------------------------------------- probe
+    def probe(self, tokens) -> int:
+        """Expected hit length in tokens (pricing/routing only; touch-free
+        so probe traffic cannot pin entries in the LRU).  Safe to call
+        from the gateway's loop thread while a step mutates the tree —
+        falls back to 0 on a race."""
+        if not tokens:
+            return 0
+        try:
+            return min(self.index.probe_len(tokens), len(tokens) - 1)
+        except RuntimeError:            # concurrent structural mutation
+            return 0
+
+    # ----------------------------------------------------------- acquire
+    def acquire(self, rid: int, tokens) -> int:
+        """Map the longest cached prefix of ``tokens`` into ``rid``'s page
+        table; returns the hit length (the request's starting
+        ``prefilled`` watermark).  Capped at ``len(tokens) - 1`` so at
+        least one token always runs through prefill (the first-token
+        logits must come from somewhere)."""
+        pool = self.pool
+        cap = len(tokens) - 1
+        if cap <= 0 or rid in pool.page_table:
+            return 0
+        full, partial = self.index.match(tokens, cap)
+        if not full and partial is None:
+            self.stats.misses += 1
+            return 0
+        pages: List[int] = []
+        for node in full:
+            pool.incref(node.page)
+            pages.append(node.page)
+        hit = len(pages) * self.index.page_size
+        if partial is not None:
+            node, m = partial
+            cow = self._cow(node.page)
+            if cow is not None:
+                pages.append(cow)
+                hit += m
+                self.stats.partial_hits += 1
+                self.stats.cow_pages += 1
+        if hit == 0:
+            self.stats.misses += 1
+            return 0
+        pool.page_table[rid] = pages
+        pool.lengths[rid] = hit
+        self.stats.hits += 1
+        self.stats.hit_tokens += hit
+        return hit
+
+    def _cow(self, src: int) -> Optional[int]:
+        """Copy a cached page into a fresh one the request will own,
+        reclaiming an unreferenced cached page if the pool is empty."""
+        pool = self.pool
+        if not pool.free_pages and self.reclaim(1) == 0:
+            return None
+        return pool.cow_page(src)
+
+    # ----------------------------------------------------------- publish
+    def publish(self, rid: int, tokens, upto: int) -> int:
+        """Index ``rid``'s pages covering ``tokens[:upto]`` (full pages
+        only); returns the number of newly-shared pages."""
+        pool = self.pool
+        table = pool.page_table.get(rid)
+        if not table:
+            return 0
+        pg = self.index.page_size
+        upto = min(upto, len(table) * pg, len(tokens))
+        created = self.index.insert(tokens, upto, lambda i: table[i])
+        for node in created:
+            pool.incref(node.page)
+        self.stats.inserted_pages += len(created)
+        return len(created)
+
+    # ------------------------------------------------------------- evict
+    def reclaim(self, n_pages: int) -> int:
+        """Priority-aware LRU eviction: free up to ``n_pages`` cached
+        pages no request references (refcount 1 = index-only)."""
+        freed = self.index.evict_lru(
+            n_pages, can_evict=lambda p: self.pool.refs.get(p, 0) == 1)
+        for p in freed:
+            self.pool.decref(p)
+        self.stats.evicted_pages += len(freed)
+        return len(freed)
+
+    def drop_all(self) -> int:
+        """Release every index reference (shutdown / tests)."""
+        pages = self.index.clear()
+        for p in pages:
+            self.pool.decref(p)
+        self.stats.evicted_pages += len(pages)
+        return len(pages)
+
+    # ------------------------------------------------------------- stats
+    def held_pages(self) -> Tuple[int, int]:
+        """(pages the index holds, pages reclaimable right now)."""
+        held = self.index.n_pages
+        reclaimable = sum(1 for n in self.index.nodes
+                          if self.pool.refs.get(n.page, 0) == 1)
+        return held, reclaimable
+
+
+# ------------------------------------------------ dense (copy-based) cache
+
+class DensePrefixCache:
+    """Shared-prefix cache for the dense slotted backend.
+
+    Dense slots can't alias pages, so the cache owns a private page
+    store (plain ``(L, pages, page, KVH, hd)`` arrays); a hit *copies*
+    the cached prefix into the request's slot stripe and publishing
+    copies stripe KV back.  The copies are device-side slices — the win
+    is skipping the prefix's prefill compute, which dominates TTFT.
+    Capacity-bounded: inserting past ``capacity_pages`` LRU-evicts
+    (every private page is by construction unreferenced by requests).
+    """
+
+    def __init__(self, num_layers: int, num_kv_heads: int, head_dim: int,
+                 page_size: int, capacity_pages: int, dtype):
+        self.page_size = page_size
+        self.capacity = max(capacity_pages, 1)
+        shape = (num_layers, self.capacity, page_size, num_kv_heads, head_dim)
+        self.k = jnp.zeros(shape, dtype)
+        self.v = jnp.zeros(shape, dtype)
+        self.free_pages: List[int] = list(range(self.capacity))
+        self.index = RadixPageIndex(page_size)
+        self.stats = PrefixCacheStats()
+        # one jitted, store-donated dispatch per publish: gather every new
+        # page out of the stripe (vmapped dynamic slice) and scatter them
+        # into the store in one go — not one full-store copy per page
+        from repro.serving.kv_cache import _donate
+
+        def store_pages(k_store, v_store, k_src, v_src, rows, starts):
+            def sl(src):
+                return jax.vmap(lambda s: jax.lax.dynamic_slice_in_dim(
+                    src, s, page_size, axis=1))(starts)
+            ks = jnp.moveaxis(sl(k_src), 0, 1).astype(k_store.dtype)
+            vs = jnp.moveaxis(sl(v_src), 0, 1).astype(v_store.dtype)
+            return k_store.at[:, rows].set(ks), v_store.at[:, rows].set(vs)
+
+        self._store_pages = jax.jit(store_pages, **_donate(0, 1))
+
+    def probe(self, tokens) -> int:
+        if not tokens:
+            return 0
+        try:
+            return min(self.index.probe_len(tokens), len(tokens) - 1)
+        except RuntimeError:
+            return 0
+
+    def fetch(self, tokens):
+        """(hit_len, k (L, T, KVH, hd), v) for the longest cached prefix
+        — (0, None, None) on a miss.  A partial-page match needs no CoW
+        here: the gathered copy is already private.  ``T`` is a pow2
+        page-count bucket (pad pages repeat page 0), so the gather and
+        the caller's stripe write compile O(log) programs, not one per
+        hit length; positions past ``hit_len`` carry pad garbage the
+        chunked prefill overwrites before anything attends there."""
+        cap = len(tokens) - 1
+        if cap <= 0:
+            return 0, None, None
+        full, partial = self.index.match(tokens, cap)
+        pg = self.page_size
+        hit = len(full) * pg
+        pages = [n.page for n in full]
+        if partial is not None:
+            node, m = partial
+            pages.append(node.page)
+            hit += m
+            self.stats.partial_hits += 1
+        if hit == 0:
+            self.stats.misses += 1
+            return 0, None, None
+        bucket = 1 << (len(pages) - 1).bit_length()
+        idx = jnp.asarray(pages + [pages[0]] * (bucket - len(pages)))
+        k = self.k[:, idx].reshape(self.k.shape[0], -1, *self.k.shape[3:])
+        v = self.v[:, idx].reshape(self.v.shape[0], -1, *self.v.shape[3:])
+        self.stats.hits += 1
+        self.stats.hit_tokens += hit
+        return hit, k, v
+
+    def publish(self, tokens, upto: int, k_src, v_src) -> int:
+        """Copy full pages of ``k_src``/``v_src`` (a slot stripe,
+        (L, Smax, KVH, hd)) into the private store and index them."""
+        pg = self.page_size
+        upto = min(upto, k_src.shape[1], len(tokens))
+        n_full = upto // pg
+        # make room *before* the insert walk: evicting mid-walk could pick
+        # a node this very insert just created (the chain's parent) and
+        # orphan the rest of the chain.  Matching first also LRU-touches
+        # the existing prefix so eviction prefers unrelated branches; a
+        # pre-evicted prefix node is simply re-created from the stripe
+        # (the re-match below re-bases the missing range on what survived).
+        matched, _ = self.index.match(tokens, upto)
+        missing = max(n_full - len(matched), 0)
+        if missing > len(self.free_pages):
+            self._evict(missing - len(self.free_pages))
+            matched, _ = self.index.match(tokens, upto)
+        # pre-assign a store page per missing index, copy them all in ONE
+        # jitted dispatch (pow2 row bucket; pad rows repeat the first row
+        # with identical content, so the duplicate scatter is harmless)
+        alloc: Dict[int, int] = {}
+        for i in range(len(matched), n_full):
+            if not self.free_pages:
+                break
+            alloc[i] = self.free_pages.pop()
+        if alloc:
+            idxs = list(alloc)
+            bucket = 1 << (len(idxs) - 1).bit_length()
+            pad = bucket - len(idxs)
+            rows = [alloc[i] for i in idxs] + [alloc[idxs[0]]] * pad
+            starts = [i * pg for i in idxs] + [idxs[0] * pg] * pad
+            self.k, self.v = self._store_pages(
+                self.k, self.v, k_src, v_src,
+                jnp.asarray(rows), jnp.asarray(starts))
+        created = self.index.insert(tokens, upto, alloc.get)
+        used = {n.page for n in created}
+        for page in alloc.values():      # chain clipped early: hand back
+            if page not in used:
+                self.free_pages.append(page)
+        self.stats.inserted_pages += len(created)
+        return len(created)
+
+    def _evict(self, n: int) -> int:
+        freed = self.index.evict_lru(n, can_evict=lambda p: True)
+        self.free_pages.extend(freed)
+        self.stats.evicted_pages += len(freed)
+        return len(freed)
+
+    def reclaim(self, n_pages: int) -> int:
+        """Dense cache pages are private to the cache — reclaiming them
+        frees nothing the engine's slot accounting can use, so external
+        reclaim is a no-op (internal capacity eviction still runs)."""
+        return 0
+
+    def drop_all(self) -> int:
+        pages = self.index.clear()
+        self.free_pages.extend(pages)
+        self.stats.evicted_pages += len(pages)
+        return len(pages)
+
+    def held_pages(self) -> Tuple[int, int]:
+        held = self.index.n_pages
+        return held, held
+
+
+# ------------------------------------------------------ simulator twin
+
+class SimPrefixIndex:
+    """Token-only prefix index for the discrete-event simulator: same
+    page-granular radix and LRU capacity semantics, synthetic page ids
+    (there is no storage to manage — only hit lengths and eviction
+    pressure need modeling)."""
+
+    def __init__(self, page_size: int, capacity_pages: int):
+        self.index = RadixPageIndex(page_size)
+        self.capacity = max(capacity_pages, 1)
+        self._ids = itertools.count()
+        self.stats = PrefixCacheStats()
+
+    def probe(self, tokens) -> int:
+        if not tokens:
+            return 0
+        return min(self.index.probe_len(tokens), len(tokens) - 1)
+
+    def insert(self, tokens, upto: int) -> int:
+        created = self.index.insert(tokens, upto,
+                                    lambda i: next(self._ids))
+        over = self.index.n_pages - self.capacity
+        if over > 0:
+            evicted = self.index.evict_lru(over, can_evict=lambda p: True)
+            self.stats.evicted_pages += len(evicted)
+        self.stats.inserted_pages += len(created)
+        return len(created)
+
+    def hit(self, tokens, cap: int) -> int:
+        """A *served* hit (unlike probe, it LRU-touches the match)."""
+        if not tokens:
+            return 0
+        h = min(self.index.probe_len(tokens, touch=True),
+                len(tokens) - 1, max(cap, 0))
+        if h > 0:
+            self.stats.hits += 1
+            self.stats.hit_tokens += h
+        else:
+            self.stats.misses += 1
+        return h
