@@ -22,6 +22,39 @@ SYSTEMS = ("orca", "vllm", "alise", "oracle")
 DURATION = 60.0
 
 
+def _run_traced_decode(model, params, cfg, max_slots, out_len, n_reqs,
+                       mk_reqs, base_tokens, base_tok_s) -> float:
+    """Fused decode with the observability bus attached: assert greedy
+    bit-identity vs the untraced run, report the throughput ratio."""
+    from repro.core.engine import EngineConfig, ServingEngine
+    from repro.core.predictor import OraclePredictor
+    from repro.serving.observability import EventBus
+
+    eng = ServingEngine(model, params, EngineConfig(
+        max_slots=max_slots, max_seq_len=64, max_new_tokens=out_len,
+        strategy="alise", quantize_offload=False, fused_decode=True),
+        predictor=OraclePredictor())
+    eng.attach_bus(EventBus(clock="wall"), "engine0")
+    eng.serve(mk_reqs(max_slots, 4))             # warm the jit caches
+    reqs = mk_reqs(n_reqs, out_len)
+    t0 = time.perf_counter()
+    eng.serve(reqs)
+    wall = time.perf_counter() - t0
+    traced = [list(r.output_tokens) for r in reqs]
+    assert traced == base_tokens, \
+        "tracing changed greedy decode output (must be bit-identical)"
+    toks = sum(r.generated for r in reqs)
+    tok_s = toks / max(wall, 1e-9)
+    ratio = tok_s / max(base_tok_s, 1e-9)
+    emit("e2e/engine_decode/trace_overhead", wall / max(toks, 1) * 1e6,
+         f"tok_per_s={tok_s:.1f};ratio={ratio:.2f};"
+         f"events={len(eng.bus)}")
+    note(f"[engine_decode] traced fused dense: {tok_s:.1f} tok/s "
+         f"({ratio:.2f}x of untraced), {len(eng.bus)} events, "
+         f"tokens bit-identical")
+    return ratio
+
+
 def run_engine_decode(arch: str = "granite-3-8b") -> dict:
     """Fused in-JIT decode vs per-slot dispatch, decode tokens/s."""
     import jax
@@ -56,6 +89,7 @@ def run_engine_decode(arch: str = "granite-3-8b") -> dict:
                             page_size=16),
     }
     results = {}
+    fused_tokens = None
     for name, kw in modes.items():
         eng = ServingEngine(model, params, EngineConfig(
             max_slots=max_slots, max_seq_len=64, max_new_tokens=out_len,
@@ -70,11 +104,21 @@ def run_engine_decode(arch: str = "granite-3-8b") -> dict:
         toks = sum(r.generated for r in reqs)
         tok_s = toks / max(wall, 1e-9)
         results[name] = tok_s
+        if name == "fused_dense":
+            fused_tokens = [list(r.output_tokens) for r in reqs]
         emit(f"e2e/engine_decode/{name}", wall / max(len(eng.iter_times), 1)
              * 1e6, f"tok_per_s={tok_s:.1f};slots={max_slots};"
              f"iters={len(eng.iter_times)}")
     sp = results["fused_dense"] / max(results["per_slot"], 1e-9)
     emit("e2e/engine_decode/fused_speedup", 0.0, f"{sp:.2f}x")
+
+    # --- tracing overhead: fused_dense with the event bus attached must
+    # produce bit-identical greedy tokens (observability never alters
+    # behavior); the ratio row tracks the throughput cost of tracing on
+    emit_ratio = _run_traced_decode(model, params, cfg, max_slots, out_len,
+                                    n_reqs, mk_reqs, fused_tokens,
+                                    results["fused_dense"])
+    results["trace_overhead"] = emit_ratio
     note(f"[engine_decode] slots={max_slots}: per-slot "
          f"{results['per_slot']:.1f} tok/s -> fused dense "
          f"{results['fused_dense']:.1f} tok/s ({sp:.2f}x), fused paged "

@@ -33,20 +33,34 @@ from benchmarks.common import note
 
 # rows whose ``derived`` tok_per_s lands in the artifact's headline metrics
 PERF_METRIC_PREFIXES = ("e2e/engine_decode/", "gateway/wall/",
+                        "gateway/trace/", "gateway/quality/",
                         "hol/prefill_interleave/", "hol/shared_prefix/")
 
 
 def _perf_metrics() -> dict:
-    """Pull headline throughputs out of the emitted rows."""
+    """Pull headline throughputs (and WARN regression flags / telemetry
+    key-value rows) out of the emitted rows."""
     metrics = {}
     for name, _us, derived in common.ROWS:
         if not name.startswith(PERF_METRIC_PREFIXES):
             continue
+        if derived.startswith("WARN"):
+            metrics[name] = {"flag": derived}
+            continue
         m = re.search(r"tok_per_s=([0-9.]+)", derived)
         if m:
             metrics[name] = {"tok_per_s": float(m.group(1))}
-        elif derived.endswith("x"):
+            r = re.search(r"ratio=(-?[0-9.]+)", derived)
+            if r:
+                metrics[name]["ratio"] = float(r.group(1))
+        elif re.fullmatch(r"-?[0-9.]+x", derived):
             metrics[name] = {"speedup": float(derived.rstrip("x"))}
+        else:
+            kv = {k: float(v) for k, v in re.findall(
+                r"([A-Za-z_][A-Za-z_0-9]*)=(-?[0-9.]+(?:e-?[0-9]+)?)(?:;|$)",
+                derived)}
+            if kv:
+                metrics[name] = kv
     return metrics
 
 

@@ -206,7 +206,11 @@ class ServingEngine:
         # Cleared on drop (recompute rebuilds exact KV).
         self._lossy_kv: set = set()
         self._prefill = jax.jit(model.prefill)
-        # bounded profiling rings: week-long gateway serves must not leak
+        # bounded profiling rings: week-long gateway serves must not leak.
+        # Entries lead with a time.perf_counter() timestamp so fits and
+        # exported traces can be aligned post-hoc:
+        #   iter_times:    (t_mono, ctx_tokens, batch, dt)
+        #   prefill_times: (t_mono, n_tokens, dt)
         self.iter_times: Deque[tuple] = deque(maxlen=cfg.profile_window)
         self.prefill_times: Deque[tuple] = deque(maxlen=cfg.profile_window)
         self._generated_of: Dict[int, List[int]] = {}
@@ -230,6 +234,58 @@ class ServingEngine:
         # other way)
         self._submit_box: List = []                # [(Request, now), ...]
         self._submit_lock = threading.Lock()
+        # observability: a bus is attached by the gateway (or a test/bench
+        # harness) via attach_bus(); None keeps every emit site to a single
+        # attribute-load + branch on the hot path
+        self.bus = None
+        self.name = ""                             # replica lane name
+        self._step_wall0 = 0.0                     # perf_counter at step start
+
+    # -------------------------------------------------------- observability
+    def attach_bus(self, bus, name: str = "") -> None:
+        """Wire an observability EventBus through every layer of this
+        engine — scheduler (queue/promote/demote), prefix cache
+        (hit/publish/evict/CoW) and the engine's own execution spans —
+        under one replica lane ``name``."""
+        self.bus = bus
+        self.name = name
+        self.sched.bus = bus
+        self.sched.replica = name
+        if self._prefix_ok:
+            self.kv.prefix.bus = bus
+            self.kv.prefix.replica = name
+
+    def _span_t(self, t: float, t0: float) -> float:
+        """Trace placement of an in-step span that started at wall clock
+        ``t0``: offset from the iteration's gateway-domain timestamp ``t``
+        by the wall time elapsed since step entry.  Exact in wall mode; in
+        virtual mode it yields monotone within-iteration placement (the
+        span's ``dur`` stays informational wall seconds)."""
+        return t + (t0 - self._step_wall0)
+
+    def gauges(self) -> Dict[str, float]:
+        """Replica-level occupancy snapshot for periodic gauge sampling."""
+        g = self.mem.gauges()
+        g["queue_depth"] = float(self.queue_depth())
+        g["backlog_s"] = float(self._backlog_cache)
+        g["live_requests"] = float(len(self.sched.live))
+        for i, d in enumerate(self.sched.queue_depths()):
+            g[f"mlfq_q{i}_depth"] = float(d)
+        pool = getattr(self.kv, "pool", None)
+        if pool is not None:
+            g["pool_free_pages"] = float(len(pool.free_pages))
+            g["pool_total_pages"] = float(pool.cfg.num_pages)
+            g["pool_utilization"] = float(pool.utilization())
+        if self._prefix_ok:
+            st = self.kv.prefix_stats().as_dict()
+            probes = st.get("hits", 0) + st.get("partial_hits", 0) \
+                + st.get("misses", 0)
+            g["prefix_hit_ratio"] = (
+                (st.get("hits", 0) + st.get("partial_hits", 0)) / probes
+                if probes else 0.0)
+            for k, v in st.items():
+                g[f"prefix_{k}"] = float(v)
+        return g
 
     # -------------------------------------------------------------- prefill
     def _run_prefill(self, req: Request, tokens: List[int]):
@@ -319,6 +375,9 @@ class ServingEngine:
             if hit:
                 r.prefilled = hit
                 r.cached_prefix_hint = hit
+                if self.bus is not None:
+                    self.bus.emit("prefix_hit", t=t, req_id=rid,
+                                  replica=self.name, tokens=hit)
         start = max(chunk.start, r.prefilled)
         # paged backend: the chunk's coverage may need fresh physical pages;
         # cached-but-unreferenced prefix pages yield first (priority-aware
@@ -336,10 +395,7 @@ class ServingEngine:
                 return False           # cannot make room this iteration
             done = [x for x in others if x.prefill_pending == 0]
             victim = max(done or others, key=lambda x: x.context_len)
-            self._offload(victim)
-            self.mem.offload(victim, t)
-            victim.state = RequestState.PREEMPTED
-            victim.preempt_count += 1
+            self._spill(victim, t, "page_shortfall")
         if self.mem.location_of(r) == KVLocation.NONE:
             self.mem.admit(r)
         r.state = RequestState.RUNNING
@@ -356,20 +412,28 @@ class ServingEngine:
             logits = self.kv.prefill_chunk(
                 self.params, rid, target_toks[start:chunk.end], start)
             r.prefilled = chunk.end
-            self.prefill_times.append((chunk.end - start,
-                                       time.perf_counter() - t0))
+            n_chunk_toks = chunk.end - start
         else:
             assert chunk.start == 0 and chunk.last, \
                 "monolithic fallback cannot resume a partial chunk"
             logits = self._run_prefill(r, target_toks)
             r.prefilled = len(target_toks)
-            self.prefill_times.append((len(target_toks),
-                                       time.perf_counter() - t0))
+            n_chunk_toks = len(target_toks)
+        dt = time.perf_counter() - t0
+        self.prefill_times.append((t0, n_chunk_toks, dt))
+        if self.bus is not None:
+            self.bus.emit("prefill_chunk", t=self._span_t(t, t0), dur=dt,
+                          req_id=rid, replica=self.name, start=start,
+                          end=chunk.end, tokens=n_chunk_toks,
+                          last=chunk.last, fresh=chunk.fresh)
         if chunk.last and self._prefix_ok and rid not in self._lossy_kv:
             # prefill complete: publish the full pages covering the target
             # back to the index so the *next* request sharing this prefix
             # hits (the partial tail page stays private — decode writes it)
-            self.kv.prefix_publish(rid, target_toks, r.prefilled)
+            pages = self.kv.prefix_publish(rid, target_toks, r.prefilled)
+            if pages and self.bus is not None:
+                self.bus.emit("prefix_publish", t=t, req_id=rid,
+                              replica=self.name, pages=pages)
         if chunk.last and r.generated == 0:   # fresh prefill emits a token
             tok, reason = self._sample_host(
                 logits[0], 1, r.context_len + 1, self._true_len_of(r))
@@ -416,6 +480,25 @@ class ServingEngine:
         self.kv.clear(req_id)
         self.host_pool.pop(req_id, None)
         self._lossy_kv.discard(req_id)
+
+    def _spill(self, victim: Request, t: float, reason: str) -> None:
+        """Preempt a resident victim to host DRAM — the single offload
+        path shared by the planned swap-out, page-shortfall, and
+        mid-iteration-grow sites (engine KV move + memory accounting +
+        request state + observability events)."""
+        t0 = time.perf_counter()
+        self._offload(victim)
+        op = self.mem.offload(victim, t)
+        victim.state = RequestState.PREEMPTED
+        victim.preempt_count += 1
+        if self.bus is not None:
+            self.bus.emit("preempt", t=t, req_id=victim.req_id,
+                          replica=self.name, reason=reason)
+            self.bus.emit("swap_out", t=self._span_t(t, t0),
+                          dur=max(op.done_time - op.issue_time, 0.0),
+                          req_id=victim.req_id, replica=self.name,
+                          bytes=op.bytes,
+                          quantized=self.cfg.quantize_offload)
 
     # ------------------------------------------------------------ main loop
     def submit(self, req: Request, now: float = 0.0) -> None:
@@ -607,10 +690,7 @@ class ServingEngine:
                 continue       # cached-but-unreferenced pages yielded first
             victim = max(runnable, key=lambda r: r.context_len)
             runnable.remove(victim)
-            self._offload(victim)
-            self.mem.offload(victim, t)
-            victim.state = RequestState.PREEMPTED
-            victim.preempt_count += 1
+            self._spill(victim, t, "page_shortfall")
         return runnable
 
     def step(self, t: float) -> bool:
@@ -621,30 +701,38 @@ class ServingEngine:
             return t
 
         with self.step_lock:
+            self._step_wall0 = time.perf_counter()
             self._drain_submit_box()
             plan = self.sched.plan(now())
 
             for r in plan.drop:            # recompute-strategy eviction
                 # under very tight HBM the planned victim's KV may already
                 # live in the host pool (offloaded earlier) rather than a slot
+                dropped_ctx = r.context_len
                 self._drop_kv(r.req_id)
                 self.mem.drop(r)
                 r.state = RequestState.QUEUED
                 r.preempt_count += 1
+                if self.bus is not None:
+                    self.bus.emit("drop", t=now(), req_id=r.req_id,
+                                  replica=self.name, tokens=dropped_ctx)
             for r in plan.swap_out:
                 if not self.kv.has(r.req_id):
                     continue               # already off-slot; nothing to move
-                self._offload(r)
-                self.mem.offload(r, now())
-                r.state = RequestState.PREEMPTED
-                r.preempt_count += 1
+                self._spill(r, now(), "planned")
             for r in plan.swap_in:
                 if self.kv.free_slot() is None:
                     continue               # retry next iteration
+                t0 = time.perf_counter()
                 self._upload(r)
-                self.mem.upload(r, now())
+                op = self.mem.upload(r, now())
                 r.state = RequestState.PREEMPTED
                 self.sched._swap_ready_at[r.req_id] = 0.0
+                if self.bus is not None:
+                    self.bus.emit("swap_in", t=self._span_t(now(), t0),
+                                  dur=max(op.done_time - op.issue_time, 0.0),
+                                  req_id=r.req_id, replica=self.name,
+                                  bytes=op.bytes)
 
             ran_any = False
             # compute items in priority order: prefill chunks execute as
@@ -691,8 +779,13 @@ class ServingEngine:
                     logits = self.kv.decode_logits(self.params, tokens,
                                                    active)
                 ctx_tokens = int(sum(r.context_len for r in runnable))
-                self.iter_times.append((ctx_tokens, len(runnable),
-                                        time.perf_counter() - t0))
+                dt = time.perf_counter() - t0
+                self.iter_times.append((t0, ctx_tokens, len(runnable), dt))
+                if self.bus is not None:
+                    self.bus.emit("decode_iter", t=self._span_t(now(), t0),
+                                  dur=dt, replica=self.name,
+                                  batch=len(runnable),
+                                  ctx_tokens=ctx_tokens)
                 for r in runnable:
                     # the token must be accepted even if a neighbor's
                     # mem.grow() spill offloaded r mid-loop: this decode
@@ -714,6 +807,15 @@ class ServingEngine:
                                            reason=reason)
                 ran_any = True
 
+            if self.bus is not None and plan.hol_blocked:
+                # charge each blocked higher-priority request the wall
+                # time of the iteration that ran lower-priority work ahead
+                # of it (the direct HoL-blocking measurement)
+                iter_dt = time.perf_counter() - self._step_wall0
+                for r in plan.hol_blocked:
+                    self.bus.emit("hol_blocked", t=now(), dur=iter_dt,
+                                  req_id=r.req_id, replica=self.name,
+                                  level=r.priority_level)
             self._backlog_cache = self.sched.predicted_backlog()
             stall, self._stall_debt = self._stall_debt, 0.0
         if stall > 0:
@@ -754,10 +856,7 @@ class ServingEngine:
                       if self.mem.resident_hbm(r) and r.req_id != req.req_id]
             if others:
                 victim = max(others, key=lambda r: r.context_len)
-                self._offload(victim)
-                self.mem.offload(victim, t)
-                victim.state = RequestState.PREEMPTED
-                victim.preempt_count += 1
+                self._spill(victim, t, "hbm_grow")
                 self.mem.grow(req)
         if reason:
             if self._prefix_ok and req.prompt_tokens \
@@ -766,11 +865,26 @@ class ServingEngine:
                 # whole conversation, so the generated tokens' full pages
                 # are worth caching too (everything up to the prefilled
                 # watermark is materialized; the fed token's KV is not)
-                self.kv.prefix_publish(
+                pages = self.kv.prefix_publish(
                     req.req_id, self._prefill_target_tokens(req),
                     req.prefilled)
+                if pages and self.bus is not None:
+                    self.bus.emit("prefix_publish", t=t, req_id=req.req_id,
+                                  replica=self.name, pages=pages)
             self._drop_kv(req.req_id)      # lane/pages or host-pool copy
             self.sched.note_finished(req, t)
+            if self.bus is not None:
+                # self-contained: arrival/first-token/prediction ride along
+                # so an engine-only trace (no gateway) still yields length
+                # and TTFT error distributions
+                self.bus.emit("finish", t=t, req_id=req.req_id,
+                              replica=self.name, reason=reason,
+                              generated=req.generated,
+                              predicted=req.predicted_len,
+                              arrival_t=req.arrival_time,
+                              first_token_t=req.first_token_time,
+                              preempts=req.preempt_count,
+                              demotions=req.demotions)
             # the token mirror is per-live-request state: dropping it here
             # (as release() already does) keeps week-long serves from
             # accumulating one token list per request ever served
@@ -783,9 +897,13 @@ class ServingEngine:
 
     # ----------------------------------------------------------- profiling
     def fit_latency_model(self) -> LatencyModel:
-        """Fit Eq. 3-5 coefficients from this engine's measured step times."""
-        decode = [(ctx / max(b, 1), dt / 1.0) for ctx, b, dt in self.iter_times]
-        return LatencyModel.fit(list(self.prefill_times), decode)
+        """Fit Eq. 3-5 coefficients from this engine's measured step times.
+        Ring entries carry a leading ``time.perf_counter`` timestamp (for
+        post-hoc alignment with exported traces); the fit strips it."""
+        decode = [(ctx / max(b, 1), dt / 1.0)
+                  for _, ctx, b, dt in self.iter_times]
+        prefill = [(n, dt) for _, n, dt in self.prefill_times]
+        return LatencyModel.fit(prefill, decode)
 
     def autotune_token_budget(self, target_tpot: float) -> Optional[int]:
         """Set ``iter_token_budget`` from the fitted latency model: the
@@ -796,7 +914,7 @@ class ServingEngine:
         lm = self.fit_latency_model()
         if self.iter_times:
             ctx = float(np.mean([c / max(b, 1)
-                                 for c, b, _ in self.iter_times]))
+                                 for _, c, b, _ in self.iter_times]))
         else:
             ctx = self.cfg.max_seq_len / 2
         budget = lm.budget_for_tpot(target_tpot, self.cfg.max_slots, ctx)

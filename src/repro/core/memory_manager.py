@@ -273,6 +273,33 @@ class TieredKVManager:
         req.kv_location = KVLocation.NONE
         req.prefilled = 0
 
+    # -------------------------------------------------------------- gauges
+    def gauges(self) -> Dict[str, float]:
+        """Point-in-time occupancy/fragmentation snapshot for the
+        observability layer.  ``hbm_frag`` is internal reservation
+        fragmentation: the fraction of reserved HBM tokens not backing a
+        resident token (page-rounding slack + reserve-ahead headroom)."""
+        resident = [rid for rid, loc in self.location.items()
+                    if loc in (KVLocation.HBM, KVLocation.HBM_Q8)]
+        res_tokens = sum(self.reserved.get(r, 0) for r in resident)
+        live_tokens = sum(self.tokens.get(r, 0) for r in resident)
+        held, reclaimable = self.cached_pages()
+        return {
+            "hbm_used_bytes": self.used_hbm,
+            "hbm_static_bytes": self.static_bytes,
+            "hbm_free_bytes": self.hbm_free(),
+            "hbm_total_bytes": self.cfg.hbm_bytes,
+            "hbm_utilization": ((self.used_hbm + self.static_bytes)
+                                / max(self.cfg.hbm_bytes, 1.0)),
+            "hbm_frag": (1.0 - live_tokens / res_tokens) if res_tokens else 0.0,
+            "dram_used_bytes": self.used_dram,
+            "n_resident": float(len(resident)),
+            "prefix_cache_pages": float(held),
+            "prefix_cache_reclaimable": float(reclaimable),
+            "prefix_cache_reclaimed_total": float(self.cache_reclaimed_pages),
+            "swap_ops_total": float(len(self.swap_log)),
+        }
+
     # -------------------------------------------------------------- checks
     def check_invariants(self) -> None:
         hbm = sum(self._bytes(self.reserved[r], self.location[r] == KVLocation.HBM_Q8)

@@ -113,6 +113,9 @@ class IterationPlan:
     dequantize_cold: List[Request] = field(default_factory=list)
     budget_tokens: Optional[int] = None
     used_tokens: int = 0
+    hol_blocked: List[Request] = field(default_factory=list)  # runnable
+    # higher-priority requests left memory-blocked behind dispatched
+    # lower-priority work this iteration (direct HoL-blocking signal)
 
     # ---------------------------------------------------- convenience views
     @property
@@ -135,6 +138,8 @@ class Scheduler:
         self.finished: List[Request] = []
         self._swap_ready_at: Dict[int, float] = {}   # req_id -> upload done time
         self.is_fcfs = cfg.strategy in ("orca", "vllm")
+        self.bus = None                # observability EventBus (None = off)
+        self.replica = ""              # lane name for emitted events
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request, now: float) -> None:
@@ -145,6 +150,12 @@ class Scheduler:
         req.priority_level = self._level_of(req, now) if not self.is_fcfs else 0
         req.level_enter_time = now
         self.live[req.req_id] = req
+        if self.bus is not None:
+            self.bus.emit("queue_join", t=now, req_id=req.req_id,
+                          replica=self.replica, level=req.priority_level,
+                          predicted_len=req.predicted_len,
+                          remaining_est=self._remaining(req),
+                          prefix_hint=req.cached_prefix_hint)
 
     # ------------------------------------------------------------ priority
     def _remaining(self, req: Request) -> float:
@@ -182,22 +193,33 @@ class Scheduler:
 
     def _apply_aging(self, req: Request, now: float) -> None:
         """Virtual aging: promote one level per age_threshold spent waiting."""
+        old = req.priority_level
         while (req.priority_level > 0
                and now - req.level_enter_time >= self.cfg.age_threshold):
             req.priority_level -= 1
             req.level_enter_time += self.cfg.age_threshold
+        if self.bus is not None and req.priority_level != old:
+            self.bus.emit("promote", t=now, req_id=req.req_id,
+                          replica=self.replica, old_level=old,
+                          new_level=req.priority_level)
 
     def note_generated(self, req: Request, now: float) -> None:
         """Called after each decoded token: misprediction demotion."""
         if self.is_fcfs:
             return
         if req.generated >= (req.predicted_len or 1):
+            old = req.priority_level
             req.predicted_len = min((req.predicted_len or 1) * 2,
                                     self.cfg.max_new_tokens)
             req.priority_level = self._clamp_level(
                 req, min(req.priority_level + 1, self.cfg.n_queues - 1))
             req.level_enter_time = now
             req.demotions += 1
+            if self.bus is not None:
+                self.bus.emit("demote", t=now, req_id=req.req_id,
+                              replica=self.replica, old_level=old,
+                              new_level=req.priority_level,
+                              new_predicted_len=req.predicted_len)
 
     def predicted_backlog(self) -> float:
         """Sum of predicted remaining execution time over live jobs (the
@@ -379,6 +401,7 @@ class Scheduler:
         n_resident = sum(1 for r in live if self.mem.resident_hbm(r))
         free = self.mem.hbm_free()
         evict_iter = iter(residents)
+        mem_blocked: List[Request] = []
         for r in desired:
             if left < 1:
                 break           # budget spent: the rest waits an iteration
@@ -401,6 +424,7 @@ class Scheduler:
                 free += freed
                 n_resident -= 1
             if free < need or n_resident >= max_resident:
+                mem_blocked.append(r)
                 continue                 # cannot fit this iteration
             free -= need
             n_resident += 1
@@ -429,6 +453,20 @@ class Scheduler:
                     plan.used_tokens += 1
                     left -= 1
                     n_lanes += 1
+
+        # HoL-blocking detection: a memory-blocked candidate whose SRTF
+        # rank is *better* than some request that did get dispatched this
+        # iteration is, by definition, head-of-line blocked — the exact
+        # inversion speculative scheduling exists to minimize.
+        if mem_blocked:
+            rank = {r.req_id: i for i, r in enumerate(candidates)}
+            scheduled = ({it.req.req_id for it in plan.items}
+                         | {r.req_id for r in plan.swap_in}
+                         | {r.req_id for r in plan.dequantize_cold})
+            worst = max((rank[i] for i in scheduled if i in rank),
+                        default=-1)
+            plan.hol_blocked = [r for r in mem_blocked
+                                if rank.get(r.req_id, worst + 1) < worst]
         return plan
 
     # ------------------------------------------------------------- summary

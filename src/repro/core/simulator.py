@@ -125,9 +125,15 @@ def build_predictor(kind: str, trace_cfg: TraceConfig, n_history: int,
 
 class ServingSimulator:
     def __init__(self, cfg: SimConfig, trace: SyntheticTrace,
-                 predictor: Optional[LengthPredictor] = None):
+                 predictor: Optional[LengthPredictor] = None,
+                 bus=None, replica: str = "sim0"):
+        """``bus``: an optional virtual-clock observability EventBus —
+        simulated runs emit the same event schema as the real engine, so
+        trace exports and quality telemetry are comparable across both."""
         self.cfg = cfg
         self.trace = trace
+        self.bus = bus
+        self.replica = replica
         arch = get_config(cfg.model)
         bpt = kv_bytes_per_token(arch.num_layers, arch.num_kv_heads, arch.hd)
         self.latency = cfg.latency_model or calibrated(cfg.model)
@@ -160,12 +166,16 @@ class ServingSimulator:
             prefill_chunk=cfg.prefill_chunk,
             iter_token_budget=cfg.iter_token_budget)
         self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
+        self.sched.bus = self.bus
+        self.sched.replica = self.replica
         self.pred_overhead = 0.0
         self.prefix_index = None
         if cfg.prefix_cache:
             from repro.serving.prefix_cache import SimPrefixIndex
             self.prefix_index = SimPrefixIndex(cfg.prefix_page_size,
                                                cfg.prefix_cache_pages)
+            self.prefix_index.bus = self.bus
+            self.prefix_index.replica = self.replica
 
     # --------------------------------------------------- plan execution
     def execute_plan(self, plan: IterationPlan, now: float):
@@ -174,21 +184,37 @@ class ServingSimulator:
         phase; also driven by ``core/cluster.py`` replicas).  Returns
         ``(t_iter, ran_any)``; the caller advances the clock and then calls
         :meth:`account_tokens`."""
-        sched, mem = self.sched, self.mem
+        sched, mem, bus = self.sched, self.mem, self.bus
+        if bus is not None:
+            bus.mark(now)
         for r in plan.drop:
+            dropped_ctx = r.context_len
             mem.drop(r)
             r.state = RequestState.QUEUED
             r.preempt_count += 1
+            if bus is not None:
+                bus.emit("drop", t=now, req_id=r.req_id,
+                         replica=self.replica, tokens=dropped_ctx)
         for r in plan.swap_out:
-            mem.offload(r, now)
+            op = mem.offload(r, now)
             r.state = RequestState.PREEMPTED
             r.preempt_count += 1
+            if bus is not None:
+                bus.emit("preempt", t=now, req_id=r.req_id,
+                         replica=self.replica, reason="planned")
+                bus.emit("swap_out", t=now, dur=op.done_time - op.issue_time,
+                         req_id=r.req_id, replica=self.replica,
+                         bytes=op.bytes, quantized=mem.cfg.quantize_offload)
         for r in plan.dequantize_cold:
             mem.dequantize_cold(r, now)
         for r in plan.swap_in:
             op = mem.upload(r, now)
             r.state = RequestState.SWAPPING
             sched._swap_ready_at[r.req_id] = op.done_time
+            if bus is not None:
+                bus.emit("swap_in", t=now, dur=op.done_time - op.issue_time,
+                         req_id=r.req_id, replica=self.replica,
+                         bytes=op.bytes)
 
         t_iter = 0.0
         decode_ctx = 0
@@ -211,9 +237,21 @@ class ServingSimulator:
                 r.prefilled = hit
                 r.cached_prefix_hint = hit
                 start = min(hit, chunk.end)
+                if hit and bus is not None:
+                    bus.emit("prefix_hit", t=now, req_id=r.req_id,
+                             replica=self.replica, tokens=hit)
             if chunk.end > start:
-                t_iter += self.latency.prefill_chunk_time(
+                t_chunk = self.latency.prefill_chunk_time(
                     start, chunk.end - start)
+                if bus is not None:
+                    # virtual-domain span: placed at its modeled offset
+                    # within the iteration, dur from the latency model
+                    bus.emit("prefill_chunk", t=now + t_iter, dur=t_chunk,
+                             req_id=r.req_id, replica=self.replica,
+                             start=start, end=chunk.end,
+                             tokens=chunk.end - start, last=chunk.last,
+                             fresh=chunk.fresh)
+                t_iter += t_chunk
             r.prefilled = max(chunk.end, r.prefilled)
             if chunk.last and self.prefix_index is not None \
                     and r.prompt_tokens:
@@ -229,7 +267,17 @@ class ServingSimulator:
             decoders += 1
             ran_any = True
         if decoders:
-            t_iter += self.latency.beta + self.latency.alpha * decode_ctx
+            t_decode = self.latency.beta + self.latency.alpha * decode_ctx
+            if bus is not None:
+                bus.emit("decode_iter", t=now + t_iter, dur=t_decode,
+                         replica=self.replica, batch=decoders,
+                         ctx_tokens=decode_ctx)
+            t_iter += t_decode
+        if bus is not None and plan.hol_blocked:
+            for r in plan.hol_blocked:
+                bus.emit("hol_blocked", t=now, dur=t_iter,
+                         req_id=r.req_id, replica=self.replica,
+                         level=r.priority_level)
         return t_iter, ran_any
 
     def account_tokens(self, plan: IterationPlan, now: float) -> None:
@@ -257,6 +305,17 @@ class ServingSimulator:
             if (r.generated >= r.true_out_len
                     or r.generated >= self.sched.cfg.max_new_tokens):
                 self.sched.note_finished(r, now)
+                if self.bus is not None:
+                    reason = ("true_len" if r.generated >= r.true_out_len
+                              else "length")
+                    self.bus.emit("finish", t=now, req_id=r.req_id,
+                                  replica=self.replica, reason=reason,
+                                  generated=r.generated,
+                                  predicted=r.predicted_len,
+                                  arrival_t=r.arrival_time,
+                                  first_token_t=r.first_token_time,
+                                  preempts=r.preempt_count,
+                                  demotions=r.demotions)
 
     # ------------------------------------------------------------------ run
     def run(self, max_iters: int = 20_000_000) -> SimResult:
@@ -365,10 +424,11 @@ def run_sim(model: str = "opt-13b", strategy: str = "alise",
             dataset: str = "sharegpt", rate: float = 2.0,
             duration: float = 120.0, seed: int = 0,
             predictor: Optional[LengthPredictor] = None,
-            **overrides) -> SimResult:
-    """Convenience wrapper used by benchmarks and tests."""
+            bus=None, **overrides) -> SimResult:
+    """Convenience wrapper used by benchmarks and tests.  ``bus``: an
+    optional virtual-clock EventBus receiving the run's lifecycle events."""
     trace = generate_trace(TraceConfig(dataset=dataset, rate=rate,
                                        duration=duration, seed=seed))
     sim_cfg = SimConfig(model=model, strategy=strategy, seed=seed, **overrides)
-    sim = ServingSimulator(sim_cfg, trace, predictor=predictor)
+    sim = ServingSimulator(sim_cfg, trace, predictor=predictor, bus=bus)
     return sim.run()

@@ -42,12 +42,36 @@ def build_requests(cfg, n: int, seed: int = 0):
     return reqs
 
 
+def _export_trace(bus, quality: dict, trace_out: str) -> None:
+    """Write the Chrome/Perfetto trace (+ a .prom gauge dump) and print
+    the scheduler-quality highlights derived from the same stream."""
+    from repro.serving.observability import (render_prometheus,
+                                             write_chrome_trace)
+    obj = write_chrome_trace(bus, trace_out)
+    print(f"[trace] wrote {len(obj['traceEvents'])} trace events -> "
+          f"{trace_out} (load in https://ui.perfetto.dev)")
+    with open(trace_out + ".prom", "w") as f:
+        f.write(render_prometheus(bus))
+    print(f"[trace] wrote Prometheus gauges -> {trace_out}.prom")
+    q = quality.get("queueing", {})
+    e = quality.get("estimate_error", {})
+    for label, d in [("ttft decomposition p50 (s): ",
+                      {k: v.get("p50") for k, v in q.items()
+                       if isinstance(v, dict) and v.get("n", 0)}),
+                     ("EWT err (s) ", e.get("ewt_signed_s", {})),
+                     ("len err (tok) ", e.get("len_signed_tok", {}))]:
+        if isinstance(d, dict) and d and d.get("n", 1):
+            stats = ", ".join(f"{k}={v:.3f}" for k, v in d.items()
+                              if isinstance(v, float))
+            print(f"[quality] {label}{stats}")
+
+
 def serve(arch: str = "granite-3-8b", strategy: str = "alise",
           n_requests: int = 12, max_slots: int = 4, seed: int = 0,
           predictor_kind: str = "oracle", quantize: bool = True,
           kv_backend: str = "dense", prefill_chunk: Optional[int] = None,
           iter_token_budget=None, prefix_cache: bool = False,
-          target_tpot: float = 0.05):
+          target_tpot: float = 0.05, trace_out: Optional[str] = None):
     cfg = get_smoke_config(arch)
     model = Model(cfg, attn_chunk=32, remat=False)
     params = model.init(jax.random.PRNGKey(seed))
@@ -60,6 +84,9 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
         kv_backend=kv_backend, prefill_chunk=prefill_chunk,
         iter_token_budget=None if autotune else iter_token_budget,
         prefix_cache=prefix_cache), predictor=predictor)
+    if trace_out:
+        from repro.serving.observability import EventBus
+        eng.attach_bus(EventBus(clock="wall"), "engine0")
     if autotune:
         # profile a small warmup batch, then pick the budget whose
         # predicted mixed-iteration time matches the target TPOT
@@ -78,6 +105,9 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
     lm = eng.fit_latency_model()
     print(f"[serve] fitted latency model: t0={lm.t0:.2e}s/tok "
           f"alpha={lm.alpha:.2e} beta={lm.beta:.2e}")
+    if trace_out:
+        from repro.serving.observability import analyze_quality
+        _export_trace(eng.bus, analyze_quality(eng.bus), trace_out)
     return reqs, eng
 
 
@@ -95,7 +125,9 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                   kv_backend: str = "dense",
                   prefill_chunk: Optional[int] = None,
                   iter_token_budget: Optional[int] = None,
-                  prefix_cache: bool = False):
+                  prefix_cache: bool = False,
+                  trace_out: Optional[str] = None,
+                  metrics_interval: Optional[float] = None):
     """Replay a synthetic Poisson trace through the online Gateway and print
     per-class TTFT/E2E percentiles (and SLO attainment when targets are
     set).  ``virtual_dt=None`` serves in wall clock; ``pump`` selects the
@@ -127,7 +159,10 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
 
     gw = Gateway([mk_engine() for _ in range(n_engines)],
                  GatewayConfig(virtual_dt=virtual_dt, router_policy=router,
-                               concurrent_pump=(pump == "concurrent")),
+                               concurrent_pump=(pump == "concurrent"),
+                               trace=bool(trace_out),
+                               metrics_interval_s=metrics_interval,
+                               heartbeat=metrics_interval is not None),
                  admission=AdmissionConfig(
                      max_queue_depth=max(8 * n_engines * max_slots, 32),
                      defer_high_watermark=4 * n_engines * max_slots,
@@ -140,6 +175,8 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
     print(f"[gateway] {strategy}/{router} x{n_engines} engines ({clock}), "
           f"{dataset}@{rate}/s: {done}/{len(reqs)} streams finished")
     print(gw.metrics.format())
+    if trace_out:
+        _export_trace(gw.bus, gw.quality(), trace_out)
     return streams, gw
 
 
@@ -199,6 +236,17 @@ def main():
     ap.add_argument("--ttft-target-batch", type=float, default=None)
     ap.add_argument("--ttft-miss-policy", default="shed",
                     choices=["shed", "defer", "observe"])
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record the full request lifecycle on the "
+                         "observability event bus and export a Chrome/"
+                         "Perfetto trace JSON to PATH after serving "
+                         "(plus PATH.prom gauge dump and scheduler-"
+                         "quality highlights)")
+    ap.add_argument("--metrics-interval", type=float, default=None,
+                    metavar="SECONDS",
+                    help="gateway mode: print a one-line metrics "
+                         "heartbeat every SECONDS (gauges are sampled "
+                         "at the same cadence when tracing)")
     args = ap.parse_args()
     budget = args.iter_token_budget
     if budget is not None and budget != "auto":
@@ -221,13 +269,18 @@ def main():
                       prefill_chunk=args.prefill_chunk,
                       iter_token_budget=(None if budget == "auto"
                                          else budget),
-                      prefix_cache=args.prefix_cache)
+                      prefix_cache=args.prefix_cache,
+                      trace_out=args.trace_out,
+                      metrics_interval=args.metrics_interval)
     else:
+        if args.metrics_interval is not None:
+            print("[serve] --metrics-interval is gateway-mode only "
+                  "(batch serving prints a final summary)")
         serve(args.arch, args.strategy, args.n_requests, args.max_slots,
               predictor_kind=args.predictor, kv_backend=args.kv_backend,
               prefill_chunk=args.prefill_chunk,
               iter_token_budget=budget, prefix_cache=args.prefix_cache,
-              target_tpot=args.target_tpot)
+              target_tpot=args.target_tpot, trace_out=args.trace_out)
 
 
 if __name__ == "__main__":

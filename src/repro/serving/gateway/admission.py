@@ -95,6 +95,10 @@ class AdmissionController:
         self.cfg = cfg or AdmissionConfig()
         self._deferring = False
         self.ttft_misses_predicted = 0     # gate decisions taken on TTFT
+        self.last_reason = "ok"            # why the last decide() gated:
+                                           # ok | ttft_miss | depth | backlog
+                                           # | defer_watermark
+                                           # | interactive_cap
 
     # ------------------------------------------------------- TTFT gating
     def _ttft_verdict(self, req: Request,
@@ -120,25 +124,37 @@ class AdmissionController:
         expected_ttft: the gateway's per-request TTFT estimate (None when
         TTFT admission is disabled)."""
         cfg = self.cfg
+        self.last_reason = "ok"
         if req.slo_class == SLOClass.INTERACTIVE:
             if (cfg.interactive_hard_cap is not None
                     and depth >= cfg.interactive_hard_cap):
+                self.last_reason = "interactive_cap"
                 return Verdict.SHED
             v = self._ttft_verdict(req, expected_ttft)
-            return v if v is not None else Verdict.ADMIT
-        if depth >= cfg.max_queue_depth or backlog_s >= cfg.max_backlog_s:
+            if v is not None:
+                self.last_reason = "ttft_miss"
+                return v
+            return Verdict.ADMIT
+        if depth >= cfg.max_queue_depth:
+            self.last_reason = "depth"
+            return Verdict.SHED
+        if backlog_s >= cfg.max_backlog_s:
+            self.last_reason = "backlog"
             return Verdict.SHED
         v = self._ttft_verdict(req, expected_ttft)
         if v is not None:
+            self.last_reason = "ttft_miss"
             return v
         if cfg.defer_high_watermark is not None:
             if self._deferring:
                 if depth < cfg.defer_low_watermark:
                     self._deferring = False
                 else:
+                    self.last_reason = "defer_watermark"
                     return Verdict.DEFER
             elif depth >= cfg.defer_high_watermark:
                 self._deferring = True
+                self.last_reason = "defer_watermark"
                 return Verdict.DEFER
         return Verdict.ADMIT
 

@@ -107,7 +107,11 @@ class GatewayMetrics:
     def token_throughput(self) -> float:
         return sum(m.tokens for m in self.per_class.values()) / self.duration
 
-    def summary(self) -> Dict[str, object]:
+    def summary(self, bus=None) -> Dict[str, object]:
+        """Per-class metrics; with an observability ``bus`` attached the
+        summary gains ``quality`` (scheduler-quality telemetry derived
+        from the event stream) and ``gauges`` (the latest occupancy
+        snapshot per replica) blocks."""
         out: Dict[str, object] = {
             "duration_s": self.duration,
             "goodput_rps": self.goodput(),
@@ -115,7 +119,33 @@ class GatewayMetrics:
         }
         for c, m in self.per_class.items():
             out[c.value] = m.summary()
+        if bus is not None:
+            from repro.serving.observability import analyze_quality
+            out["quality"] = analyze_quality(bus)
+            latest: Dict[str, Dict[str, float]] = {}
+            for ev in bus.snapshot():
+                if ev.kind == "gauge":
+                    latest.setdefault(ev.replica, {}).update(
+                        {k: v for k, v in ev.data.items()
+                         if isinstance(v, (int, float))})
+            out["gauges"] = latest
         return out
+
+    def format_line(self, now: Optional[float] = None) -> str:
+        """One-line heartbeat: aggregate progress + per-class TTFT p50
+        so far (for ``--metrics-interval`` periodic printing).  ``now``
+        supplies the in-flight duration (end_t is not yet set mid-serve)."""
+        dur = max((self.end_t if now is None else now) - self.start_t, 1e-9)
+        toks = sum(m.tokens for m in self.per_class.values())
+        parts = [f"done={self.completed()}", f"{toks / dur:.1f} tok/s"]
+        for c, m in self.per_class.items():
+            if m.ttft:
+                parts.append(f"{c.value[:5]}: n={len(m.ttft)} "
+                             f"ttft_p50={percentile(m.ttft, 50):.3f}s")
+            extra = m.shed + m.timed_out
+            if extra:
+                parts.append(f"{c.value[:5]}_lost={extra}")
+        return "  ".join(parts)
 
     def format(self) -> str:
         lines = [f"duration {self.duration:.2f}s  "

@@ -49,6 +49,7 @@ class GatewayRouter:
             d.engine.stream_events = True
         self.owner: Dict[int, EngineDriver] = {}   # req_id -> driver
         self._rr = 0
+        self.bus = None       # observability EventBus (set by the gateway)
         # set by the gateway while the concurrent pump runs: dispatch goes
         # through the engine's submit mailbox instead of blocking on its
         # step lock behind an in-flight iteration
@@ -102,6 +103,9 @@ class GatewayRouter:
         else:
             d.engine.submit(req, now)
         self.owner[req.req_id] = d
+        if self.bus is not None:
+            self.bus.emit("dispatch", t=now, req_id=req.req_id,
+                          replica=d.name, policy=self.policy)
         return d
 
     # --------------------------------------------------------------- state

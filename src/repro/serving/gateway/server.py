@@ -103,6 +103,15 @@ class GatewayConfig:
     concurrent_pump: bool = True        # wall clock: per-engine pump tasks
                                         # (False = legacy lockstep loop)
     max_wall_s: float = 600.0           # hard wall-time bound on replay/drain
+    trace: bool = False                 # attach an observability EventBus
+                                        # through every layer (off = the
+                                        # emit sites cost one branch each)
+    trace_capacity: int = 1 << 16       # bounded event ring size
+    metrics_interval_s: Optional[float] = None   # periodic gauge-snapshot /
+                                        # heartbeat cadence (gateway clock
+                                        # domain; None = no periodic work)
+    heartbeat: bool = False             # print a one-line metrics heartbeat
+                                        # every metrics_interval_s
 
 
 class Gateway:
@@ -125,6 +134,20 @@ class Gateway:
         self.deferred: Deque[Request] = deque()
         self._vclock = 0.0
         self._wall0: Optional[float] = None
+        # observability: one bus spans the gateway and every replica, in
+        # the gateway's clock domain (virtual replay traces and wall serves
+        # export identically)
+        self.bus = None
+        self._last_sample: Optional[float] = None
+        if self.cfg.trace:
+            from repro.serving.observability import EventBus
+            self.bus = EventBus(
+                capacity=self.cfg.trace_capacity,
+                clock="virtual" if self.cfg.virtual_dt is not None
+                else "wall")
+            self.router.bus = self.bus
+            for d in self.router.drivers:
+                d.engine.attach_bus(self.bus, d.name)
         # concurrent-pump state (wall-clock mode only); each pump owns a
         # single-worker executor so replicas never contend for step threads
         # (and elastic add_engine scales the thread count with it)
@@ -182,13 +205,39 @@ class Gateway:
         stream = RequestStream(req)
         self.streams[req.req_id] = stream
         depth = self.router.total_depth() + len(self.deferred)
-        verdict = self.admission.decide(req, depth,
-                                        self.router.total_backlog(),
-                                        expected_ttft=self.expected_ttft(req))
+        backlog = self.router.total_backlog()
+        # TTFT-gate terms computed once: decide() gates on wait+intrinsic,
+        # and the admission event records the inputs the verdict saw
+        exp = wait = intrinsic = None
+        if self.admission.cfg.ttft_target(req.slo_class) is not None:
+            terms = self._ttft_terms(req)
+            if terms is not None:
+                wait, intrinsic = terms
+                exp = wait + intrinsic
+        if self.bus is not None:
+            # the *trace* arrival, not the pump tick that admitted it —
+            # replay quantizes submission to virtual_dt, but TTFT (and the
+            # analyzer's queueing decomposition) is measured from the
+            # request's true arrival, matching GatewayMetrics
+            self.bus.emit("arrival", t=req.arrival_time, req_id=req.req_id,
+                          slo_class=req.slo_class.value,
+                          prompt_len=req.prompt_len)
+        verdict = self.admission.decide(req, depth, backlog,
+                                        expected_ttft=exp)
         stream.verdict = verdict
+        if self.bus is not None:
+            self.bus.emit("admission", t=t, req_id=req.req_id,
+                          verdict=verdict.value,
+                          reason=self.admission.last_reason,
+                          expected_ttft=exp, wait=wait,
+                          intrinsic=intrinsic, depth=depth,
+                          backlog_s=backlog)
         if verdict == Verdict.SHED:
             req.state = RequestState.FAILED
             self.metrics.of(req).shed += 1
+            if self.bus is not None:
+                self.bus.emit("shed", t=t, req_id=req.req_id,
+                              reason=self.admission.last_reason)
             stream._push(EngineEvent("shed", req.req_id, t,
                                      reason="admission"))
             stream._close()
@@ -238,6 +287,8 @@ class Gateway:
 
     def add_engine(self, engine: ServingEngine) -> None:
         d = self.router.add_engine(engine)
+        if self.bus is not None:
+            engine.attach_bus(self.bus, d.name)
         # a live concurrent pump grows a task (and step thread) for the
         # new replica
         if self._pump_tasks and not self._pump_stop:
@@ -258,6 +309,9 @@ class Gateway:
             stream.emitted += 1
             if stream.emitted == 1:
                 self.metrics.of(req).record_first_token(req, ev.t)
+                if self.bus is not None:
+                    self.bus.emit("first_token", t=ev.t, req_id=ev.req_id,
+                                  ttft=ev.t - req.arrival_time)
             stream._push(ev)
         elif ev.kind == "finish":
             self.metrics.of(req).record_finish(req, ev.t)
@@ -281,6 +335,10 @@ class Gateway:
                 if stream.emitted == 0:
                     # no first token ever: an SLO miss, not a served request
                     self.metrics.of(stream.request).timed_out += 1
+                if self.bus is not None:
+                    self.bus.emit("timeout", t=t,
+                                  req_id=stream.request.req_id,
+                                  reason=reason)
                 stream._push(EngineEvent("timeout", stream.request.req_id, t,
                                          reason=reason))
                 stream._close()
@@ -337,13 +395,68 @@ class Gateway:
                         break
                     continue
             self.deferred.remove(req)
+            if self.bus is not None:
+                self.bus.emit("defer_release", t=t, req_id=req.req_id,
+                              waited=max(t - req.arrival_time, 0.0))
             self.router.dispatch(req, t)
+
+    # -------------------------------------------------- periodic telemetry
+    def _maybe_sample(self, t: float) -> None:
+        """Periodic gauge snapshots (into the bus) and the optional
+        one-line metrics heartbeat, every ``metrics_interval_s`` of the
+        gateway clock.  Telemetry must never kill a serve: replica gauge
+        reads race executor-thread steps in wall mode, so failures are
+        swallowed (the next interval retries)."""
+        interval = self.cfg.metrics_interval_s
+        if interval is None:
+            return
+        if self._last_sample is not None and t - self._last_sample < interval:
+            return
+        self._last_sample = t
+        if self.bus is not None:
+            for d in self.router.alive_drivers():
+                try:
+                    self.bus.gauge(d.engine.gauges(), replica=d.name, t=t)
+                except Exception:
+                    pass
+        if self.cfg.heartbeat:
+            print(f"[gateway t={t:8.2f}s] "
+                  f"{self.metrics.format_line(now=t)}", flush=True)
+
+    def write_trace(self, path: str) -> dict:
+        """Export the bus as Chrome-trace JSON (Perfetto-loadable)."""
+        if self.bus is None:
+            raise RuntimeError("tracing is off: set GatewayConfig.trace")
+        from repro.serving.observability import write_chrome_trace
+        return write_chrome_trace(self.bus, path)
+
+    def quality(self) -> dict:
+        """Scheduler-quality telemetry derived from the event stream."""
+        if self.bus is None:
+            raise RuntimeError("tracing is off: set GatewayConfig.trace")
+        from repro.serving.observability import analyze_quality
+        return analyze_quality(self.bus)
+
+    def prometheus(self) -> str:
+        """Prometheus-style text rendering of the latest gauge snapshots."""
+        if self.bus is None:
+            raise RuntimeError("tracing is off: set GatewayConfig.trace")
+        from repro.serving.observability import render_prometheus
+        return render_prometheus(self.bus)
+
+    def summary(self) -> Dict[str, object]:
+        """Per-class serving metrics, enriched with scheduler-quality and
+        gauge blocks when tracing is on."""
+        return self.metrics.summary(bus=self.bus)
 
     def pump_once(self) -> bool:
         """One lockstep barrier iteration over all live engines; returns
         whether any engine made progress.  This is the virtual-clock pump
         (deterministic round order) and the legacy wall-clock path."""
         t = self.now()
+        if self.bus is not None:
+            self.bus.mark(t)
+        self._maybe_sample(t)
         self._release_deferred(t)
         ran = False
         for d in self.router.alive_drivers():
@@ -453,6 +566,7 @@ class Gateway:
                     self._abort_open_streams()
                     break
                 t = self.now()
+                self._maybe_sample(t)
                 while i < len(pending) and pending[i].arrival_time <= t:
                     streams.append(self.submit(pending[i], now=t))
                     i += 1

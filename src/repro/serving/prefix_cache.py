@@ -236,6 +236,8 @@ class PagedPrefixCache:
         self.pool = pool
         self.index = RadixPageIndex(page_size)
         self.stats = PrefixCacheStats()
+        self.bus = None                # observability EventBus (None = off)
+        self.replica = ""
 
     # ------------------------------------------------------------- probe
     def probe(self, tokens) -> int:
@@ -278,6 +280,9 @@ class PagedPrefixCache:
                 hit += m
                 self.stats.partial_hits += 1
                 self.stats.cow_pages += 1
+                if self.bus is not None:
+                    self.bus.emit("prefix_cow", req_id=rid,
+                                  replica=self.replica, tokens=m)
         if hit == 0:
             self.stats.misses += 1
             return 0
@@ -320,6 +325,9 @@ class PagedPrefixCache:
         for p in freed:
             self.pool.decref(p)
         self.stats.evicted_pages += len(freed)
+        if freed and self.bus is not None:
+            self.bus.emit("prefix_evict", replica=self.replica,
+                          pages=len(freed))
         return len(freed)
 
     def drop_all(self) -> int:
@@ -363,6 +371,8 @@ class DensePrefixCache:
         self.free_pages: List[int] = list(range(self.capacity))
         self.index = RadixPageIndex(page_size)
         self.stats = PrefixCacheStats()
+        self.bus = None                # observability EventBus (None = off)
+        self.replica = ""
         # one jitted, store-donated dispatch per publish: gather every new
         # page out of the stripe (vmapped dynamic slice) and scatter them
         # into the store in one go — not one full-store copy per page
@@ -463,6 +473,9 @@ class DensePrefixCache:
         freed = self.index.evict_lru(n, can_evict=lambda p: True)
         self.free_pages.extend(freed)
         self.stats.evicted_pages += len(freed)
+        if freed and self.bus is not None:
+            self.bus.emit("prefix_evict", replica=self.replica,
+                          pages=len(freed))
         return len(freed)
 
     def reclaim(self, n_pages: int) -> int:
@@ -495,6 +508,8 @@ class SimPrefixIndex:
         self.capacity = max(capacity_pages, 1)
         self._ids = itertools.count()
         self.stats = PrefixCacheStats()
+        self.bus = None                # observability EventBus (None = off)
+        self.replica = ""
 
     def probe(self, tokens) -> int:
         if not tokens:
@@ -508,6 +523,9 @@ class SimPrefixIndex:
         if over > 0:
             evicted = self.index.evict_lru(over, can_evict=lambda p: True)
             self.stats.evicted_pages += len(evicted)
+            if evicted and self.bus is not None:
+                self.bus.emit("prefix_evict", replica=self.replica,
+                              pages=len(evicted))
         self.stats.inserted_pages += len(created)
         return len(created)
 

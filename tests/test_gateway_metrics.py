@@ -1,0 +1,141 @@
+"""GatewayMetrics / ClassMetrics edge cases: SLO attainment with sheds and
+pre-first-token timeouts, empty-class NaN summaries, deferred-decision
+counting, and the heartbeat line."""
+import math
+
+from repro.core.request import Request, SLOClass
+from repro.serving.gateway.metrics import ClassMetrics, GatewayMetrics
+from repro.serving.observability import EventBus
+
+
+def mk_req(arrival=0.0, slo=SLOClass.INTERACTIVE):
+    return Request(prompt_len=4, arrival_time=arrival, true_out_len=4,
+                   prompt_tokens=[2, 3, 4, 5], slo_class=slo)
+
+
+class TestSLOAttainment:
+    def test_sheds_count_as_misses(self):
+        """Shedding must not game the SLO: the denominator covers every
+        arrival, so 2 met / (2 served + 2 shed) = 0.5."""
+        m = ClassMetrics(ttft_target=1.0)
+        for ttft in (0.5, 0.9):
+            r = mk_req()
+            m.record_first_token(r, r.arrival_time + ttft)
+        m.shed = 2
+        assert m.slo_attainment() == 0.5
+
+    def test_timeouts_count_as_misses(self):
+        m = ClassMetrics(ttft_target=1.0)
+        r = mk_req()
+        m.record_first_token(r, r.arrival_time + 0.5)     # 1 met
+        m.timed_out = 3                                   # aborted pre-token
+        assert m.slo_attainment() == 0.25
+
+    def test_sheds_and_timeouts_combine(self):
+        m = ClassMetrics(ttft_target=1.0)
+        for ttft in (0.2, 0.4, 2.0):                      # 2 met, 1 late
+            r = mk_req()
+            m.record_first_token(r, r.arrival_time + ttft)
+        m.shed = 1
+        m.timed_out = 1
+        assert m.slo_attainment() == 2 / 5
+
+    def test_no_target_is_nan(self):
+        m = ClassMetrics()
+        r = mk_req()
+        m.record_first_token(r, 0.1)
+        assert math.isnan(m.slo_attainment())
+
+    def test_target_but_no_arrivals_is_nan(self):
+        assert math.isnan(ClassMetrics(ttft_target=1.0).slo_attainment())
+
+    def test_all_lost_is_zero(self):
+        """Every arrival shed: attainment is a hard 0, not NaN."""
+        m = ClassMetrics(ttft_target=1.0)
+        m.shed = 4
+        assert m.slo_attainment() == 0.0
+
+
+class TestEmptyClassSummaries:
+    def test_empty_class_is_nan_not_crash(self):
+        s = ClassMetrics().summary()
+        assert s["completed"] == 0
+        for key in ("ttft_p50", "ttft_p99", "tpot_p50", "e2e_p50",
+                    "ttft_target", "slo_attainment"):
+            assert math.isnan(s[key]), key
+
+    def test_gateway_summary_with_empty_classes(self):
+        gm = GatewayMetrics()
+        gm.start_t, gm.end_t = 0.0, 2.0
+        out = gm.summary()
+        assert out["goodput_rps"] == 0.0
+        for c in SLOClass:
+            assert math.isnan(out[c.value]["ttft_p50"])
+
+    def test_format_survives_empty_classes(self):
+        gm = GatewayMetrics()
+        gm.start_t, gm.end_t = 0.0, 1.0
+        assert "duration" in gm.format()
+        assert gm.format_line() == "done=0  0.0 tok/s"
+
+
+class TestDeferredCounting:
+    def test_deferred_counts_decisions_not_requests(self):
+        """One request deferred twice = 2 defer decisions; completion is
+        still recorded once, so deferred can exceed completed."""
+        gm = GatewayMetrics()
+        r = mk_req(slo=SLOClass.BATCH)
+        gm.of(r).deferred += 1
+        gm.of(r).deferred += 1            # re-deferred on a later pump
+        r.generated = 4
+        gm.of(r).record_finish(r, 1.0)
+        s = gm.per_class[SLOClass.BATCH].summary()
+        assert s["deferred"] == 2
+        assert s["completed"] == 1
+
+    def test_deferral_does_not_touch_attainment(self):
+        m = ClassMetrics(ttft_target=1.0)
+        m.deferred = 5
+        r = mk_req()
+        m.record_first_token(r, r.arrival_time + 0.5)
+        assert m.slo_attainment() == 1.0  # defers are not misses per se
+
+
+class TestHeartbeatLine:
+    def test_in_flight_duration(self):
+        """Mid-serve, end_t is unset: format_line(now=...) must use the
+        caller's clock, not the (zero) end_t."""
+        gm = GatewayMetrics()
+        gm.start_t = 10.0
+        r = mk_req()
+        r.generated = 20
+        gm.of(r).record_first_token(r, 10.5)
+        gm.of(r).record_finish(r, 12.0)
+        line = gm.format_line(now=14.0)   # 4s in-flight -> 5 tok/s
+        assert "done=1" in line and "5.0 tok/s" in line
+        assert "inter" in line and "ttft_p50" in line
+
+    def test_lost_counter(self):
+        gm = GatewayMetrics()
+        gm.start_t = 0.0
+        gm.per_class[SLOClass.BATCH].shed = 2
+        gm.per_class[SLOClass.BATCH].timed_out = 1
+        assert "batch_lost=3" in gm.format_line(now=1.0)
+
+
+class TestSummaryWithBus:
+    def test_quality_and_gauges_blocks(self):
+        gm = GatewayMetrics()
+        gm.start_t, gm.end_t = 0.0, 1.0
+        bus = EventBus(clock="virtual")
+        bus.emit("arrival", t=0.0, req_id=0)
+        bus.emit("first_token", t=0.2, req_id=0)
+        bus.emit("finish", t=0.5, req_id=0, generated=4, predicted=4)
+        bus.gauge({"hbm_utilization": 0.5}, replica="engine0", t=0.9)
+        out = gm.summary(bus=bus)
+        assert out["quality"]["queueing"]["ttft"]["n"] == 1
+        assert out["gauges"]["engine0"]["hbm_utilization"] == 0.5
+
+    def test_no_bus_no_blocks(self):
+        out = GatewayMetrics().summary()
+        assert "quality" not in out and "gauges" not in out

@@ -1,0 +1,345 @@
+"""Observability layer: event bus semantics, Chrome-trace export schema,
+scheduler-quality telemetry, Prometheus rendering — and the two invariants
+that make tracing safe to ship: greedy decode is bit-identical traced vs
+untraced, and a disabled bus leaves no events (and no state) behind.
+"""
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.engine import EngineConfig, ServingEngine
+from repro.core.predictor import OraclePredictor
+from repro.core.request import Request, SLOClass, reset_request_counter
+from repro.core.simulator import run_sim
+from repro.core.trace import TraceConfig, clamp_requests, generate_trace
+from repro.models.model import Model
+from repro.serving.gateway import AdmissionConfig, Gateway, GatewayConfig
+from repro.serving.observability import (EventBus, TraceEvent,
+                                         analyze_quality, render_prometheus,
+                                         to_chrome_trace,
+                                         validate_chrome_trace,
+                                         write_chrome_trace)
+from repro.serving.observability.bus import KINDS
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = get_smoke_config("granite-3-8b")
+    model = Model(cfg, attn_chunk=32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def mk_engine(model, params, max_slots=2, **kw):
+    return ServingEngine(model, params, EngineConfig(
+        max_slots=max_slots, max_seq_len=64, max_new_tokens=24,
+        strategy="alise", quantize_offload=False, **kw),
+        predictor=OraclePredictor())
+
+
+def mk_requests(cfg, n=8, seed=0):
+    reset_request_counter()
+    rng = np.random.default_rng(seed)
+    return [Request(prompt_len=8, arrival_time=round(i * 0.05, 3),
+                    true_out_len=int(rng.choice([3, 8, 16])),
+                    prompt_tokens=rng.integers(
+                        2, cfg.vocab_size, 8).tolist())
+            for i in range(n)]
+
+
+def poisson_requests(cfg, n=16, rate=16.0, seed=0):
+    reset_request_counter()
+    trace = generate_trace(TraceConfig(dataset="alpaca", rate=rate,
+                                       duration=1e9, max_requests=n,
+                                       seed=seed))
+    reqs = clamp_requests(trace.requests, vocab=cfg.vocab_size,
+                          max_prompt=12, max_new=16)
+    for i, r in enumerate(reqs):
+        r.slo_class = (SLOClass.INTERACTIVE if i % 4 == 0
+                       else SLOClass.BATCH)
+        r.true_out_len = 3 if i % 4 == 0 else 16
+    return reqs
+
+
+# ---------------------------------------------------------------- bus core
+class TestEventBus:
+    def test_ring_is_bounded(self):
+        bus = EventBus(capacity=8)
+        for i in range(20):
+            bus.emit("arrival", t=float(i), req_id=i)
+        assert len(bus) == 8
+        assert bus.n_emitted == 20
+        assert bus.n_dropped == 12
+        # oldest dropped first: the snapshot holds the last 8
+        assert [e.req_id for e in bus.snapshot()] == list(range(12, 20))
+
+    def test_virtual_clock_mark(self):
+        bus = EventBus(clock="virtual")
+        assert bus.now() == 0.0
+        bus.mark(3.5)
+        bus.emit("arrival", req_id=1)           # stamps now() = 3.5
+        assert bus.snapshot()[-1].t == 3.5
+
+    def test_wall_clock_monotonic(self):
+        bus = EventBus(clock="wall")
+        t0 = bus.now()
+        bus.emit("arrival", req_id=0)
+        assert bus.snapshot()[-1].t >= t0
+
+    def test_gauge_and_clear(self):
+        bus = EventBus()
+        bus.gauge({"hbm_utilization": 0.5}, replica="engine0", t=1.0)
+        ev = bus.snapshot()[-1]
+        assert ev.kind == "gauge" and ev.replica == "engine0"
+        bus.clear()
+        assert len(bus) == 0
+
+    def test_unknown_kind_tolerated(self):
+        # the vocabulary is a whitelist for docs, not a gate: unknown
+        # kinds are recorded and export as instants
+        bus = EventBus()
+        bus.emit("custom_probe", t=0.0)
+        obj = to_chrome_trace(bus)
+        assert any(e["name"] == "custom_probe" and e["ph"] == "i"
+                   for e in obj["traceEvents"])
+
+
+# ---------------------------------------------------------- export (unit)
+def _synthetic_events():
+    return [
+        TraceEvent("arrival", t=0.0, req_id=0),
+        TraceEvent("admission", t=0.0, req_id=0,
+                   data={"verdict": "admit", "expected_ttft": 0.2}),
+        TraceEvent("dispatch", t=0.01, req_id=0, replica="engine0"),
+        TraceEvent("queue_join", t=0.01, req_id=0, replica="engine0",
+                   data={"remaining_est": 0.5, "predicted_len": 8}),
+        TraceEvent("prefill_chunk", t=0.02, dur=0.05, req_id=0,
+                   replica="engine0", data={"tokens": 8, "last": True}),
+        TraceEvent("first_token", t=0.07, req_id=0),
+        TraceEvent("decode_iter", t=0.07, dur=0.01, replica="engine0",
+                   data={"batch": 1}),
+        TraceEvent("gauge", t=0.1, replica="engine0",
+                   data={"hbm_utilization": 0.4, "queue_depth": 1}),
+        TraceEvent("finish", t=0.5, req_id=0, replica="engine0",
+                   data={"generated": 8, "predicted": 6, "arrival_t": 0.0,
+                         "first_token_t": 0.07}),
+    ]
+
+
+class TestChromeTraceExport:
+    def test_schema_valid_and_lane_mapping(self):
+        obj = to_chrome_trace(_synthetic_events())
+        assert validate_chrome_trace(obj) == []
+        evs = obj["traceEvents"]
+        pids = {e["pid"] for e in evs}
+        assert len(pids) >= 2                    # gateway lane + engine0
+        # spans carry microsecond durations
+        pf = next(e for e in evs if e["name"] == "prefill_chunk")
+        assert pf["ph"] == "X" and pf["dur"] == pytest.approx(0.05 * 1e6)
+        # gauges become counter events
+        assert any(e["ph"] == "C" for e in evs)
+        # synthesized per-request lifecycle span
+        assert any(e["ph"] == "X" and e["name"].startswith("req 0")
+                   for e in evs)
+        # lane naming metadata
+        names = [e for e in evs if e["ph"] == "M"]
+        assert any(e["args"]["name"] == "engine0" for e in names)
+
+    def test_validator_catches_garbage(self):
+        assert validate_chrome_trace({"nope": 1})
+        assert validate_chrome_trace({"traceEvents": []})
+        assert validate_chrome_trace(
+            {"traceEvents": [{"name": "x", "ph": "Z", "pid": 0, "tid": 0,
+                              "ts": 0}]})
+
+    def test_write_trace_roundtrip(self, tmp_path):
+        path = tmp_path / "trace.json"
+        write_chrome_trace(_synthetic_events(), str(path))
+        obj = json.loads(path.read_text())
+        assert validate_chrome_trace(obj) == []
+
+
+class TestQualityAnalyzer:
+    def test_engine_only_finish_fallbacks(self):
+        # finish events are self-contained: length/TTFT errors derive even
+        # with no gateway arrival/first_token events in the stream
+        q = analyze_quality([
+            TraceEvent("finish", t=0.5, req_id=0,
+                       data={"generated": 8, "predicted": 6,
+                             "arrival_t": 0.0, "first_token_t": 0.07}),
+        ])
+        assert q["estimate_error"]["len_signed_tok"]["n"] == 1
+        assert q["estimate_error"]["len_signed_tok"]["mean"] == 2.0
+        assert q["queueing"]["ttft"]["p50"] == pytest.approx(0.07)
+
+    def test_full_stream_decomposition(self):
+        q = analyze_quality(_synthetic_events())
+        assert q["n_requests_seen"] == 1
+        assert q["queueing"]["prefill_exec"]["mean"] == pytest.approx(0.05)
+        # EWT error: actual ttft 0.07 vs expected 0.2
+        assert q["estimate_error"]["ewt_signed_s"]["mean"] == \
+            pytest.approx(0.07 - 0.2)
+
+    def test_empty_stream(self):
+        q = analyze_quality([])
+        assert q["n_requests_seen"] == 0
+        assert q["queueing"]["ttft"]["n"] == 0
+
+
+def test_prometheus_rendering():
+    bus = EventBus()
+    bus.gauge({"hbm_utilization": 0.25, "queue_depth": 3},
+              replica="engine0", t=1.0)
+    bus.gauge({"hbm_utilization": 0.75}, replica="engine0", t=2.0)
+    bus.emit("arrival", t=0.0, req_id=0)
+    text = render_prometheus(bus)
+    # latest sample wins
+    assert 'alise_hbm_utilization{replica="engine0"} 0.75' in text
+    assert 'alise_queue_depth{replica="engine0"} 3.0' in text
+    assert 'alise_events_total{replica="gateway",kind="arrival"} 1' in text
+    assert "# TYPE alise_hbm_utilization gauge" in text
+
+
+# ------------------------------------------------------- engine lifecycle
+def test_engine_trace_bit_identity_and_lifecycle(model_and_params):
+    """Tracing must not alter behavior: greedy tokens bit-identical with
+    the bus attached, and the stream carries the full lifecycle."""
+    cfg, model, params = model_and_params
+    reqs = mk_requests(cfg, n=6)
+    ref_eng = mk_engine(model, params)
+    ref_eng.serve(reqs)
+    ref = [list(r.output_tokens) for r in reqs]
+
+    reqs2 = mk_requests(cfg, n=6)
+    eng = mk_engine(model, params)
+    bus = EventBus(clock="wall")
+    eng.attach_bus(bus, "engine0")
+    eng.serve(reqs2)
+    assert [list(r.output_tokens) for r in reqs2] == ref
+
+    kinds = {e.kind for e in bus.snapshot()}
+    assert {"queue_join", "prefill_chunk", "decode_iter",
+            "finish"} <= kinds
+    assert all(e.kind in KINDS for e in bus.snapshot())
+    # every request joined and finished
+    joined = {e.req_id for e in bus.snapshot() if e.kind == "queue_join"}
+    done = {e.req_id for e in bus.snapshot() if e.kind == "finish"}
+    assert joined == done == {r.req_id for r in reqs2}
+    # finish events are self-contained for the analyzer
+    q = analyze_quality(bus)
+    assert q["estimate_error"]["len_signed_tok"]["n"] == len(reqs2)
+    assert q["queueing"]["ttft"]["n"] == len(reqs2)
+
+
+def test_engine_without_bus_emits_nothing(model_and_params):
+    cfg, model, params = model_and_params
+    eng = mk_engine(model, params)
+    assert eng.bus is None and eng.sched.bus is None
+    eng.serve(mk_requests(cfg, n=2))     # no crash on any emit site
+
+
+def test_engine_profiling_rings_have_timestamps(model_and_params):
+    """iter_times rows are (t_mono, ctx_tokens, batch, dt) and
+    prefill_times rows are (t_mono, n_tokens, dt), timestamp ascending."""
+    cfg, model, params = model_and_params
+    eng = mk_engine(model, params)
+    eng.serve(mk_requests(cfg, n=3))
+    assert eng.iter_times and eng.prefill_times
+    assert all(len(row) == 4 for row in eng.iter_times)
+    assert all(len(row) == 3 for row in eng.prefill_times)
+    ts = [row[0] for row in eng.iter_times]
+    assert ts == sorted(ts) and ts[0] > 0
+    # the latency-model fit still consumes the rings
+    lm = eng.fit_latency_model()
+    assert lm.t0 > 0
+
+
+def test_engine_gauges(model_and_params):
+    cfg, model, params = model_and_params
+    eng = mk_engine(model, params)
+    eng.serve(mk_requests(cfg, n=2))
+    g = eng.gauges()
+    for key in ("hbm_used_bytes", "hbm_utilization", "queue_depth",
+                "live_requests", "backlog_s"):
+        assert key in g, key
+    assert g["queue_depth"] == 0                 # drained after serve
+
+
+# ------------------------------------------------------- gateway lifecycle
+def test_gateway_traced_replay_end_to_end(model_and_params, tmp_path):
+    """Acceptance: a traced virtual-clock replay exports a schema-valid
+    Perfetto trace with per-replica lanes and per-request spans, and the
+    quality analyzer sees non-trivial EWT-error/queueing distributions."""
+    cfg, model, params = model_and_params
+    reqs = poisson_requests(cfg, n=16)
+    gw = Gateway([mk_engine(model, params), mk_engine(model, params)],
+                 GatewayConfig(virtual_dt=0.05, router_policy="ewt",
+                               trace=True, metrics_interval_s=0.5),
+                 admission=AdmissionConfig(
+                     max_queue_depth=64, defer_high_watermark=6,
+                     ttft_target_interactive=2.0, ttft_target_batch=16.0))
+    streams = asyncio.run(gw.replay(reqs))
+    assert sum(1 for s in streams if s.finished) == len(reqs)
+
+    kinds = {e.kind for e in gw.bus.snapshot()}
+    assert {"arrival", "admission", "dispatch", "queue_join",
+            "prefill_chunk", "decode_iter", "first_token", "finish",
+            "gauge"} <= kinds
+
+    path = tmp_path / "gw.json"
+    obj = gw.write_trace(str(path))
+    assert validate_chrome_trace(obj) == []
+    evs = obj["traceEvents"]
+    assert len({e["pid"] for e in evs}) >= 3     # gateway + 2 replicas
+    rid_spans = [e for e in evs
+                 if e["ph"] == "X" and e["name"].startswith("req ")]
+    assert len(rid_spans) == len(reqs)
+
+    q = gw.quality()
+    assert q["estimate_error"]["ewt_signed_s"]["n"] > 0
+    assert q["queueing"]["ttft"]["n"] == len(reqs)
+    assert q["queueing"]["ttft"]["p50"] > 0
+    # gauges were sampled into the summary
+    summ = gw.summary()
+    assert "quality" in summ and "gauges" in summ
+    assert any("hbm_utilization" in g for g in summ["gauges"].values())
+    # prometheus rendering of the same stream
+    assert "alise_events_total" in gw.prometheus()
+
+
+def test_gateway_traced_vs_untraced_bit_identical(model_and_params):
+    cfg, model, params = model_and_params
+    reqs = poisson_requests(cfg, n=12)
+    gw0 = Gateway([mk_engine(model, params), mk_engine(model, params)],
+                  GatewayConfig(virtual_dt=0.05))
+    ref = [s.token_values for s in asyncio.run(gw0.replay(reqs))]
+
+    reqs2 = poisson_requests(cfg, n=12)
+    gw1 = Gateway([mk_engine(model, params), mk_engine(model, params)],
+                  GatewayConfig(virtual_dt=0.05, trace=True))
+    out = [s.token_values for s in asyncio.run(gw1.replay(reqs2))]
+    assert out == ref
+    assert len(gw1.bus) > 0 and gw0.bus is None
+
+
+# -------------------------------------------------------------- simulator
+def test_simulator_bus_same_schema(tmp_path):
+    """Virtual events flow through the same bus/export/analyzer as the
+    real engine's."""
+    bus = EventBus(clock="virtual")
+    r = run_sim(model="opt-13b", strategy="alise", dataset="sharegpt",
+                rate=1.0, duration=8.0, seed=0, bus=bus)
+    assert r.completed > 0
+    kinds = {e.kind for e in bus.snapshot()}
+    assert {"queue_join", "prefill_chunk", "decode_iter", "finish"} <= kinds
+    assert all(e.kind in KINDS for e in bus.snapshot())
+    obj = write_chrome_trace(bus, str(tmp_path / "sim.json"))
+    assert validate_chrome_trace(obj) == []
+    q = analyze_quality(bus)
+    assert q["estimate_error"]["len_signed_tok"]["n"] == r.completed
+    # sim timestamps are virtual-domain (bounded by the sim horizon)
+    assert max(e.t for e in bus.snapshot()) < 1e4
