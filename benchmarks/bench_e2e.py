@@ -126,6 +126,66 @@ def run_engine_decode(arch: str = "granite-3-8b") -> dict:
     return results
 
 
+def run_compile_gate(arch: str = "granite-3-8b") -> dict:
+    """CI compile-count gate: after explicit engine warmup every serve-time
+    dispatch must come from the pre-compiled shape menu.  Replays a
+    mixed-length trace (short + multi-chunk prompts, packing on) on both
+    KV backends and counts backend compiles via the jax monitoring hooks
+    — ANY serve-time compile fails the section (and CI with it)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core.engine import EngineConfig, ServingEngine
+    from repro.core.predictor import OraclePredictor
+    from repro.core.request import Request, reset_request_counter
+    from repro.models.model import Model
+    from repro.utils.compile_counter import CompileCounter
+
+    counter = CompileCounter()
+    if not counter.available:
+        emit("e2e/compile_count/unavailable", 0.0, "compiles=-1")
+        note("[compile_gate] jax monitoring hooks unavailable — skipped")
+        return {}
+
+    cfg = get_smoke_config(arch)
+    model = Model(cfg, attn_chunk=32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = (3, 8, 9, 15, 17, 23, 5, 12)
+
+    def mk_reqs():
+        reset_request_counter()
+        rng = np.random.default_rng(3)
+        return [Request(prompt_len=p, arrival_time=0.0, true_out_len=6,
+                        prompt_tokens=rng.integers(
+                            2, cfg.vocab_size, p).tolist())
+                for p in prompts]
+
+    results = {}
+    for bname, bkw in (("dense", dict(quantize_offload=True)),
+                       ("paged", dict(kv_backend="paged", page_size=8,
+                                      quantize_offload=False))):
+        t0 = time.perf_counter()
+        eng = ServingEngine(model, params, EngineConfig(
+            max_slots=4, max_seq_len=64, max_new_tokens=8,
+            strategy="alise", prefill_chunk=16, iter_token_budget=48,
+            prefill_pack=True, warmup_compile=True, **bkw),
+            predictor=OraclePredictor())
+        warm_s = time.perf_counter() - t0
+        counter.reset()
+        eng.serve(mk_reqs())
+        n = counter.count
+        results[bname] = n
+        emit(f"e2e/compile_count/{bname}", warm_s * 1e6,
+             f"compiles={n};warmup_s={warm_s:.2f}")
+        note(f"[compile_gate] {bname}: {n} serve-time compiles after "
+             f"warmup ({warm_s:.1f}s warmup)")
+        assert n == 0, (
+            f"{bname}: {n} serve-time recompiles after warmup — a novel "
+            f"shape leaked past the bucket menu: {counter.events}")
+    return results
+
+
 def run_prefill_interleave_sim(model: str = "opt-13b") -> dict:
     """Simulator twin of bench_hol's prefill_interleave: ALISE on the
     long-prompt-heavy ShareGPT mix, monolithic vs chunked IterationPlans.
@@ -192,6 +252,7 @@ def run(model: str = "opt-13b") -> dict:
              f"advantage = {sp:.2f}x (paper: up to "
              f"{'1.8x' if dataset == 'alpaca' else '2.1x'})")
     results["engine_decode"] = run_engine_decode()
+    results["compile_gate"] = run_compile_gate()
     results["prefill_interleave"] = run_prefill_interleave_sim(model)
     return results
 

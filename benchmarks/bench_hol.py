@@ -269,6 +269,82 @@ def run_shared_prefix(arch: str = "granite-3-8b") -> dict:
     return results
 
 
+def run_packed_prefill(arch: str = "granite-3-8b") -> dict:
+    """Bucketed+packed prefill vs plain chunked on a burst of short
+    prompts (the high-arrival-rate interactive regime): several requests'
+    chunks ride one pre-compiled bucket dispatch, so the tail of the burst
+    reaches its first token sooner.  Reports TTFT p50 / p99 and decode
+    tok/s; asserts greedy bit-identity packed-vs-plain."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core.engine import EngineConfig, ServingEngine
+    from repro.core.predictor import OraclePredictor
+    from repro.core.request import Request, reset_request_counter
+    from repro.models.model import Model
+
+    cfg = get_smoke_config(arch)
+    model = Model(cfg, attn_chunk=32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    # deliberately NOT pick()-scaled: the packing win lives in the
+    # budget-constrained queueing regime (a real burst), and smoke-sized
+    # bursts drain in one iteration where TTFT p50 is sub-ms noise
+    n_reqs = 16
+    out_len = 16
+    chunk = 16
+    budget = 48
+
+    def mk_reqs():
+        reset_request_counter()
+        rng = np.random.default_rng(7)
+        lens = rng.integers(4, 15, n_reqs)
+        return [Request(prompt_len=int(p), arrival_time=0.0,
+                        true_out_len=out_len,
+                        prompt_tokens=rng.integers(
+                            2, cfg.vocab_size, int(p)).tolist())
+                for p in lens]
+
+    modes = {"plain": dict(),
+             "packed": dict(prefill_pack=True, warmup_compile=True)}
+    results: dict = {}
+    tokens_of: dict = {}
+    for mode, mkw in modes.items():
+        eng = ServingEngine(model, params, EngineConfig(
+            max_slots=8, max_seq_len=64, max_new_tokens=out_len,
+            strategy="alise", quantize_offload=False, prefill_chunk=chunk,
+            iter_token_budget=budget, **mkw), predictor=OraclePredictor())
+        eng.serve(mk_reqs())                     # warm the jit caches
+        reqs = mk_reqs()
+        t0 = time.perf_counter()
+        eng.serve(reqs)
+        wall = time.perf_counter() - t0
+        ttfts = np.array([r.first_token_time for r in reqs
+                          if r.first_token_time is not None])
+        toks = sum(r.generated for r in reqs)
+        tok_s = toks / max(wall, 1e-9)
+        results[mode] = dict(ttft_p50=float(np.percentile(ttfts, 50)),
+                             ttft_p99=float(np.percentile(ttfts, 99)),
+                             tok_s=tok_s)
+        tokens_of[mode] = {r.req_id: list(r.output_tokens) for r in reqs}
+        emit(f"hol/packed_prefill/{mode}",
+             results[mode]["ttft_p50"] * 1e6,
+             f"ttft_p50_ms={results[mode]['ttft_p50']*1e3:.2f};"
+             f"ttft_p99_ms={results[mode]['ttft_p99']*1e3:.2f};"
+             f"tok_per_s={tok_s:.1f}")
+    assert tokens_of["packed"] == tokens_of["plain"], \
+        "packed prefill changed greedy outputs"
+    ratio = (results["plain"]["ttft_p50"]
+             / max(results["packed"]["ttft_p50"], 1e-9))
+    emit("hol/packed_prefill/ttft_p50_improvement", 0.0, f"{ratio:.2f}x")
+    note(f"[packed_prefill] burst of {n_reqs} short prompts: TTFT p50 "
+         f"{results['plain']['ttft_p50']*1e3:.2f}ms plain -> "
+         f"{results['packed']['ttft_p50']*1e3:.2f}ms packed "
+         f"({ratio:.2f}x); tok/s {results['plain']['tok_s']:.1f} -> "
+         f"{results['packed']['tok_s']:.1f}")
+    return results
+
+
 def run(model: str = "opt-13b") -> dict:
     out = {}
     duration = pick(60.0, 6.0)
@@ -288,6 +364,7 @@ def run(model: str = "opt-13b") -> dict:
              f"({fcfs.mean_latency/max(alise.mean_latency,1e-9):.2f}x)")
     out["prefill_interleave"] = run_prefill_interleave()
     out["shared_prefix"] = run_shared_prefix()
+    out["packed_prefill"] = run_packed_prefill()
     return out
 
 

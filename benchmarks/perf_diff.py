@@ -1,0 +1,111 @@
+"""Perf-trajectory diff — compare a ``BENCH_<pr>.json`` artifact against a
+committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_diff \
+        --current runs/BENCH_7.json \
+        --baseline benchmarks/baseline/BENCH_baseline.json
+
+Renders a markdown ratio table over the tracked headline metrics
+(``tok_per_s`` — higher is better; ``ttft*`` — lower is better) and flags
+any metric that regressed by more than ``--threshold`` (default 25%) with
+a WARN row.  The table is appended to ``$GITHUB_STEP_SUMMARY`` when that
+variable is set (the CI job summary), and always printed to stdout.
+
+Exit code is 0 even with WARN rows — smoke-mode timings on a loaded CI
+box are noisy, so the table is a trajectory signal, not a hard gate —
+unless ``--strict`` is passed (then any WARN fails the step).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+#: metric keys we track, with their improvement direction
+TRACKED = {"tok_per_s": "higher", "ttft_p50_ms": "lower",
+           "ttft_p99_ms": "lower", "ttft_hit_p50_ms": "lower",
+           "ttft_cold_p50_ms": "lower", "ttft_long_ms": "lower",
+           "tpot_p99_ms": "lower"}
+
+
+def load_metrics(path: str) -> dict:
+    """Flatten an artifact's ``metrics`` section to {(row, key): value}
+    over the tracked keys."""
+    doc = json.loads(Path(path).read_text())
+    flat = {}
+    for name, kv in doc.get("metrics", {}).items():
+        if not isinstance(kv, dict):
+            continue
+        for key, val in kv.items():
+            if key in TRACKED and isinstance(val, (int, float)):
+                flat[(name, key)] = float(val)
+    return flat, doc.get("pr", "?")
+
+
+def diff_table(base: dict, cur: dict, threshold: float) -> tuple:
+    """Markdown rows + the list of WARN'ed metric names."""
+    rows, warns = [], []
+    for (name, key) in sorted(set(base) & set(cur)):
+        b, c = base[(name, key)], cur[(name, key)]
+        if b <= 0:
+            continue
+        ratio = c / b
+        better_when = TRACKED[key]
+        regressed = (ratio < 1 - threshold if better_when == "higher"
+                     else ratio > 1 + threshold)
+        status = "WARN" if regressed else "ok"
+        if regressed:
+            warns.append(f"{name}:{key}")
+        rows.append(f"| `{name}` | {key} | {b:.2f} | {c:.2f} "
+                    f"| {ratio:.2f}x | {status} |")
+    gone = sorted(set(base) - set(cur))
+    for (name, key) in gone:
+        rows.append(f"| `{name}` | {key} | {base[(name, key)]:.2f} | — "
+                    f"| — | missing |")
+    return rows, warns
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", required=True,
+                    help="this PR's BENCH_<pr>.json artifact")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baseline/BENCH_baseline.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="fractional regression that triggers WARN")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any tracked metric WARNs")
+    args = ap.parse_args()
+
+    if not Path(args.baseline).exists():
+        print(f"[perf_diff] no baseline at {args.baseline} — nothing to "
+              f"diff (commit one to start tracking)")
+        return 0
+    base, base_pr = load_metrics(args.baseline)
+    cur, cur_pr = load_metrics(args.current)
+    rows, warns = diff_table(base, cur, args.threshold)
+
+    lines = [f"## Perf trajectory: PR {cur_pr} vs baseline ({base_pr})",
+             "", "| row | metric | baseline | current | ratio | status |",
+             "|---|---|---|---|---|---|", *rows, ""]
+    if warns:
+        lines.append(f"**{len(warns)} metric(s) regressed >"
+                     f"{args.threshold:.0%}:** " + ", ".join(warns))
+        lines.append("")
+    if not rows:
+        lines.append("_no overlapping tracked metrics — baseline stale?_")
+    report = "\n".join(lines)
+    print(report)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(report + "\n")
+    if warns and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,9 +32,11 @@ from benchmarks import common
 from benchmarks.common import note
 
 # rows whose ``derived`` tok_per_s lands in the artifact's headline metrics
-PERF_METRIC_PREFIXES = ("e2e/engine_decode/", "gateway/wall/",
+PERF_METRIC_PREFIXES = ("e2e/engine_decode/", "e2e/compile_count/",
+                        "gateway/wall/",
                         "gateway/trace/", "gateway/quality/",
-                        "hol/prefill_interleave/", "hol/shared_prefix/")
+                        "hol/prefill_interleave/", "hol/shared_prefix/",
+                        "hol/packed_prefill/")
 
 
 def _perf_metrics() -> dict:
@@ -47,26 +49,29 @@ def _perf_metrics() -> dict:
         if derived.startswith("WARN"):
             metrics[name] = {"flag": derived}
             continue
-        m = re.search(r"tok_per_s=([0-9.]+)", derived)
-        if m:
-            metrics[name] = {"tok_per_s": float(m.group(1))}
-            r = re.search(r"ratio=(-?[0-9.]+)", derived)
-            if r:
-                metrics[name]["ratio"] = float(r.group(1))
+        # keep EVERY numeric key=value pair (tok_per_s AND the ttft/tpot
+        # milli-second metrics ride the same row — the perf diff tracks
+        # both), falling back to bare "N.NNx" speedup rows
+        kv = {k: float(v) for k, v in re.findall(
+            r"([A-Za-z_][A-Za-z_0-9]*)=(-?[0-9.]+(?:e-?[0-9]+)?)(?:;|$)",
+            derived)}
+        if kv:
+            metrics[name] = kv
         elif re.fullmatch(r"-?[0-9.]+x", derived):
             metrics[name] = {"speedup": float(derived.rstrip("x"))}
-        else:
-            kv = {k: float(v) for k, v in re.findall(
-                r"([A-Za-z_][A-Za-z_0-9]*)=(-?[0-9.]+(?:e-?[0-9]+)?)(?:;|$)",
-                derived)}
-            if kv:
-                metrics[name] = kv
     return metrics
 
 
 def write_perf_artifact(path: str, pr: str, summary: dict) -> None:
     out = Path(path)
     out.parent.mkdir(parents=True, exist_ok=True)
+    # drop stale artifacts from earlier PRs/runs: CI uploads BENCH_*.json
+    # by glob, so a leftover from a previous invocation would ride along
+    # and pollute the perf-trajectory diff
+    for stale in out.parent.glob("BENCH_*.json"):
+        if stale != out:
+            stale.unlink()
+            note(f"[perf] removed stale artifact {stale}")
     out.write_text(json.dumps({
         "pr": pr,
         "timestamp": time.time(),

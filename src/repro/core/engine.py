@@ -53,12 +53,24 @@ from repro.core.memory_manager import MemoryConfig, TieredKVManager
 from repro.core.predictor import LengthPredictor, RetrievalPredictor
 from repro.core.quantization import kv_bytes_per_token
 from repro.core.request import KVLocation, Request, RequestState
-from repro.core.scheduler import (DecodeLane, PrefillChunk, Scheduler,
-                                  SchedulerConfig)
+from repro.core.scheduler import (DecodeLane, PrefillChunk, PrefillPack,
+                                  Scheduler, SchedulerConfig)
 from repro.models.model import Model
 from repro.serving.kv_cache import (DenseKVBackend, KVBackendConfig,
                                     PagedKVBackend)
 from repro.serving.sampler import REASONS, sample_and_reason
+
+
+def default_bucket_menu(prefill_chunk: int) -> Tuple[int, ...]:
+    """Pow2 bucket menu covering every chunk shape a ``prefill_chunk``-capped
+    scheduler can emit — exactly the shapes the backend's lazy pow2
+    bucketing would discover one compile at a time."""
+    top = max(8, 1 << (max(int(prefill_chunk), 1) - 1).bit_length())
+    menu, b = [], 8
+    while b <= top:
+        menu.append(b)
+        b *= 2
+    return tuple(menu)
 
 
 @dataclass
@@ -108,6 +120,20 @@ class EngineConfig:
                                            # chunked-prefill support
     iter_token_budget: Optional[int] = None  # scheduler token budget per
                                              # iteration (None = unbounded)
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+    # fixed menu of chunk-shape buckets (sorted ascending): the scheduler
+    # rounds every PrefillChunk span up to the nearest entry and warmup()
+    # pre-compiles one dispatch per bucket, so serve time never sees a
+    # novel prefill shape.  None = legacy lazy pow2 bucketing (warmup()
+    # then derives the pow2 menu the lazy path would discover).
+    prefill_pack: bool = False             # fuse equal-bucket chunks from
+                                           # distinct short requests into one
+                                           # PrefillPack dispatch (dense-FFN
+                                           # attention models only; greedy
+                                           # outputs stay bit-identical
+                                           # packed-vs-unpacked)
+    prefill_pack_width: int = 4            # segment rows per pack dispatch
+    warmup_compile: bool = False           # run warmup() at construction
     prefix_cache: bool = False             # cross-request shared-prefix KV
                                            # cache: admit/resume matches the
                                            # longest cached prefix and starts
@@ -160,13 +186,30 @@ class ServingEngine:
         # chunked prefill needs backend support (attention-family
         # decoder-only); other families keep monolithic whole-prompt spans
         self._chunked_ok = model.supports_chunked_prefill()
+        # fixed chunk-shape menu: explicit flag wins; packing without a
+        # menu derives the pow2 menu (packs group by bucket, so every
+        # packable chunk needs one)
+        buckets: Optional[Tuple[int, ...]] = None
+        if self._chunked_ok and cfg.prefill_chunk:
+            if cfg.prefill_buckets:
+                buckets = tuple(sorted({int(b) for b in cfg.prefill_buckets}))
+                if buckets[0] <= 0:
+                    raise ValueError("prefill buckets must be positive")
+            elif cfg.prefill_pack:
+                buckets = default_bucket_menu(cfg.prefill_chunk)
+        self._buckets = buckets
+        self._pack_ok = bool(cfg.prefill_pack and buckets
+                             and cfg.prefill_pack_width >= 2
+                             and model.supports_prefill_pack())
         sched_cfg = SchedulerConfig(
             max_batch=cfg.max_slots, n_queues=cfg.n_queues,
             base_quantum=cfg.base_quantum, quantum_growth=cfg.quantum_growth,
             age_threshold=cfg.age_threshold, strategy=cfg.strategy,
             max_new_tokens=cfg.max_new_tokens,
             prefill_chunk=(cfg.prefill_chunk if self._chunked_ok else None),
-            iter_token_budget=cfg.iter_token_budget)
+            iter_token_budget=cfg.iter_token_budget,
+            prefill_buckets=buckets, prefill_pack=self._pack_ok,
+            prefill_pack_width=cfg.prefill_pack_width)
         self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
 
         # --- device state: the pluggable KV backend owns slots + storage
@@ -177,7 +220,9 @@ class ServingEngine:
             quantize_offload=cfg.quantize_offload, page_size=cfg.page_size,
             attn_impl=cfg.paged_attn_impl,
             prefix_cache=(cfg.prefix_cache and self._chunked_ok),
-            prefix_cache_pages=cfg.prefix_cache_pages, seed=cfg.seed)
+            prefix_cache_pages=cfg.prefix_cache_pages, seed=cfg.seed,
+            prefill_buckets=buckets,
+            prefill_pack_width=cfg.prefill_pack_width)
         if cfg.kv_backend == "paged":
             if not cfg.fused_decode:
                 raise ValueError("the paged backend only implements the "
@@ -240,6 +285,8 @@ class ServingEngine:
         self.bus = None
         self.name = ""                             # replica lane name
         self._step_wall0 = 0.0                     # perf_counter at step start
+        if cfg.warmup_compile:
+            self.warmup()
 
     # -------------------------------------------------------- observability
     def attach_bus(self, bus, name: str = "") -> None:
@@ -343,27 +390,27 @@ class ServingEngine:
             gen = list(req.output_tokens)
         return list(req.prompt_tokens) + (gen[:-1] if gen else [])
 
-    def _exec_prefill_chunk(self, chunk: PrefillChunk, generated_of,
-                            t: float) -> bool:
-        """Execute one PrefillChunk item: (first chunk) match the shared-
-        prefix cache, claim a lane and admit memory, run the uncached part
-        of the chunk through the backend's resumable prefill (or the
-        monolithic fallback), and — when the final chunk of a fresh
-        prefill completes — sample the request's first token.  Returns
-        whether the chunk made progress."""
+    def _chunk_prework(self, chunk: PrefillChunk, t: float):
+        """Everything a chunk needs *before* its dispatch: residency and
+        lane checks, shared-prefix matching, page reservation, memory
+        admission.  Returns ``(status, start, target_toks)`` with status
+        ``"blocked"`` (cannot run this iteration), ``"covered"`` (prefix
+        cache already holds the span — no compute), or ``"ready"``.
+        Idempotent, so a pack may prework members it later executes
+        through the single-chunk path."""
         r = chunk.req
         rid = r.req_id
         if self.mem.location_of(r) == KVLocation.DRAM:
             # spilled by an earlier item *this* iteration (page shortfall /
             # mid-iteration grow): its prefix KV now lives in the host
             # pool, so the chunk cannot resume until swap-in restores it
-            return False
+            return "blocked", 0, None
         if chunk.start > 0 and not self.kv.has(rid):
             # prefix KV vanished since planning (drop path): the scheduler
             # re-plans from Request.prefilled (reset to 0) next iteration
-            return False
+            return "blocked", 0, None
         if not self.kv.has(rid) and self.kv.free_slot() is None:
-            return False               # lanes exhausted; retry next iteration
+            return "blocked", 0, None   # lanes exhausted; retry next iter
         target_toks = self._prefill_target_tokens(r)
         if (self._prefix_ok and chunk.start == 0 and r.prefilled == 0
                 and not self.kv.has(rid)):
@@ -392,7 +439,7 @@ class ServingEngine:
                       if x.req_id != rid and self.kv.has(x.req_id)
                       and self.mem.resident_hbm(x)]
             if not others:
-                return False           # cannot make room this iteration
+                return "blocked", 0, None   # cannot make room this iteration
             done = [x for x in others if x.prefill_pending == 0]
             victim = max(done or others, key=lambda x: x.context_len)
             self._spill(victim, t, "page_shortfall")
@@ -406,26 +453,25 @@ class ServingEngine:
             # item; the scheduler re-plans from the new watermark (a *last*
             # chunk always runs — hits are capped at target-1, the first-
             # token logits must come from a real dispatch)
-            return True
-        t0 = time.perf_counter()
-        if self._chunked_ok:
-            logits = self.kv.prefill_chunk(
-                self.params, rid, target_toks[start:chunk.end], start)
-            r.prefilled = chunk.end
-            n_chunk_toks = chunk.end - start
-        else:
-            assert chunk.start == 0 and chunk.last, \
-                "monolithic fallback cannot resume a partial chunk"
-            logits = self._run_prefill(r, target_toks)
-            r.prefilled = len(target_toks)
-            n_chunk_toks = len(target_toks)
-        dt = time.perf_counter() - t0
-        self.prefill_times.append((t0, n_chunk_toks, dt))
+            return "covered", start, target_toks
+        return "ready", start, target_toks
+
+    def _chunk_postwork(self, chunk: PrefillChunk, start: int, n_toks: int,
+                        logits_row, target_toks, generated_of, t: float,
+                        t0: float, dt: float, pack_size: int = 1) -> None:
+        """Everything after a chunk's dispatch: the observability event,
+        prefix publication on the final chunk, and first-token sampling
+        when a fresh prefill just completed.  Shared between the single-
+        chunk path (``pack_size=1``) and each member of a packed
+        dispatch."""
+        r = chunk.req
+        rid = r.req_id
         if self.bus is not None:
             self.bus.emit("prefill_chunk", t=self._span_t(t, t0), dur=dt,
                           req_id=rid, replica=self.name, start=start,
-                          end=chunk.end, tokens=n_chunk_toks,
-                          last=chunk.last, fresh=chunk.fresh)
+                          end=chunk.end, tokens=n_toks,
+                          last=chunk.last, fresh=chunk.fresh,
+                          bucket=chunk.bucket, pack_size=pack_size)
         if chunk.last and self._prefix_ok and rid not in self._lossy_kv:
             # prefill complete: publish the full pages covering the target
             # back to the index so the *next* request sharing this prefix
@@ -436,9 +482,182 @@ class ServingEngine:
                               replica=self.name, pages=pages)
         if chunk.last and r.generated == 0:   # fresh prefill emits a token
             tok, reason = self._sample_host(
-                logits[0], 1, r.context_len + 1, self._true_len_of(r))
+                logits_row, 1, r.context_len + 1, self._true_len_of(r))
             self._accept_token(r, tok, generated_of, t, reason=reason)
+
+    def _exec_prefill_chunk(self, chunk: PrefillChunk, generated_of,
+                            t: float) -> bool:
+        """Execute one PrefillChunk item: (first chunk) match the shared-
+        prefix cache, claim a lane and admit memory, run the uncached part
+        of the chunk through the backend's resumable prefill (or the
+        monolithic fallback), and — when the final chunk of a fresh
+        prefill completes — sample the request's first token.  Returns
+        whether the chunk made progress."""
+        r = chunk.req
+        status, start, target_toks = self._chunk_prework(chunk, t)
+        if status != "ready":
+            return status == "covered"
+        t0 = time.perf_counter()
+        if self._chunked_ok:
+            logits = self.kv.prefill_chunk(
+                self.params, r.req_id, target_toks[start:chunk.end], start)
+            r.prefilled = chunk.end
+            n_chunk_toks = chunk.end - start
+        else:
+            assert chunk.start == 0 and chunk.last, \
+                "monolithic fallback cannot resume a partial chunk"
+            logits = self._run_prefill(r, target_toks)
+            r.prefilled = len(target_toks)
+            n_chunk_toks = len(target_toks)
+        dt = time.perf_counter() - t0
+        self.prefill_times.append((t0, n_chunk_toks, dt))
+        self._chunk_postwork(chunk, start, n_chunk_toks, logits[0],
+                             target_toks, generated_of, t, t0, dt)
         return True
+
+    def _exec_prefill_pack(self, pack: PrefillPack, generated_of,
+                           t: float) -> bool:
+        """Execute one PrefillPack: run every member's admission prework,
+        then push all *ready* members through the backend's packed prefill
+        as a single compiled dispatch (segment rows padded to the pack's
+        bucket).  Members whose prework blocks are simply skipped — the
+        scheduler re-plans them next iteration, exactly as a blocked
+        single chunk.  A pack degraded to one ready member (or a backend
+        without pack support) falls back to the ordinary single-chunk
+        dispatch, which warmup() has also compiled."""
+        ready: List[tuple] = []
+        ran_any = False
+        for chunk in pack.chunks:
+            status, start, target_toks = self._chunk_prework(chunk, t)
+            if status == "covered":
+                ran_any = True
+            elif status == "ready":
+                ready.append((chunk, start, target_toks))
+        # cumulative resource gate: prework admits each member in
+        # isolation, but the fused dispatch claims lanes/pages for *all*
+        # of them at once — trim members the shared free supply cannot
+        # cover (the scheduler re-plans them next iteration)
+        free_lanes = sum(1 for x in self.kv.slot_req if x is None)
+        pool = getattr(self.kv, "pool", None)
+        free_pages = len(pool.free_pages) if pool is not None else 0
+        fit = []
+        for c, s, toks in ready:
+            rid = c.req.req_id
+            need_lane = 0 if self.kv.has(rid) else 1
+            need_pages = 0
+            if pool is not None:
+                need_pages = max(0, pool.pages_needed(c.end)
+                                 - len(pool.page_table.get(rid, [])))
+            if need_lane > free_lanes or (pool is not None
+                                          and need_pages > free_pages):
+                continue
+            free_lanes -= need_lane
+            free_pages -= need_pages
+            fit.append((c, s, toks))
+        ready = fit
+        if not ready:
+            return ran_any
+        if len(ready) == 1 or not self.kv.supports_pack():
+            for chunk, _, _ in ready:
+                ran_any |= self._exec_prefill_chunk(chunk, generated_of, t)
+            return ran_any
+        items = [(c.req.req_id, toks[s:c.end], s) for c, s, toks in ready]
+        t0 = time.perf_counter()
+        logits = self.kv.prefill_pack(self.params, items, bucket=pack.bucket)
+        dt = time.perf_counter() - t0
+        total = sum(c.end - s for c, s, _ in ready)
+        self.prefill_times.append((t0, total, dt))
+        for i, (chunk, start, target_toks) in enumerate(ready):
+            chunk.req.prefilled = chunk.end
+            self._chunk_postwork(chunk, start, chunk.end - start, logits[i],
+                                 target_toks, generated_of, t, t0, dt,
+                                 pack_size=len(ready))
+        return True
+
+    # -------------------------------------------------------------- warmup
+    def warmup(self) -> Dict[int, float]:
+        """Pre-compile every dispatch shape serve time can hit, on an idle
+        engine: one chunk dispatch per prefill bucket, one packed dispatch
+        per bucket (when packing is on; a single member already compiles
+        the full ``(width, bucket)`` shape — dummy rows pad the rest), the
+        fused (or legacy per-slot) decode step, and the host-side
+        first-token sampling chain.  Each bucket runs twice — the first
+        rep compiles, the second measures — and the measured seconds land
+        in ``self.latency.bucket_costs`` so EWT prices a bucketed chunk at
+        its true padded dispatch cost.  Returns the per-bucket seconds
+        table ({} for families without chunked-prefill support, whose
+        monolithic prompt-length buckets are unbounded).
+
+        Warm dispatches only touch state they immediately release: the
+        chunk/pack KV lands in a lane (dense: lengths reset by ``clear``,
+        so the garbage rows are never attended; paged: pages freed), the
+        all-inactive decode writes position 0 of free stripes / the
+        scratch page, and the sampler key counter is restored — so a
+        warmed engine is bit-identical to a cold one under greedy
+        sampling (non-greedy runs consume the same key stream either
+        way because the counter snapshot is restored).
+        """
+        assert not self.sched.live, "warmup() requires an idle engine"
+        costs: Dict[int, float] = {}
+        menu = self._buckets
+        if menu is None and self._chunked_ok and self.cfg.prefill_chunk:
+            menu = default_bucket_menu(self.cfg.prefill_chunk)
+        warm_rid = -(1 << 30)       # never collides with real request ids
+        sc = self._sample_count
+        for b in (menu or ()):
+            for rep in range(2):
+                t0 = time.perf_counter()
+                logits = self.kv.prefill_chunk(self.params, warm_rid,
+                                               [1] * b, 0)
+                jax.block_until_ready(logits)
+                costs[b] = time.perf_counter() - t0
+                if rep == 0:
+                    self._sample_host(logits[0], 1, 1, 1)
+                self.kv.clear(warm_rid)
+            if self._pack_ok and self.kv.supports_pack():
+                for _ in range(2):
+                    out = self.kv.prefill_pack(
+                        self.params, [(warm_rid, [1] * b, 0)], bucket=b)
+                    jax.block_until_ready(out)
+                    self.kv.clear(warm_rid)
+        self._sample_count = sc
+        if menu:
+            # swap staging: one offload/upload round-trip per pow2 context
+            # bucket.  Payloads are pow2-bucketed (see KVBackend.offload),
+            # so this finite sweep means ALISE's speculative offloads
+            # never compile at serve time either.  Fill the warm lane
+            # through already-warmed chunk shapes only.
+            span = 8
+            while span <= self.cfg.max_seq_len:
+                try:
+                    filled = 0
+                    while filled < span:
+                        c = max((b for b in menu if b <= span - filled),
+                                default=span - filled)
+                        self.kv.prefill_chunk(self.params, warm_rid,
+                                              [1] * c, filled)
+                        filled += c
+                    blob = self.kv.offload(warm_rid)
+                    self.kv.upload(warm_rid, blob)
+                except RuntimeError:    # page pool too small for this span
+                    pass
+                self.kv.clear(warm_rid)
+                span *= 2
+        B = self.cfg.max_slots
+        tokens = np.zeros((B, 1), np.int32)
+        active = np.zeros((B,), bool)
+        zeros = np.zeros((B,), np.int32)
+        tl = np.full((B,), np.iinfo(np.int32).max, np.int32)
+        if self.cfg.fused_decode:
+            self.kv.decode(self.params, tokens, active, zeros, zeros, tl)
+        else:
+            jax.block_until_ready(
+                self.kv.decode_logits(self.params, tokens, active))
+        if costs:
+            merged = dict(self.latency.bucket_costs or {})
+            merged.update(costs)
+            self.latency.bucket_costs = merged
+        return costs
 
     # ------------------------------------------------------------ swapping
     def _swap_stall(self, n_tokens: int, t0: float) -> None:
@@ -741,6 +960,9 @@ class ServingEngine:
             for item in plan.items:
                 if isinstance(item, DecodeLane):
                     decode_lanes.append(item.req)
+                elif isinstance(item, PrefillPack):
+                    ran_any |= self._exec_prefill_pack(item, generated_of,
+                                                       now())
                 else:
                     ran_any |= self._exec_prefill_chunk(item, generated_of,
                                                         now())

@@ -12,8 +12,8 @@ timings on this host.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Iterable, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Optional, Tuple
 
 import numpy as np
 
@@ -23,18 +23,54 @@ class LatencyModel:
     t0: float       # prefill seconds per prompt token
     alpha: float    # decode seconds per context token (KV read)
     beta: float     # decode fixed seconds per iteration (weights read / launch)
+    bucket_costs: Optional[Dict[int, float]] = field(default=None,
+                                                     repr=False)
+    # measured per-dispatch seconds for each warmed prefill-shape bucket
+    # (engine warmup fills this); when present, a bucketed chunk is priced
+    # at its *dispatch* cost — the whole padded shape — instead of its raw
+    # span, so EWT sees the same iteration times the engine will produce.
 
     def prefill_time(self, s: int) -> float:
         return s * self.t0
 
-    def prefill_chunk_time(self, start: int, size: int) -> float:
+    def bucket_time(self, bucket: int) -> Optional[float]:
+        """Measured dispatch seconds for a warmed shape bucket (None when
+        the bucket was never warmed / no table exists)."""
+        if self.bucket_costs:
+            return self.bucket_costs.get(bucket)
+        return None
+
+    def prefill_chunk_time(self, start: int, size: int,
+                           bucket: int = 0) -> float:
         """Cost of prefilling tokens [start, start+size) of a prompt.
 
         The first chunk (start=0) costs exactly ``prefill_time(size)``; a
         resumed chunk additionally re-reads the ``start`` tokens of prefix
         KV its queries attend over — the same per-context-token ``alpha``
-        the decode model charges (Eq. 5 applied per chunk token)."""
-        return size * self.t0 + self.alpha * size * start
+        the decode model charges (Eq. 5 applied per chunk token).
+
+        With a ``bucket`` and a warmed cost table, the base cost is the
+        bucket's measured dispatch time (padding burns real compute);
+        without a table the bucket still prices ``bucket * t0`` so the
+        analytical estimate matches the dispatched shape."""
+        base = size * self.t0
+        if bucket:
+            measured = self.bucket_time(bucket)
+            base = measured if measured is not None else bucket * self.t0
+        return base + self.alpha * size * start
+
+    def prefill_pack_time(self, sizes, starts, bucket: int) -> float:
+        """One packed dispatch covering ``len(sizes)`` equal-bucket chunks.
+
+        The pack's base cost is a *single* bucket dispatch (that is the
+        point of packing) — segment rows ride the same kernel launch —
+        while each member still pays its own prefix cross-read
+        ``alpha * size * start`` term."""
+        base = self.bucket_time(bucket)
+        if base is None:
+            base = bucket * self.t0
+        cross = sum(self.alpha * sz * st for sz, st in zip(sizes, starts))
+        return base + cross
 
     def prefill_time_remaining(self, total: int, prefilled: int,
                                chunk: Optional[int] = None) -> float:

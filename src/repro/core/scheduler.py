@@ -37,7 +37,7 @@ Baselines:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 from repro.core.latency_model import LatencyModel
 from repro.core.memory_manager import TieredKVManager
@@ -63,6 +63,16 @@ class SchedulerConfig:
                                          # (None = monolithic prefill)
     iter_token_budget: Optional[int] = None  # default token budget per
                                              # iteration (None = unbounded)
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+    # sorted menu of chunk-shape buckets: every PrefillChunk span is
+    # rounded up to the nearest entry (padding masked out) and charged to
+    # the budget at the bucket size, so serve time only ever dispatches
+    # shapes the engine warmup pass has already compiled.  None = legacy
+    # pow2 bucketing inside the KV backend (shapes discovered lazily).
+    prefill_pack: bool = False       # pack equal-bucket chunks from distinct
+                                     # short requests into one PrefillPack
+                                     # dispatch (segment rows, masked)
+    prefill_pack_width: int = 4      # fixed segment count per pack dispatch
 
 
 @dataclass
@@ -75,10 +85,19 @@ class PrefillChunk:
     start: int
     end: int
     last: bool
+    bucket: int = 0     # dispatch-shape bucket the span rounds up to
+                        # (0 = no fixed menu; backend pow2-buckets lazily)
 
     @property
     def size(self) -> int:
         return self.end - self.start
+
+    @property
+    def cost(self) -> int:
+        """Budget tokens the chunk consumes: the dispatch shape (bucket)
+        when a fixed menu is active — padded rows still burn compute —
+        else the raw span."""
+        return self.bucket or self.size
 
     @property
     def fresh(self) -> bool:
@@ -88,12 +107,33 @@ class PrefillChunk:
 
 
 @dataclass
+class PrefillPack:
+    """Several distinct requests' prefill chunks fused into one dispatch.
+
+    All members share the same shape ``bucket``; each occupies one segment
+    row of the packed batch, so a burst of short interactive prompts costs
+    one dispatch instead of ``len(chunks)``.  The engine executes the pack
+    atomically; per-chunk bookkeeping (admission, events, first tokens)
+    stays per-member."""
+    chunks: List[PrefillChunk]
+    bucket: int
+
+    @property
+    def size(self) -> int:
+        return sum(c.size for c in self.chunks)
+
+    @property
+    def cost(self) -> int:
+        return sum(c.cost for c in self.chunks)
+
+
+@dataclass
 class DecodeLane:
     """One decode step for a fully-prefilled, HBM-resident request."""
     req: Request
 
 
-WorkItem = Union[PrefillChunk, DecodeLane]
+WorkItem = Union[PrefillChunk, PrefillPack, DecodeLane]
 
 
 @dataclass
@@ -120,7 +160,20 @@ class IterationPlan:
     # ---------------------------------------------------- convenience views
     @property
     def chunks(self) -> List[PrefillChunk]:
-        return [it for it in self.items if isinstance(it, PrefillChunk)]
+        """Every prefill chunk in item order, pack members included —
+        consumers that only need per-request bookkeeping (simulator
+        admission, tests) see packs transparently."""
+        out: List[PrefillChunk] = []
+        for it in self.items:
+            if isinstance(it, PrefillChunk):
+                out.append(it)
+            elif isinstance(it, PrefillPack):
+                out.extend(it.chunks)
+        return out
+
+    @property
+    def packs(self) -> List[PrefillPack]:
+        return [it for it in self.items if isinstance(it, PrefillPack)]
 
     @property
     def decodes(self) -> List[Request]:
@@ -264,23 +317,76 @@ class Scheduler:
         return self._ewt_table(ordered, rem, now).get(req.req_id, 0.0)
 
     # --------------------------------------------------------- item packing
+    def _bucket_of(self, size: int) -> int:
+        """Smallest menu bucket covering ``size`` (0 with no menu)."""
+        menu = self.cfg.prefill_buckets
+        if not menu:
+            return 0
+        for b in menu:
+            if b >= size:
+                return b
+        raise ValueError(f"chunk span {size} exceeds the largest prefill "
+                         f"bucket {menu[-1]} — spans must be clamped")
+
     def _chunk_span(self, req: Request, budget_left: float) -> PrefillChunk:
         """Next prefill chunk for ``req``: resumes at ``req.prefilled``,
         capped by the chunk size and the remaining token budget (always at
         least one token so a tiny budget cannot livelock a prefill).  With
         chunking disabled (``prefill_chunk=None``) the span always covers
         the whole remaining target — the engine's monolithic prefill cannot
-        resume mid-prompt, so the budget may overshoot instead of splitting."""
+        resume mid-prompt, so the budget may overshoot instead of splitting.
+
+        With a ``prefill_buckets`` menu the span is additionally clamped to
+        the largest bucket and stamped with the smallest bucket covering
+        it: the dispatch runs at the bucket shape (padding masked), the
+        budget is charged at :attr:`PrefillChunk.cost`, and the round-up
+        may overshoot ``budget_left`` by at most one bucket granularity
+        (same precedent as the monolithic overshoot)."""
         start = req.prefilled
         target = req.prefill_target
         size = target - start
-        if self.cfg.prefill_chunk:
-            size = min(size, self.cfg.prefill_chunk)
+        menu = self.cfg.prefill_buckets
+        if self.cfg.prefill_chunk or menu:
+            cap = self.cfg.prefill_chunk or menu[-1]
+            if menu:
+                cap = min(cap, menu[-1])
+            size = min(size, cap)
             if budget_left != float("inf"):
                 size = min(size, int(max(budget_left, 1)))
         size = max(size, 1)
         return PrefillChunk(req, start, start + size,
-                            last=(start + size >= target))
+                            last=(start + size >= target),
+                            bucket=self._bucket_of(size))
+
+    def _pack_prefills(self, plan: IterationPlan) -> IterationPlan:
+        """Post-pass: fuse equal-bucket prefill chunks from distinct
+        requests into :class:`PrefillPack` items of at most
+        ``prefill_pack_width`` segments.  Runs after packing/backfill/HoL
+        detection so budget accounting and priority inversions are judged
+        on the per-chunk plan; each pack replaces its first member's slot
+        in item order, so relative priority of surviving items is kept."""
+        width = self.cfg.prefill_pack_width
+        if not self.cfg.prefill_pack or width < 2:
+            return plan
+        by_bucket: Dict[int, List[int]] = {}
+        for i, it in enumerate(plan.items):
+            if isinstance(it, PrefillChunk) and it.bucket:
+                by_bucket.setdefault(it.bucket, []).append(i)
+        replace: Dict[int, PrefillPack] = {}
+        drop: set = set()
+        for bucket, idxs in sorted(by_bucket.items()):
+            for g in range(0, len(idxs), width):
+                grp = idxs[g:g + width]
+                if len(grp) < 2:
+                    continue        # singleton: plain chunk dispatch
+                replace[grp[0]] = PrefillPack(
+                    [plan.items[i] for i in grp], bucket)   # type: ignore
+                drop.update(grp[1:])
+        if replace:
+            plan.items = [replace.get(i, it)
+                          for i, it in enumerate(plan.items)
+                          if i not in drop]
+        return plan
 
     # ----------------------------------------------------------------- plan
     def plan(self, now: float,
@@ -314,8 +420,8 @@ class Scheduler:
             if r.prefill_pending > 0:       # mid-chunked-prefill: continue it
                 chunk = self._chunk_span(r, left)
                 plan.items.append(chunk)
-                left -= chunk.size
-                plan.used_tokens += chunk.size
+                left -= chunk.cost
+                plan.used_tokens += chunk.cost
             else:
                 plan.items.append(DecodeLane(r))
                 left -= 1
@@ -328,12 +434,12 @@ class Scheduler:
             if self.mem.can_admit(r):
                 chunk = self._chunk_span(r, left)
                 plan.items.append(chunk)
-                left -= chunk.size
-                plan.used_tokens += chunk.size
+                left -= chunk.cost
+                plan.used_tokens += chunk.cost
                 n_active += 1
             else:
                 break   # strict FCFS: no lookahead past a blocked head
-        return plan
+        return self._pack_prefills(plan)
 
     # --------------------------------------------------------------- ALISE
     def _plan_alise(self, now: float,
@@ -390,8 +496,8 @@ class Scheduler:
                     KVLocation.NONE:
                 chunk = self._chunk_span(r, left)
                 plan.items.append(chunk)
-                left -= chunk.size
-                plan.used_tokens += chunk.size
+                left -= chunk.cost
+                plan.used_tokens += chunk.cost
             else:
                 plan.items.append(DecodeLane(r))
                 left -= 1
@@ -467,7 +573,7 @@ class Scheduler:
                         default=-1)
             plan.hol_blocked = [r for r in mem_blocked
                                 if rank.get(r.req_id, worst + 1) < worst]
-        return plan
+        return self._pack_prefills(plan)
 
     # ------------------------------------------------------------- summary
     def queue_depths(self) -> List[int]:

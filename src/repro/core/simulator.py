@@ -25,7 +25,7 @@ chunk and partially-prefilled jobs resume across iterations.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -37,7 +37,8 @@ from repro.core.predictor import (DefaultPredictor, LengthPredictor,
                                   RetrievalPredictor)
 from repro.core.quantization import kv_bytes_per_token
 from repro.core.request import KVLocation, Request, RequestState
-from repro.core.scheduler import IterationPlan, Scheduler, SchedulerConfig
+from repro.core.scheduler import (DecodeLane, IterationPlan, PrefillPack,
+                                  Scheduler, SchedulerConfig)
 from repro.core.trace import SyntheticTrace, TraceConfig, generate_trace
 
 
@@ -57,6 +58,12 @@ class SimConfig:
     max_new_tokens: int = 2048
     prefill_chunk: Optional[int] = None    # chunked prefill span (None = mono)
     iter_token_budget: Optional[int] = None  # per-iteration token budget
+    prefill_buckets: Optional[Tuple[int, ...]] = None  # fixed chunk-shape
+                                           # menu (spans round up; EWT prices
+                                           # the padded dispatch)
+    prefill_pack: bool = False             # fuse equal-bucket chunks from
+                                           # short requests into one dispatch
+    prefill_pack_width: int = 4
     prefix_cache: bool = False             # shared-prefix KV cache (hit
                                            # lengths + LRU capacity modeled;
                                            # a hit skips the cached prefix's
@@ -164,7 +171,10 @@ class ServingSimulator:
             age_threshold=cfg.age_threshold, strategy=strategy_impl,
             max_new_tokens=cfg.max_new_tokens,
             prefill_chunk=cfg.prefill_chunk,
-            iter_token_budget=cfg.iter_token_budget)
+            iter_token_budget=cfg.iter_token_budget,
+            prefill_buckets=cfg.prefill_buckets,
+            prefill_pack=cfg.prefill_pack,
+            prefill_pack_width=cfg.prefill_pack_width)
         self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
         self.sched.bus = self.bus
         self.sched.replica = self.replica
@@ -219,7 +229,10 @@ class ServingSimulator:
         t_iter = 0.0
         decode_ctx = 0
         ran_any = False
-        for chunk in plan.chunks:
+
+        def chunk_prep(chunk) -> int:
+            """Admission + shared-prefix matching; returns the chunk's
+            effective start (past any cached prefix)."""
             r = chunk.req
             if mem.location_of(r) == KVLocation.NONE:
                 mem.admit(r)
@@ -240,23 +253,61 @@ class ServingSimulator:
                 if hit and bus is not None:
                     bus.emit("prefix_hit", t=now, req_id=r.req_id,
                              replica=self.replica, tokens=hit)
-            if chunk.end > start:
-                t_chunk = self.latency.prefill_chunk_time(
-                    start, chunk.end - start)
-                if bus is not None:
-                    # virtual-domain span: placed at its modeled offset
-                    # within the iteration, dur from the latency model
-                    bus.emit("prefill_chunk", t=now + t_iter, dur=t_chunk,
-                             req_id=r.req_id, replica=self.replica,
-                             start=start, end=chunk.end,
-                             tokens=chunk.end - start, last=chunk.last,
-                             fresh=chunk.fresh)
-                t_iter += t_chunk
+            return start
+
+        def chunk_finish(chunk) -> None:
+            r = chunk.req
             r.prefilled = max(chunk.end, r.prefilled)
             if chunk.last and self.prefix_index is not None \
                     and r.prompt_tokens:
                 self.prefix_index.insert(r.prompt_tokens,
                                          min(r.prefilled, r.prompt_len))
+
+        for item in plan.items:
+            if isinstance(item, DecodeLane):
+                continue                   # costed below via plan.decodes
+            if isinstance(item, PrefillPack):
+                # one fused dispatch: a single bucket-shaped base cost,
+                # plus each member's prefix cross-read term
+                members = []
+                for chunk in item.chunks:
+                    start = chunk_prep(chunk)
+                    if chunk.end > start:
+                        members.append((chunk, start))
+                if members:
+                    t_pack = self.latency.prefill_pack_time(
+                        [c.end - s for c, s in members],
+                        [s for _, s in members], item.bucket)
+                    if bus is not None:
+                        for chunk, start in members:
+                            bus.emit("prefill_chunk", t=now + t_iter,
+                                     dur=t_pack, req_id=chunk.req.req_id,
+                                     replica=self.replica, start=start,
+                                     end=chunk.end, tokens=chunk.end - start,
+                                     last=chunk.last, fresh=chunk.fresh,
+                                     bucket=chunk.bucket,
+                                     pack_size=len(members))
+                    t_iter += t_pack
+                for chunk in item.chunks:
+                    chunk_finish(chunk)
+                ran_any = True
+                continue
+            chunk = item
+            start = chunk_prep(chunk)
+            if chunk.end > start:
+                t_chunk = self.latency.prefill_chunk_time(
+                    start, chunk.end - start, bucket=chunk.bucket)
+                if bus is not None:
+                    # virtual-domain span: placed at its modeled offset
+                    # within the iteration, dur from the latency model
+                    bus.emit("prefill_chunk", t=now + t_iter, dur=t_chunk,
+                             req_id=chunk.req.req_id, replica=self.replica,
+                             start=start, end=chunk.end,
+                             tokens=chunk.end - start, last=chunk.last,
+                             fresh=chunk.fresh, bucket=chunk.bucket,
+                             pack_size=1)
+                t_iter += t_chunk
+            chunk_finish(chunk)
             ran_any = True
         decoders = 0
         for r in plan.decodes:

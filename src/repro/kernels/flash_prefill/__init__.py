@@ -1,4 +1,7 @@
-from repro.kernels.flash_prefill.ops import flash_attention
-from repro.kernels.flash_prefill.ref import flash_prefill_ref
+from repro.kernels.flash_prefill.ops import (flash_attention,
+                                             flash_attention_prefix)
+from repro.kernels.flash_prefill.ref import (flash_prefill_prefix_ref,
+                                             flash_prefill_ref)
 
-__all__ = ["flash_attention", "flash_prefill_ref"]
+__all__ = ["flash_attention", "flash_attention_prefix", "flash_prefill_ref",
+           "flash_prefill_prefix_ref"]

@@ -60,6 +60,108 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
+def _prefix_kernel(start_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, heads: int, q_blk: int,
+                   kv_blk: int, nk: int):
+    """Chunk-over-prefix variant: queries are a C-token chunk whose
+    absolute positions begin at ``start[b]`` while keys/values span the
+    whole per-request stripe ``[0, Smax)``.  Same online-softmax state as
+    :func:`_kernel`; the causal skip/mask use absolute positions, so the
+    kernel reads ``O(C x (start + C))`` scores blockwise instead of
+    materializing the dense ``C x Smax`` matrix."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    b = pl.program_id(0) // heads
+    start = start_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip kv blocks entirely above this q block's last absolute position
+    run = (ki * kv_blk) <= (start + qi * q_blk + q_blk - 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)            # (q_blk, d)
+        k = k_ref[0].astype(jnp.float32)            # (kv_blk, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = (start + qi * q_blk
+                + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0))
+        kpos = ki * kv_blk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for blk in range(min(cap, n), 0, -1):
+        if n % blk == 0:
+            return blk
+    return n
+
+
+def flash_prefill_prefix(q, k, v, start, *, q_blk: int = 128,
+                         kv_blk: int = 128, interpret: bool = False):
+    """Chunked-prefill attention over cached prefix KV.
+
+    ``q``: (B, H, C, d) chunk queries; ``k``/``v``: (B, KVH, Smax, d)
+    per-request stripes with positions ``[0, start[b] + C)`` materialized;
+    ``start``: (B,) int32 absolute position of each chunk's first query.
+    Returns (B, H, C, d).  Block sizes are clamped to divisors of C/Smax.
+    """
+    B, H, C, d = q.shape
+    KVH, Smax = k.shape[1], k.shape[2]
+    G = H // KVH
+    q_blk = _largest_divisor(C, q_blk)
+    kv_blk = _largest_divisor(Smax, kv_blk)
+    nq, nk = C // q_blk, Smax // kv_blk
+    scale = 1.0 / (d ** 0.5)
+
+    qf = q.reshape(B * H, C, d)
+    kf = k.reshape(B * KVH, Smax, d)
+    vf = v.reshape(B * KVH, Smax, d)
+
+    kernel = functools.partial(_prefix_kernel, scale=scale, heads=H,
+                               q_blk=q_blk, kv_blk=kv_blk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # start (B,) int32
+            pl.BlockSpec((1, q_blk, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_blk, d),
+                         lambda bh, qi, ki: ((bh // G) if G > 1 else bh, ki, 0)),
+            pl.BlockSpec((1, kv_blk, d),
+                         lambda bh, qi, ki: ((bh // G) if G > 1 else bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_blk, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, C, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_blk,), jnp.float32),       # running max
+            pltpu.VMEM((q_blk,), jnp.float32),       # running sum
+            pltpu.VMEM((q_blk, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(start.astype(jnp.int32), qf, kf, vf)
+    return out.reshape(B, H, C, d)
+
+
 def flash_prefill(q, k, v, *, causal: bool = True, q_blk: int = 256,
                   kv_blk: int = 256, interpret: bool = False):
     """q: (B, H, S, d); k/v: (B, KVH, S, d) -> (B, H, S, d)."""

@@ -1,12 +1,14 @@
-"""Jitted public wrapper for the flash prefill kernel."""
+"""Jitted public wrappers for the flash prefill kernels."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 
-from repro.kernels.flash_prefill.flash_prefill import flash_prefill
-from repro.kernels.flash_prefill.ref import flash_prefill_ref
+from repro.kernels.flash_prefill.flash_prefill import (flash_prefill,
+                                                       flash_prefill_prefix)
+from repro.kernels.flash_prefill.ref import (flash_prefill_prefix_ref,
+                                             flash_prefill_ref)
 
 
 @partial(jax.jit, static_argnames=("causal", "q_blk", "kv_blk", "interpret"))
@@ -16,4 +18,12 @@ def flash_attention(q, k, v, *, causal: bool = True, q_blk: int = 256,
                          interpret=interpret)
 
 
-__all__ = ["flash_attention", "flash_prefill_ref"]
+@partial(jax.jit, static_argnames=("q_blk", "kv_blk", "interpret"))
+def flash_attention_prefix(q, k, v, start, *, q_blk: int = 128,
+                           kv_blk: int = 128, interpret: bool = False):
+    return flash_prefill_prefix(q, k, v, start, q_blk=q_blk, kv_blk=kv_blk,
+                                interpret=interpret)
+
+
+__all__ = ["flash_attention", "flash_attention_prefix", "flash_prefill_ref",
+           "flash_prefill_prefix_ref"]

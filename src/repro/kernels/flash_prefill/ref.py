@@ -20,3 +20,20 @@ def flash_prefill_ref(q, k, v, *, causal: bool = True):
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqt,bktd->bkgqd", w, vf)
     return o.reshape(B, H, S, d).astype(q.dtype)
+
+
+def flash_prefill_prefix_ref(q, k, v, start):
+    """q: (B, H, C, d); k/v: (B, KVH, Smax, d); start: (B,) int32.
+    Chunk queries at absolute positions ``start[b] + i`` attend stripe
+    keys ``j <= start[b] + i``; returns (B, H, C, d)."""
+    B, H, C, d = q.shape
+    KVH, Smax = k.shape[1], k.shape[2]
+    G = H // KVH
+    qg = q.reshape(B, KVH, G, C, d).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bktd->bkgqt", qg, k.astype(jnp.float32)) / (d ** 0.5)
+    qpos = start[:, None] + jnp.arange(C)[None]                  # (B, C)
+    mask = jnp.arange(Smax)[None, None] <= qpos[:, :, None]      # (B, C, Smax)
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,bktd->bkgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, C, d).astype(q.dtype)

@@ -71,9 +71,13 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
           predictor_kind: str = "oracle", quantize: bool = True,
           kv_backend: str = "dense", prefill_chunk: Optional[int] = None,
           iter_token_budget=None, prefix_cache: bool = False,
-          target_tpot: float = 0.05, trace_out: Optional[str] = None):
+          target_tpot: float = 0.05, trace_out: Optional[str] = None,
+          prefill_buckets=None, prefill_pack: bool = False,
+          prefill_pack_width: int = 4,
+          warmup: bool = False, chunk_attn: str = "masked"):
     cfg = get_smoke_config(arch)
-    model = Model(cfg, attn_chunk=32, remat=False)
+    model = Model(cfg, attn_chunk=32, remat=False,
+                  chunk_attn_impl=chunk_attn)
     params = model.init(jax.random.PRNGKey(seed))
     predictor = (OraclePredictor() if predictor_kind == "oracle"
                  else RetrievalPredictor(seed=seed))
@@ -83,7 +87,10 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
         strategy=strategy, quantize_offload=quantize,
         kv_backend=kv_backend, prefill_chunk=prefill_chunk,
         iter_token_budget=None if autotune else iter_token_budget,
-        prefix_cache=prefix_cache), predictor=predictor)
+        prefix_cache=prefix_cache,
+        prefill_buckets=prefill_buckets, prefill_pack=prefill_pack,
+        prefill_pack_width=prefill_pack_width,
+        warmup_compile=warmup), predictor=predictor)
     if trace_out:
         from repro.serving.observability import EventBus
         eng.attach_bus(EventBus(clock="wall"), "engine0")
@@ -127,13 +134,17 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                   iter_token_budget: Optional[int] = None,
                   prefix_cache: bool = False,
                   trace_out: Optional[str] = None,
-                  metrics_interval: Optional[float] = None):
+                  metrics_interval: Optional[float] = None,
+                  prefill_buckets=None, prefill_pack: bool = False,
+                  prefill_pack_width: int = 4,
+                  warmup: bool = False, chunk_attn: str = "masked"):
     """Replay a synthetic Poisson trace through the online Gateway and print
     per-class TTFT/E2E percentiles (and SLO attainment when targets are
     set).  ``virtual_dt=None`` serves in wall clock; ``pump`` selects the
     concurrent per-engine pump or the lockstep barrier there."""
     cfg = get_smoke_config(arch)
-    model = Model(cfg, attn_chunk=32, remat=False)
+    model = Model(cfg, attn_chunk=32, remat=False,
+                  chunk_attn_impl=chunk_attn)
     params = model.init(jax.random.PRNGKey(seed))
 
     def mk_engine():
@@ -144,7 +155,10 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
             strategy=strategy, quantize_offload=False,
             kv_backend=kv_backend, prefill_chunk=prefill_chunk,
             iter_token_budget=iter_token_budget,
-            prefix_cache=prefix_cache), predictor=predictor)
+            prefix_cache=prefix_cache,
+            prefill_buckets=prefill_buckets, prefill_pack=prefill_pack,
+            prefill_pack_width=prefill_pack_width,
+            warmup_compile=warmup), predictor=predictor)
 
     reset_request_counter()
     trace = generate_trace(TraceConfig(dataset=dataset, rate=rate,
@@ -207,6 +221,29 @@ def main():
                          "default: unbounded)")
     ap.add_argument("--target-tpot", type=float, default=0.05,
                     help="TPOT target (s) for --iter-token-budget auto")
+    ap.add_argument("--prefill-buckets", default=None, metavar="B1,B2,...",
+                    help="fixed menu of prefill chunk-shape buckets "
+                         "(comma-separated token counts); chunks are "
+                         "rounded up to the nearest bucket (padding "
+                         "masked) so serve time never dispatches a "
+                         "novel shape. Default: pow2 ladder up to "
+                         "--prefill-chunk when packing/warmup is on")
+    ap.add_argument("--prefill-pack", action="store_true",
+                    help="concatenate several short requests' prefill "
+                         "chunks into one bucketed dispatch with segment "
+                         "masking (greedy outputs unchanged)")
+    ap.add_argument("--prefill-pack-width", type=int, default=4,
+                    help="max requests per packed prefill dispatch")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-compile every bucketed prefill / pack / "
+                         "swap / decode shape at engine startup so the "
+                         "serve path never hits a JIT compile; measured "
+                         "bucket costs feed the EWT latency model")
+    ap.add_argument("--chunk-attn", default="masked",
+                    choices=["masked", "flash"],
+                    help="chunk-attention implementation: dense masked "
+                         "attention or the flash_prefill Pallas "
+                         "prefix-KV kernel")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="cross-request shared-prefix KV cache: repeated "
                          "prompt prefixes (multi-turn chats, shared "
@@ -248,6 +285,10 @@ def main():
                          "heartbeat every SECONDS (gauges are sampled "
                          "at the same cadence when tracing)")
     args = ap.parse_args()
+    buckets = None
+    if args.prefill_buckets:
+        buckets = tuple(sorted({int(x) for x in
+                                args.prefill_buckets.split(",") if x.strip()}))
     budget = args.iter_token_budget
     if budget is not None and budget != "auto":
         budget = int(budget)
@@ -270,6 +311,11 @@ def main():
                       iter_token_budget=(None if budget == "auto"
                                          else budget),
                       prefix_cache=args.prefix_cache,
+                      prefill_buckets=buckets,
+                      prefill_pack=args.prefill_pack,
+                      prefill_pack_width=args.prefill_pack_width,
+                      warmup=args.warmup,
+                      chunk_attn=args.chunk_attn,
                       trace_out=args.trace_out,
                       metrics_interval=args.metrics_interval)
     else:
@@ -280,6 +326,9 @@ def main():
               predictor_kind=args.predictor, kv_backend=args.kv_backend,
               prefill_chunk=args.prefill_chunk,
               iter_token_budget=budget, prefix_cache=args.prefix_cache,
+              prefill_buckets=buckets, prefill_pack=args.prefill_pack,
+              prefill_pack_width=args.prefill_pack_width,
+              warmup=args.warmup, chunk_attn=args.chunk_attn,
               target_tpot=args.target_tpot, trace_out=args.trace_out)
 
 

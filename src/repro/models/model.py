@@ -144,9 +144,14 @@ class Model:
                  attn_chunk: int = 1024, ssd_chunk: int = 256,
                  remat: bool = True, kv_dtype: str = "bfloat16",
                  moe_groups: int = 1, pad_experts_to: int = 0,
-                 ssm_state_dtype: str = "float32"):
+                 ssm_state_dtype: str = "float32",
+                 chunk_attn_impl: str = "masked"):
+        if chunk_attn_impl not in ("masked", "flash"):
+            raise ValueError(f"chunk_attn_impl={chunk_attn_impl!r} "
+                             "(want 'masked' or 'flash')")
         self.cfg = cfg
         self.attn_impl = attn_impl
+        self.chunk_attn_impl = chunk_attn_impl
         self.attn_chunk = attn_chunk
         self.ssd_chunk = ssd_chunk
         self.remat = remat
@@ -501,6 +506,31 @@ class Model:
         return (cfg.family not in ("ssm", "hybrid")
                 and not cfg.is_encoder_decoder)
 
+    def _chunk_attn(self, q, k_all, v_all, q_pos, kv_pos, start):
+        """Attention for one (possibly packed) prefill chunk.
+
+        ``q``: (B, C, H, hd); ``k_all``/``v_all``: (B, Smax, KVH, hd);
+        ``q_pos``/``kv_pos``: (B, C)/(B, Smax); ``start``: (B,) int32.
+        ``masked`` materializes the C x Smax score matrix with the causal
+        position mask (the bit-identity reference); ``flash`` routes
+        through the Pallas ``flash_prefill_prefix`` kernel, which reads
+        the stripe blockwise with online softmax — same math, no dense
+        score matrix, so it survives long contexts.
+        """
+        cfg = self.cfg
+        if self.chunk_attn_impl == "flash":
+            from repro.kernels.flash_prefill.flash_prefill import (
+                flash_prefill_prefix)
+            interpret = jax.default_backend() == "cpu"
+            out = flash_prefill_prefix(
+                q.transpose(0, 2, 1, 3),            # (B, H, C, hd)
+                k_all.astype(q.dtype).transpose(0, 2, 1, 3),
+                v_all.astype(q.dtype).transpose(0, 2, 1, 3),
+                start, interpret=interpret)
+            return out.transpose(0, 2, 1, 3)        # (B, C, H, hd)
+        return L.full_attention(cfg, q, k_all, v_all, causal=True,
+                                q_positions=q_pos, kv_positions=kv_pos)
+
     def prefill_chunk(self, params, k_stripe, v_stripe, tokens, start,
                       chunk_len):
         """One resumable prefill chunk over a dense per-request KV stripe.
@@ -530,6 +560,7 @@ class Model:
         q_pos = (start + jnp.arange(C))[None, :]              # (1, C)
         kv_pos = jnp.arange(Smax)[None, :]                    # (1, Smax)
         write_idx = start + jnp.arange(C)                     # (C,)
+        start_vec = jnp.reshape(jnp.asarray(start, jnp.int32), (1,))
         ffn_kind = cfg.ffn_kind(0)
 
         def body(h, inp):
@@ -538,8 +569,8 @@ class Model:
             q, k, v = L._project_qkv(cfg, p_l["attn"], h1, q_pos)
             k_l = k_l.at[write_idx].set(k[0].astype(k_l.dtype))
             v_l = v_l.at[write_idx].set(v[0].astype(v_l.dtype))
-            attn = L.full_attention(cfg, q, k_l[None], v_l[None], causal=True,
-                                    q_positions=q_pos, kv_positions=kv_pos)
+            attn = self._chunk_attn(q, k_l[None], v_l[None], q_pos, kv_pos,
+                                    start_vec)
             h = h + attn.reshape(1, C, -1) @ p_l["attn"]["wo"]
             h, _ = _apply_ffn_part(cfg, p_l, h, ffn_kind, self.moe_groups)
             return h, (k_l, v_l)
@@ -578,6 +609,7 @@ class Model:
         x = shard_hint(x, "batch", None, None)
         q_pos = (start + jnp.arange(C))[None, :]
         kv_pos = jnp.arange(Smax)[None, :]
+        start_vec = jnp.reshape(jnp.asarray(start, jnp.int32), (1,))
         ffn_kind = cfg.ffn_kind(0)
 
         def body(h, inp):
@@ -590,8 +622,7 @@ class Model:
                 v[0].astype(v_pool.dtype))
             kg = k_pool[block_tables[0]].reshape(1, Smax, *k_pool.shape[2:])
             vg = v_pool[block_tables[0]].reshape(1, Smax, *v_pool.shape[2:])
-            attn = L.full_attention(cfg, q, kg, vg, causal=True,
-                                    q_positions=q_pos, kv_positions=kv_pos)
+            attn = self._chunk_attn(q, kg, vg, q_pos, kv_pos, start_vec)
             h = h + attn.reshape(1, C, -1) @ p_l["attn"]["wo"]
             h, _ = _apply_ffn_part(cfg, p_l, h, ffn_kind, self.moe_groups)
             return h, (k_pool, v_pool)
@@ -602,6 +633,118 @@ class Model:
         last = jnp.clip(chunk_len - 1, 0, C - 1)
         x_last = jax.lax.dynamic_index_in_dim(x, last, axis=1,
                                               keepdims=False)
+        logits = self._logits(params, x_last)
+        return logits.astype(jnp.float32), {"k": k_new, "v": v_new}
+
+    # ------------------------------------------------------- packed prefill
+    def supports_prefill_pack(self) -> bool:
+        """Packed prefill batches several requests' chunks through one
+        dispatch.  Attention/norm/dense-FFN treat batch rows independently,
+        so packing preserves per-segment outputs bit-for-bit — but MoE
+        expert capacity is a function of the *total* token count
+        (``capacity_factor * T * K / E``), so co-batched segments would
+        change each other's drop behavior.  Packing therefore covers
+        dense-FFN attention stacks only.
+        """
+        return self.supports_chunked_prefill() and self.cfg.ffn_kind(0) != "moe"
+
+    def prefill_pack(self, params, k_stripes, v_stripes, tokens, start,
+                     chunk_len):
+        """N prefill chunks from distinct requests in one dispatch.
+
+        Batched twin of :meth:`prefill_chunk` — segment ``i`` occupies
+        batch row ``i``, so its computation is the same masked attention
+        over its own (Smax) stripe as the unpacked path and greedy outputs
+        stay bit-identical packed-vs-unpacked.
+
+        ``k_stripes``/``v_stripes``: (L, N, Smax, KVH, hd); ``tokens``:
+        (N, C) int32 right-padded; ``start``/``chunk_len``: (N,) int32.
+        Dummy rows (pack padding) carry ``chunk_len = 0`` and whatever
+        stripe the caller gathered; their outputs are garbage the caller
+        discards.  Returns ``(last_logits (N, V) f32, new_k, new_v)``.
+        """
+        cfg = self.cfg
+        if not self.supports_prefill_pack():
+            raise ValueError(
+                f"packed prefill unsupported for family={cfg.family} "
+                f"ffn={cfg.ffn_kind(0)} enc_dec={cfg.is_encoder_decoder}")
+        N, C = tokens.shape
+        Smax = k_stripes.shape[2]
+        x = self._embed_in(params, tokens)                    # (N, C, D)
+        x = shard_hint(x, "batch", None, None)
+        start = jnp.asarray(start, jnp.int32)
+        q_pos = start[:, None] + jnp.arange(C)[None, :]       # (N, C)
+        kv_pos = jnp.broadcast_to(jnp.arange(Smax)[None, :], (N, Smax))
+        rows = jnp.arange(N)[:, None]                         # (N, 1)
+        write_idx = q_pos                                     # (N, C)
+        ffn_kind = cfg.ffn_kind(0)
+
+        def body(h, inp):
+            p_l, k_l, v_l = inp                               # (N, Smax, KVH, hd)
+            h1 = L.apply_norm(cfg, p_l["ln1"], h)
+            q, k, v = L._project_qkv(cfg, p_l["attn"], h1, q_pos)
+            k_l = k_l.at[rows, write_idx].set(k.astype(k_l.dtype))
+            v_l = v_l.at[rows, write_idx].set(v.astype(v_l.dtype))
+            attn = self._chunk_attn(q, k_l, v_l, q_pos, kv_pos, start)
+            h = h + attn.reshape(N, C, -1) @ p_l["attn"]["wo"]
+            h, _ = _apply_ffn_part(cfg, p_l, h, ffn_kind, self.moe_groups)
+            return h, (k_l, v_l)
+
+        x, (k_new, v_new) = lax.scan(body, x,
+                                     (params["layers"], k_stripes, v_stripes))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        last = jnp.clip(chunk_len - 1, 0, C - 1)              # (N,)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
+        logits = self._logits(params, x_last)                 # (N, V)
+        return logits.astype(jnp.float32), k_new, v_new
+
+    def paged_prefill_pack(self, params, kv, tokens, block_tables,
+                           write_page, write_off, start, chunk_len):
+        """Paged twin of :meth:`prefill_pack`: N chunks' KV lands in the
+        shared page pool in one dispatch.
+
+        ``kv``: {"k","v"} (L, num_pages, page, KVH, hd); ``tokens``:
+        (N, C); ``block_tables``: (N, max_pages) with unused entries at
+        the scratch page; ``write_page``/``write_off``: (N, C) physical
+        destination per token (scratch for padded rows and dummy
+        segments); ``start``/``chunk_len``: (N,) int32.
+        """
+        cfg = self.cfg
+        if not self.supports_prefill_pack():
+            raise ValueError(
+                f"packed prefill unsupported for family={cfg.family} "
+                f"ffn={cfg.ffn_kind(0)} enc_dec={cfg.is_encoder_decoder}")
+        N, C = tokens.shape
+        page = kv["k"].shape[2]
+        n_pages = block_tables.shape[1]
+        Smax = n_pages * page
+        x = self._embed_in(params, tokens)
+        x = shard_hint(x, "batch", None, None)
+        start = jnp.asarray(start, jnp.int32)
+        q_pos = start[:, None] + jnp.arange(C)[None, :]
+        kv_pos = jnp.broadcast_to(jnp.arange(Smax)[None, :], (N, Smax))
+        ffn_kind = cfg.ffn_kind(0)
+
+        def body(h, inp):
+            p_l, k_pool, v_pool = inp
+            h1 = L.apply_norm(cfg, p_l["ln1"], h)
+            q, k, v = L._project_qkv(cfg, p_l["attn"], h1, q_pos)
+            k_pool = k_pool.at[write_page, write_off].set(
+                k.astype(k_pool.dtype))
+            v_pool = v_pool.at[write_page, write_off].set(
+                v.astype(v_pool.dtype))
+            kg = k_pool[block_tables].reshape(N, Smax, *k_pool.shape[2:])
+            vg = v_pool[block_tables].reshape(N, Smax, *v_pool.shape[2:])
+            attn = self._chunk_attn(q, kg, vg, q_pos, kv_pos, start)
+            h = h + attn.reshape(N, C, -1) @ p_l["attn"]["wo"]
+            h, _ = _apply_ffn_part(cfg, p_l, h, ffn_kind, self.moe_groups)
+            return h, (k_pool, v_pool)
+
+        x, (k_new, v_new) = lax.scan(body, x,
+                                     (params["layers"], kv["k"], kv["v"]))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        last = jnp.clip(chunk_len - 1, 0, C - 1)
+        x_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0]
         logits = self._logits(params, x_last)
         return logits.astype(jnp.float32), {"k": k_new, "v": v_new}
 

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -283,6 +283,11 @@ class KVBackendConfig:
     prefix_cache_pages: int = 0    # dense backend: private store capacity
                                    # (0 = one full batch of stripes)
     seed: int = 0
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+    # fixed, sorted menu of chunk-shape buckets: chunk dispatch shapes are
+    # rounded up to the nearest entry (instead of lazy pow2 bucketing), so
+    # an explicit warmup pass can pre-compile every serve-time shape
+    prefill_pack_width: int = 4    # segment rows per packed-prefill dispatch
 
 
 class KVBackend:
@@ -332,9 +337,23 @@ class KVBackend:
                     max_seq_len=c.max_seq_len)
 
     @staticmethod
-    def _chunk_bucket(n: int) -> int:
+    def _pow2_bucket(n: int) -> int:
         """Pow2 chunk-length buckets (min 8) bound jit recompiles."""
         return max(8, 1 << (n - 1).bit_length())
+
+    def _chunk_bucket(self, n: int) -> int:
+        """Dispatch-shape bucket for an ``n``-token chunk: the smallest
+        entry of the fixed ``prefill_buckets`` menu covering it (so warmup
+        can pre-compile every shape), else the legacy lazy pow2 bucket."""
+        menu = self.cfg.prefill_buckets
+        if menu:
+            for b in menu:
+                if b >= n:
+                    return b
+            raise ValueError(
+                f"{n}-token chunk exceeds the largest prefill bucket "
+                f"{menu[-1]}; the scheduler must clamp chunk spans")
+        return self._pow2_bucket(n)
 
     # ----------------------------------------------------------- interface
     def write_prefill(self, rid: int, pcache, length: int) -> None:
@@ -348,6 +367,23 @@ class KVBackend:
         (assigning a lane on the first chunk) and return the chunk's
         last-position logits (jnp (1, V)) — the prompt's next-token logits
         when this chunk completes the prefill target."""
+        raise NotImplementedError
+
+    def supports_pack(self) -> bool:
+        """Whether :meth:`prefill_pack` is available (packed multi-request
+        chunk dispatch)."""
+        return False
+
+    def prefill_pack(self, params, items: Sequence[Tuple[int, List[int],
+                                                         int]],
+                     bucket: int = 0):
+        """Run several requests' prefill chunks as ONE dispatch.
+
+        ``items``: up to ``prefill_pack_width`` tuples ``(rid, tokens,
+        start)`` — distinct requests, every chunk's dispatch shape rounded
+        to the same ``bucket`` (0 = derive from the longest member).
+        Returns per-segment last-position logits, jnp (len(items), V), in
+        item order."""
         raise NotImplementedError
 
     def chunk_pages_shortfall(self, rid: int, end: int) -> int:
@@ -448,6 +484,22 @@ class DenseKVBackend(KVBackend):
                         k_cache.at[:, slot].set(k_new.astype(k_cache.dtype)),
                         v_cache.at[:, slot].set(v_new.astype(v_cache.dtype)))
             self._chunk = jax.jit(chunk_cache, **_donate(1, 2))
+        self._pack = None
+        if model.supports_prefill_pack():
+            # packed twin: N segment rows gather N slot stripes, run the
+            # batched chunk compute, scatter back.  Dummy rows carry an
+            # out-of-range slot index: JAX clamps the gather (harmless
+            # read of the last stripe) and DROPS the scatter, so pack
+            # padding never touches live cache state.
+            def pack_cache(params, k_cache, v_cache, toks, slots, start,
+                           chunk_len):
+                logits, k_new, v_new = model.prefill_pack(
+                    params, k_cache[:, slots], v_cache[:, slots], toks,
+                    start, chunk_len)
+                return (logits,
+                        k_cache.at[:, slots].set(k_new.astype(k_cache.dtype)),
+                        v_cache.at[:, slots].set(v_new.astype(v_cache.dtype)))
+            self._pack = jax.jit(pack_cache, **_donate(1, 2))
         if cfg.prefix_cache and model.supports_chunked_prefill():
             from repro.serving.prefix_cache import DensePrefixCache
             acfg = model.cfg
@@ -539,6 +591,41 @@ class DenseKVBackend(KVBackend):
                       "lengths": self.cache["lengths"].at[slot].set(start + C)}
         return logits
 
+    def supports_pack(self) -> bool:
+        return self._pack is not None
+
+    def prefill_pack(self, params, items, bucket: int = 0):
+        N = self.cfg.prefill_pack_width
+        assert self._pack is not None, "model cannot pack prefills"
+        assert 0 < len(items) <= N, f"pack of {len(items)} > width {N}"
+        Cb = bucket or self._chunk_bucket(max(len(t) for _, t, _ in items))
+        toks = np.zeros((N, Cb), np.int32)
+        starts = np.zeros((N,), np.int32)
+        lens = np.zeros((N,), np.int32)
+        # dummy rows target slot == max_slots: out of range by one, so the
+        # jitted gather clamps and the scatter back is dropped
+        slots = np.full((N,), self.cfg.max_slots, np.int32)
+        for i, (rid, tokens, start) in enumerate(items):
+            slot = self.slot_of(rid)
+            if slot is None:                # first chunk: claim a lane
+                slot = self.free_slot()
+                assert slot is not None, "caller must check slot availability"
+                self.slot_req[slot] = rid
+            C = len(tokens)
+            assert C <= Cb, f"{C}-token member exceeds pack bucket {Cb}"
+            toks[i, :C] = tokens
+            starts[i], lens[i], slots[i] = start, C, slot
+        logits, k_new, v_new = self._pack(
+            params, self.cache["k"], self.cache["v"], jnp.asarray(toks),
+            jnp.asarray(slots), jnp.asarray(starts), jnp.asarray(lens))
+        lengths = np.array(self.cache["lengths"])
+        lengths[slots[:len(items)]] = starts[:len(items)] + lens[:len(items)]
+        self.cache = {**self.cache, "k": k_new, "v": v_new,
+                      "lengths": jnp.asarray(lengths)}
+        # numpy (device_get, not a compile): an eager jnp slice here would
+        # recompile for every distinct pack occupancy
+        return np.asarray(logits)[:len(items)]
+
     # --------------------------------------------- shared-prefix cache
     def prefix_acquire(self, rid: int, tokens) -> int:
         """Copy-based hit: claim a lane and copy the cached prefix's KV
@@ -587,11 +674,24 @@ class DenseKVBackend(KVBackend):
         slot = self.slot_of(rid)
         data = self._slot_view(slot)
         length = int(data["lengths"])
+        # pow2-bucketed payload span: the eager gather/quantize/scatter
+        # chain then compiles O(log max_seq) programs instead of one per
+        # distinct context length (ALISE offloads speculatively, so swap
+        # staging is on the serve path); rows in [length, span) carry
+        # garbage the restored ``lengths`` masks
+        span = min(self._pow2_bucket(max(length, 1)), self.cfg.max_seq_len)
         stored: dict = {"lengths": length}
         for key, arr in data.items():
             if key == "lengths":
                 continue
-            trimmed = arr[:, :length] if key in ("k", "v") else arr
+            if key in ("k", "v"):
+                # zero the pad rows: channel-wise quant statistics span the
+                # token axis, so stale-slot garbage past ``length`` would
+                # otherwise perturb the real rows' scales
+                mask = jnp.arange(span)[None, :, None, None] < length
+                trimmed = jnp.where(mask, arr[:, :span], 0)
+            else:
+                trimmed = arr
             if self.cfg.quantize_offload and key in ("k", "v"):
                 stored[key] = ("q8", quantize_kv_device(trimmed))
             else:
@@ -613,9 +713,12 @@ class DenseKVBackend(KVBackend):
             else:
                 src = jnp.asarray(item[1])
             if key in ("k", "v"):
+                # the blob carries the pow2-bucketed span (>= length);
+                # writing it whole keeps the scatter shape-stable, and the
+                # pad rows past ``length`` are masked by ``lengths``
                 buf = jnp.zeros(self._slot_shape(key),
                                 self.cache[key].dtype)
-                buf = buf.at[:, :length].set(
+                buf = buf.at[:, :src.shape[1]].set(
                     src.astype(self.cache[key].dtype))
                 data[key] = buf
             else:
@@ -676,6 +779,8 @@ class PagedKVBackend(KVBackend):
         # (bit-exact vs the dense stripe path); attn_impl only selects the
         # decode-step kernel
         self._chunk = jax.jit(model.paged_prefill_chunk, **_donate(1))
+        self._pack = (jax.jit(model.paged_prefill_pack, **_donate(1))
+                      if model.supports_prefill_pack() else None)
         if cfg.prefix_cache:
             from repro.serving.prefix_cache import PagedPrefixCache
             self.prefix = PagedPrefixCache(self.pool, cfg.page_size)
@@ -723,6 +828,53 @@ class PagedKVBackend(KVBackend):
         self.pool.k, self.pool.v = kv["k"], kv["v"]
         return logits
 
+    def supports_pack(self) -> bool:
+        return self._pack is not None
+
+    def prefill_pack(self, params, items, bucket: int = 0):
+        N = self.cfg.prefill_pack_width
+        assert self._pack is not None, "model cannot pack prefills"
+        assert 0 < len(items) <= N, f"pack of {len(items)} > width {N}"
+        pg = self.cfg.page_size
+        Cb = bucket or self._chunk_bucket(max(len(t) for _, t, _ in items))
+        toks = np.zeros((N, Cb), np.int32)
+        starts = np.zeros((N,), np.int32)
+        lens = np.zeros((N,), np.int32)
+        # dummy rows (and pad columns) write the sacrificial scratch page
+        wp = np.full((N, Cb), self.scratch_page, np.int32)
+        wo = np.broadcast_to(np.arange(Cb, dtype=np.int32) % pg,
+                             (N, Cb)).copy()
+        tables = np.full((N, self.max_pages_per_seq), self.scratch_page,
+                         np.int32)
+        for i, (rid, tokens, start) in enumerate(items):
+            slot = self.slot_of(rid)
+            if slot is None:                # first chunk: claim a lane
+                slot = self.free_slot()
+                assert slot is not None, "caller must check slot availability"
+                self.slot_req[slot] = rid
+                if rid not in self.pool.page_table:
+                    self.pool.allocate(rid, 0)
+            C = len(tokens)
+            assert C <= Cb, f"{C}-token member exceeds pack bucket {Cb}"
+            end = start + C
+            self.pool.extend_to(rid, end)   # caller checked the shortfall
+            pt = self.pool.page_table[rid]
+            toks[i, :C] = tokens
+            starts[i], lens[i] = start, C
+            for j in range(C):
+                pos = start + j
+                wp[i, j] = pt[pos // pg]
+                wo[i, j] = pos % pg
+            tables[i, :len(pt)] = pt
+        logits, kv = self._pack(
+            params, {"k": self.pool.k, "v": self.pool.v},
+            jnp.asarray(toks), jnp.asarray(tables), jnp.asarray(wp),
+            jnp.asarray(wo), jnp.asarray(starts), jnp.asarray(lens))
+        self.pool.k, self.pool.v = kv["k"], kv["v"]
+        # numpy (device_get, not a compile): an eager jnp slice here would
+        # recompile for every distinct pack occupancy
+        return np.asarray(logits)[:len(items)]
+
     def chunk_pages_shortfall(self, rid: int, end: int) -> int:
         have = len(self.pool.page_table.get(rid, []))
         return max(0, self.pool.pages_needed(end) - have
@@ -758,9 +910,22 @@ class PagedKVBackend(KVBackend):
 
     def offload(self, rid: int) -> dict:
         pages = self.pool.page_table[rid]
-        idx = jnp.asarray(pages)
-        k, v = self.pool.k[:, idx], self.pool.v[:, idx]
-        stored: dict = {"lengths": self.pool.lengths[rid]}
+        # pow2-bucketed page count, padded with the sacrificial scratch
+        # page: the eager gather/quantize/scatter chain compiles O(log)
+        # programs instead of one per distinct page count (ALISE offloads
+        # speculatively, so swap staging is on the serve path)
+        nb = 1 << (max(len(pages), 1) - 1).bit_length()
+        nb = min(max(nb, len(pages)), self.max_pages_per_seq)
+        idx = jnp.asarray(pages + [self.scratch_page] * (nb - len(pages)))
+        length = self.pool.lengths[rid]
+        # zero pad pages / tail rows: channel-wise quant statistics span
+        # the token axes, so scratch/stale garbage would otherwise perturb
+        # the real rows' scales
+        pos = jnp.arange(nb * self.cfg.page_size).reshape(
+            nb, self.cfg.page_size)[None, :, :, None, None]
+        k = jnp.where(pos < length, self.pool.k[:, idx], 0)
+        v = jnp.where(pos < length, self.pool.v[:, idx], 0)
+        stored: dict = {"lengths": length}
         for key, arr in (("k", k), ("v", v)):
             if self.cfg.quantize_offload:
                 stored[key] = ("q8", quantize_kv_device(arr))
@@ -778,13 +943,16 @@ class PagedKVBackend(KVBackend):
         if short > 0:       # cached-but-unreferenced pages yield first
             self.prefix_reclaim(short)
         pages = self.pool.allocate(rid, length)
-        idx = jnp.asarray(pages)
         for key in ("k", "v"):
             item = blob[key]
             if item[0] == "q8":
                 src = dequantize_kv_device(item[1], dtype=jnp.float32)
             else:
                 src = jnp.asarray(item[1])
+            # the blob carries the pow2-padded page bucket; surplus rows
+            # scatter into the scratch page (shape-stable, harmless)
+            idx = jnp.asarray(pages + [self.scratch_page]
+                              * (src.shape[1] - len(pages)))
             arr = getattr(self.pool, key)
             setattr(self.pool, key,
                     arr.at[:, idx].set(src.astype(arr.dtype)))

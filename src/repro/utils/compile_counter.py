@@ -1,0 +1,122 @@
+"""Count XLA backend compilations via jax's monitoring hooks.
+
+The serve path is only fast (and its iteration cost only predictable —
+the property ALISE's EWT estimates lean on) if every dispatch shape the
+engine can emit was compiled during warmup.  ``CompileCounter`` listens
+for the ``/jax/core/compile/backend_compile_duration`` monitoring event,
+which fires exactly once per real backend (XLA) compilation — cache
+hits and pure retraces don't count.  CI uses it two ways:
+
+* ``tests/test_prefill_buckets.py`` warms an engine, replays a
+  mixed-length trace, and asserts the serve-time count is zero;
+* ``bench_e2e`` emits a ``compile_count`` row and raises on any
+  serve-time recompile, which fails the ``--smoke`` gate.
+
+The hook is a jax-internal API (``jax._src.monitoring``); construction
+degrades gracefully (``available = False``) if it disappears, so the
+library never hard-fails on a jax upgrade — only the CI gate test does,
+loudly, via ``require()``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class CompileCounter:
+    """Counts XLA backend compiles observed while attached.
+
+    Usage::
+
+        cc = CompileCounter()            # attaches immediately
+        with cc.expect_no_compiles():    # raises if any compile fires
+            engine.step(t)
+        cc.detach()
+
+    or sample ``cc.count`` manually around a region.
+    """
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.events: List[str] = []
+        self._attached = False
+        self._monitoring = None
+        try:
+            from jax._src import monitoring as _m
+            self._monitoring = _m
+            _m.register_event_duration_secs_listener(self._on_event)
+            self._attached = True
+        except Exception:   # jax internals moved; degrade to unavailable
+            self._monitoring = None
+
+    @property
+    def available(self) -> bool:
+        return self._attached
+
+    def require(self) -> "CompileCounter":
+        """Raise if the monitoring hook could not be attached."""
+        if not self._attached:
+            raise RuntimeError(
+                "jax._src.monitoring duration listener unavailable; the "
+                "compile-count gate cannot run on this jax version")
+        return self
+
+    # -- listener -----------------------------------------------------
+    def _on_event(self, name: str, secs: float, **kw) -> None:
+        if name == _COMPILE_EVENT:
+            self.count += 1
+            self.events.append(f"{name}:{secs * 1e3:.1f}ms")
+
+    # -- API ----------------------------------------------------------
+    def reset(self) -> int:
+        """Zero the counter, returning the count so far."""
+        n = self.count
+        self.count = 0
+        self.events.clear()
+        return n
+
+    def detach(self) -> None:
+        if not self._attached or self._monitoring is None:
+            return
+        m = self._monitoring
+        for name in ("_unregister_event_duration_listener_by_callback",
+                     "unregister_event_duration_listener_by_callback"):
+            fn = getattr(m, name, None)
+            if fn is not None:
+                try:
+                    fn(self._on_event)
+                    self._attached = False
+                    return
+                except Exception:
+                    pass
+        # no unregister API: neuter the callback instead of leaking counts
+        self.count = 0
+        self._on_event = lambda *a, **k: None  # type: ignore[assignment]
+        self._attached = False
+
+    def expect_no_compiles(self, label: str = "") -> "_NoCompileGuard":
+        return _NoCompileGuard(self, label)
+
+
+class _NoCompileGuard:
+    def __init__(self, counter: CompileCounter, label: str) -> None:
+        self.counter = counter
+        self.label = label
+        self._start = 0
+
+    def __enter__(self) -> "_NoCompileGuard":
+        self._start = self.counter.count
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> Optional[bool]:
+        if exc_type is not None:
+            return None
+        fresh = self.counter.count - self._start
+        if fresh:
+            tail = "; ".join(self.counter.events[-fresh:])
+            raise AssertionError(
+                f"{fresh} unexpected XLA compile(s)"
+                + (f" during {self.label}" if self.label else "")
+                + (f" [{tail}]" if tail else ""))
+        return None
