@@ -14,6 +14,13 @@ on vs off.  Asserts bit-identity (on/off and across backends), zero page
 refcount leaks after drain, and (full sizes) a >= 2x TTFT p50 win on
 cache-hit turns.
 
+Plus ``hol/spec_decode/*``: speculative verify-k decoding on a
+regeneration workload — a served batch is re-sent and the radix draft
+source replays the published continuation out of the shared-prefix page
+index (paged backend, prefix cache on).  Times the decode phase only,
+alternating spec-off/on passes; asserts greedy bit-identity, zero
+serve-time recompiles, and (full sizes) >= 1.5x decode tok/s.
+
 Reading the numbers on the 2-core CI box: the paged backend shows the
 chunked TPOT-p99 win clearly (~2x); on the dense backend the smoke model
 is so small that per-dispatch XLA-CPU overhead (full-cache output copies,
@@ -345,6 +352,134 @@ def run_packed_prefill(arch: str = "granite-3-8b") -> dict:
     return results
 
 
+def run_spec_decode(arch: str = "granite-3-8b") -> dict:
+    """Speculative verify-k decoding on a regeneration workload: a batch of
+    requests is served cold (publishing its prompt+output pages into the
+    shared-prefix radix index), then the *same* requests are re-sent — the
+    multi-turn / retry / replay regime where the radix draft source reads
+    the published continuation straight out of the page index and drafts
+    accept at high rate.  Measures the decode phase only (prefill is
+    drained off the clock — the criterion is decode tok/s), alternating
+    spec-off / spec-on passes so host noise lands on both sides, and
+    asserts greedy bit-identity plus zero serve-time recompiles.  Full
+    sizes must show >= 1.5x decode tok/s.
+
+    The model runs float32 here: the random-init smoke checkpoint produces
+    occasional *exact* bf16 logit ties, and an exact tie cannot resolve
+    identically across two differently-shaped XLA programs (the (B,1)
+    decode vs (B,k+1) verify dispatch), which would turn the bit-identity
+    assert into a coin flip.  Real checkpoints don't emit exact ties;
+    float32 makes them vanishingly rare.  Dense-backend spec rows (n-gram
+    drafts, no radix index) live in e2e/spec_decode."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_smoke_config
+    from repro.core.engine import EngineConfig, ServingEngine
+    from repro.core.predictor import OraclePredictor
+    from repro.core.request import Request, reset_request_counter
+    from repro.models.model import Model
+    from repro.utils.compile_counter import CompileCounter
+
+    cfg = dataclasses.replace(get_smoke_config(arch),
+                              param_dtype="float32",
+                              compute_dtype="float32")
+    model = Model(cfg, attn_chunk=32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    n_reqs = pick(8, 4)
+    out_len = pick(128, 16)
+    max_seq = pick(224, 64)
+    passes = pick(4, 1)
+    counter = CompileCounter()
+
+    def mk_reqs(seed, out):
+        reset_request_counter()
+        rng = np.random.default_rng(seed)
+        return [Request(prompt_len=12, arrival_time=0.0, true_out_len=out,
+                        prompt_tokens=rng.integers(
+                            2, cfg.vocab_size, 12).tolist())
+                for _ in range(n_reqs)]
+
+    def mk_engine(spec: bool) -> ServingEngine:
+        eng = ServingEngine(model, params, EngineConfig(
+            max_slots=n_reqs, max_seq_len=max_seq, max_new_tokens=out_len,
+            strategy="alise", quantize_offload=False, prefill_chunk=16,
+            kv_backend="paged", page_size=16, prefix_cache=True,
+            spec_decode=spec, spec_k=3, warmup_compile=True),
+            predictor=OraclePredictor())
+        eng.serve(mk_reqs(999, 4))       # generic shape warmup
+        eng.serve(mk_reqs(0, out_len))   # cold pass: publishes pages
+        eng.serve(mk_reqs(0, out_len))   # re-send: warms cache-hit prefill
+        return eng
+
+    def decode_pass(eng):
+        """One re-send of the published batch; returns decode-phase tok/s.
+        Prefill (and its first token) runs off the clock."""
+        reqs = mk_reqs(0, out_len)
+        t = 0.0
+        for r in reqs:
+            eng.submit(r, now=t)
+        while any(len(r.output_tokens) == 0 for r in reqs):
+            eng.step(t)
+            t += 1e-3
+        t0 = time.perf_counter()
+        while not all(r.done for r in reqs):
+            eng.step(t)
+            t += 1e-3
+        wall = time.perf_counter() - t0
+        dtoks = sum(len(r.output_tokens) for r in reqs) - len(reqs)
+        stats = dict(
+            drafted=sum(r.spec_drafted for r in reqs),
+            accepted=sum(r.spec_accepted for r in reqs),
+            iters=sum(r.spec_iters for r in reqs),
+            toks=sum(len(r.output_tokens) for r in reqs))
+        return dtoks / max(wall, 1e-9), \
+            [list(r.output_tokens) for r in reqs], stats
+
+    eng_off, eng_on = mk_engine(False), mk_engine(True)
+    if counter.available:
+        counter.reset()
+    tok_s = {"off": 0.0, "on": 0.0}
+    tokens_of: dict = {}
+    stats_of: dict = {}
+    for _ in range(passes):          # alternate: noise hits both sides
+        for sname, eng in (("off", eng_off), ("on", eng_on)):
+            tps, toks, stats = decode_pass(eng)
+            tok_s[sname] = max(tok_s[sname], tps)
+            tokens_of[sname] = toks
+            stats_of[sname] = stats
+    if counter.available:
+        assert counter.count == 0, (
+            f"{counter.count} serve-time recompiles during measured "
+            f"spec-decode passes: {counter.events}")
+    assert tokens_of["on"] == tokens_of["off"], \
+        "speculative decoding changed greedy outputs"
+    results: dict = {}
+    for sname in ("off", "on"):
+        st = stats_of[sname]
+        results[sname] = dict(tok_s=tok_s[sname], **st)
+        tpi = st["toks"] / st["iters"] if st["iters"] else 1.0
+        emit(f"hol/spec_decode/regen/{sname}",
+             1e6 / max(tok_s[sname], 1e-9),
+             f"tok_per_s={tok_s[sname]:.1f};drafted={st['drafted']};"
+             f"accepted={st['accepted']};"
+             f"tokens_per_iter={tpi:.2f}")
+    ratio = tok_s["on"] / max(tok_s["off"], 1e-9)
+    emit("hol/spec_decode/regen/speedup", 0.0, f"{ratio:.2f}x")
+    st = stats_of["on"]
+    note(f"[spec_decode] regen: {tok_s['off']:.1f} decode tok/s off -> "
+         f"{tok_s['on']:.1f} on ({ratio:.2f}x); accepted "
+         f"{st['accepted']}/{st['drafted']} drafts, "
+         f"{st['toks'] / max(st['iters'], 1):.2f} tok/iter")
+    if not pick(False, True):      # full sizes: assert the 1.5x win
+        assert ratio >= 1.5, (
+            f"spec decode {ratio:.2f}x < 1.5x decode tok/s on the "
+            f"regeneration workload")
+    return results
+
+
 def run(model: str = "opt-13b") -> dict:
     out = {}
     duration = pick(60.0, 6.0)
@@ -365,6 +500,7 @@ def run(model: str = "opt-13b") -> dict:
     out["prefill_interleave"] = run_prefill_interleave()
     out["shared_prefix"] = run_shared_prefix()
     out["packed_prefill"] = run_packed_prefill()
+    out["spec_decode"] = run_spec_decode()
     return out
 
 

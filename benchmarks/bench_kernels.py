@@ -96,8 +96,9 @@ def run() -> None:
     ones = jnp.ones((Bs,), jnp.int32)
     active = jnp.ones((Bs,), bool)
     step_key = jax.random.PRNGKey(1)
+    rids = jnp.arange(Bs, dtype=jnp.int32)
     fused = jax.jit(lambda p, c, t: model.decode_step_sampled(
-        p, c, t, active, ones, ones, ones * Smax, step_key,
+        p, c, t, active, ones, ones, ones * Smax, rids, step_key,
         max_seq_len=Smax))
     plain = jax.jit(model.decode_step)
 

@@ -33,10 +33,11 @@ from benchmarks.common import note
 
 # rows whose ``derived`` tok_per_s lands in the artifact's headline metrics
 PERF_METRIC_PREFIXES = ("e2e/engine_decode/", "e2e/compile_count/",
+                        "e2e/spec_decode/",
                         "gateway/wall/",
                         "gateway/trace/", "gateway/quality/",
                         "hol/prefill_interleave/", "hol/shared_prefix/",
-                        "hol/packed_prefill/")
+                        "hol/packed_prefill/", "hol/spec_decode/")
 
 
 def _perf_metrics() -> dict:

@@ -58,7 +58,7 @@ from repro.core.scheduler import (DecodeLane, PrefillChunk, PrefillPack,
 from repro.models.model import Model
 from repro.serving.kv_cache import (DenseKVBackend, KVBackendConfig,
                                     PagedKVBackend)
-from repro.serving.sampler import REASONS, sample_and_reason
+from repro.serving.sampler import REASONS, sample_and_reason, token_keys
 
 
 def default_bucket_menu(prefill_chunk: int) -> Tuple[int, ...]:
@@ -143,6 +143,17 @@ class EngineConfig:
                                            # bit-identical on vs off)
     prefix_cache_pages: int = 0            # dense backend: private store
                                            # capacity (0 = one batch's worth)
+    spec_decode: bool = False              # verify-k speculative decoding:
+                                           # each decode lane carries up to
+                                           # spec_k model-free draft tokens
+                                           # (n-gram / radix lookup), scored
+                                           # in one fused dispatch; greedy
+                                           # AND temperature outputs stay
+                                           # bit-identical spec on vs off
+                                           # (needs fused_decode + a
+                                           # chunk-capable model family)
+    spec_k: int = 3                        # draft tokens per lane (paged
+                                           # backend: must be < page_size)
     profile_window: int = 4096             # iter/prefill ring-buffer size
     strategy: str = "alise"
     n_queues: int = 4
@@ -209,7 +220,11 @@ class ServingEngine:
             prefill_chunk=(cfg.prefill_chunk if self._chunked_ok else None),
             iter_token_budget=cfg.iter_token_budget,
             prefill_buckets=buckets, prefill_pack=self._pack_ok,
-            prefill_pack_width=cfg.prefill_pack_width)
+            prefill_pack_width=cfg.prefill_pack_width,
+            decode_width=(cfg.spec_k + 1
+                          if (cfg.spec_decode and cfg.fused_decode
+                              and model.supports_spec_decode())
+                          else 1))
         self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
 
         # --- device state: the pluggable KV backend owns slots + storage
@@ -222,7 +237,9 @@ class ServingEngine:
             prefix_cache=(cfg.prefix_cache and self._chunked_ok),
             prefix_cache_pages=cfg.prefix_cache_pages, seed=cfg.seed,
             prefill_buckets=buckets,
-            prefill_pack_width=cfg.prefill_pack_width)
+            prefill_pack_width=cfg.prefill_pack_width,
+            spec_k=(cfg.spec_k
+                    if cfg.spec_decode and cfg.fused_decode else 0))
         if cfg.kv_backend == "paged":
             if not cfg.fused_decode:
                 raise ValueError("the paged backend only implements the "
@@ -236,6 +253,15 @@ class ServingEngine:
         # shared-prefix cache active?  (needs chunked-prefill support: a hit
         # resumes mid-prompt through the PR-4 resumable-chunk machinery)
         self._prefix_ok = self.kv.prefix is not None
+        # speculative verify-k decode active?  (the backend gates on model
+        # support + spec_k > 0; correctness is draft-agnostic, so the draft
+        # source needs no warmup or persistence)
+        self._spec_ok = self.kv.supports_spec_decode()
+        self._draft = None
+        if self._spec_ok:
+            from repro.serving.draft import make_draft_source
+            self._draft = make_draft_source(
+                self.kv.prefix.index if self._prefix_ok else None)
         if self._prefix_ok:
             # cached-but-unreferenced pages are the lowest KV tier: every
             # page-shortfall path reclaims them before spilling a resident
@@ -259,7 +285,11 @@ class ServingEngine:
         self.iter_times: Deque[tuple] = deque(maxlen=cfg.profile_window)
         self.prefill_times: Deque[tuple] = deque(maxlen=cfg.profile_window)
         self._generated_of: Dict[int, List[int]] = {}
-        self._sample_count = 0                     # host-side sampling key
+        # host-side sampling uses the same per-(rid, token-index) key
+        # derivation as the fused device dispatch, so every code path —
+        # prefill first token, legacy per-slot decode, fused decode,
+        # verify-k — draws the identical key stream for a given token
+        self._sample_base_key = jax.random.PRNGKey(cfg.seed)
         # streaming events: recorded only when a front-end opts in (the
         # gateway sets this), so plain step() drivers that never poll don't
         # accumulate an unbounded buffer
@@ -356,18 +386,17 @@ class ServingEngine:
         self.kv.write_prefill(req.req_id, pcache, S)
         return logits
 
-    def _sample_host(self, logits_row, new_gen: int, new_ctx: int,
+    def _sample_host(self, logits_row, rid: int, new_gen: int, new_ctx: int,
                      true_len: int):
         """One-row host-side sampling + termination for prefill first
         tokens and the legacy per-slot decode path — the same
         ``sample_and_reason`` chain the fused decode step runs on device,
-        so every code path shares one sampling implementation.  Returns
+        with the same per-(request, token-index) key derivation, so every
+        code path draws the identical stream for a given token.  Returns
         ``(token, reason_str)``."""
-        self._sample_count += 1
-        key = jax.random.fold_in(jax.random.PRNGKey(self.cfg.seed),
-                                 self._sample_count)
+        keys = token_keys(self._sample_base_key, [rid], [new_gen - 1])
         tok, reason = sample_and_reason(
-            logits_row[None], key, greedy_sampling=self.cfg.greedy,
+            logits_row[None], keys, greedy_sampling=self.cfg.greedy,
             temp=self.cfg.temperature, top_k=self.cfg.top_k,
             eos_token=self.cfg.eos_token,
             max_new_tokens=self.cfg.max_new_tokens,
@@ -482,7 +511,7 @@ class ServingEngine:
                               replica=self.name, pages=pages)
         if chunk.last and r.generated == 0:   # fresh prefill emits a token
             tok, reason = self._sample_host(
-                logits_row, 1, r.context_len + 1, self._true_len_of(r))
+                logits_row, rid, 1, r.context_len + 1, self._true_len_of(r))
             self._accept_token(r, tok, generated_of, t, reason=reason)
 
     def _exec_prefill_chunk(self, chunk: PrefillChunk, generated_of,
@@ -590,12 +619,11 @@ class ServingEngine:
 
         Warm dispatches only touch state they immediately release: the
         chunk/pack KV lands in a lane (dense: lengths reset by ``clear``,
-        so the garbage rows are never attended; paged: pages freed), the
-        all-inactive decode writes position 0 of free stripes / the
-        scratch page, and the sampler key counter is restored — so a
-        warmed engine is bit-identical to a cold one under greedy
-        sampling (non-greedy runs consume the same key stream either
-        way because the counter snapshot is restored).
+        so the garbage rows are never attended; paged: pages freed), and
+        the all-inactive decode writes position 0 of free stripes / the
+        scratch page — so a warmed engine is bit-identical to a cold one
+        under any sampling (keys derive from (request, token-index), so
+        warm draws never perturb a real request's stream).
         """
         assert not self.sched.live, "warmup() requires an idle engine"
         costs: Dict[int, float] = {}
@@ -603,7 +631,6 @@ class ServingEngine:
         if menu is None and self._chunked_ok and self.cfg.prefill_chunk:
             menu = default_bucket_menu(self.cfg.prefill_chunk)
         warm_rid = -(1 << 30)       # never collides with real request ids
-        sc = self._sample_count
         for b in (menu or ()):
             for rep in range(2):
                 t0 = time.perf_counter()
@@ -612,7 +639,9 @@ class ServingEngine:
                 jax.block_until_ready(logits)
                 costs[b] = time.perf_counter() - t0
                 if rep == 0:
-                    self._sample_host(logits[0], 1, 1, 1)
+                    # keys derive from (rid, index): warm draws touch only
+                    # the warm_rid stream, so no counter to save/restore
+                    self._sample_host(logits[0], warm_rid, 1, 1, 1)
                 self.kv.clear(warm_rid)
             if self._pack_ok and self.kv.supports_pack():
                 for _ in range(2):
@@ -620,7 +649,6 @@ class ServingEngine:
                         self.params, [(warm_rid, [1] * b, 0)], bucket=b)
                     jax.block_until_ready(out)
                     self.kv.clear(warm_rid)
-        self._sample_count = sc
         if menu:
             # swap staging: one offload/upload round-trip per pow2 context
             # bucket.  Payloads are pow2-bucketed (see KVBackend.offload),
@@ -649,10 +677,24 @@ class ServingEngine:
         zeros = np.zeros((B,), np.int32)
         tl = np.full((B,), np.iinfo(np.int32).max, np.int32)
         if self.cfg.fused_decode:
-            self.kv.decode(self.params, tokens, active, zeros, zeros, tl)
+            self.kv.decode(self.params, tokens, active, zeros, zeros, tl,
+                           zeros)
         else:
             jax.block_until_ready(
                 self.kv.decode_logits(self.params, tokens, active))
+        if self._spec_ok:
+            # warm the verify-k shape (the serve path's only other decode
+            # dispatch: one fixed (B, spec_k+1) shape, variable draft
+            # counts ride the n_drafts mask) and record its measured
+            # dispatch seconds so EWT prices speculative iterations right
+            vtok = np.zeros((B, self.cfg.spec_k + 1), np.int32)
+            nd = np.zeros((B,), np.int32)
+            for _ in range(2):
+                t0v = time.perf_counter()
+                self.kv.decode_verify(self.params, vtok, nd, active,
+                                      zeros, zeros, tl, zeros)
+                verify_dt = time.perf_counter() - t0v
+            self.latency.verify_cost = verify_dt
         if costs:
             merged = dict(self.latency.bucket_costs or {})
             merged.update(costs)
@@ -699,6 +741,8 @@ class ServingEngine:
         self.kv.clear(req_id)
         self.host_pool.pop(req_id, None)
         self._lossy_kv.discard(req_id)
+        if self._draft is not None:
+            self._draft.release(req_id)
 
     def _spill(self, victim: Request, t: float, reason: str) -> None:
         """Preempt a resident victim to host DRAM — the single offload
@@ -974,29 +1018,48 @@ class ServingEngine:
             if runnable:
                 t0 = time.perf_counter()
                 B = self.cfg.max_slots
-                tokens = np.zeros((B, 1), np.int32)
+                k1 = (self.cfg.spec_k + 1) if self._spec_ok else 1
+                tokens = np.zeros((B, k1), np.int32)
+                n_drafts = np.zeros((B,), np.int32)
                 active = np.zeros((B,), bool)
-                new_gen = np.zeros((B,), np.int32)
-                new_ctx = np.zeros((B,), np.int32)
+                base_gen = np.zeros((B,), np.int32)
+                base_ctx = np.zeros((B,), np.int32)
                 true_len = np.full((B,), np.iinfo(np.int32).max, np.int32)
+                rids = np.zeros((B,), np.int32)
                 slot_of = {}           # pinned: a mid-loop spill may evict
                 for r in runnable:
                     slot = self.kv.slot_of(r.req_id)
                     slot_of[r.req_id] = slot
-                    prev = (generated_of[r.req_id][-1]
-                            if generated_of[r.req_id] else r.prompt_tokens[-1])
+                    gen = generated_of[r.req_id]
+                    prev = gen[-1] if gen else r.prompt_tokens[-1]
                     tokens[slot, 0] = prev
+                    if self._spec_ok:
+                        drafts = self._draft.propose(
+                            r.req_id, list(r.prompt_tokens) + gen,
+                            self.cfg.spec_k)
+                        for i, d in enumerate(drafts):
+                            tokens[slot, 1 + i] = d
+                        n_drafts[slot] = len(drafts)
                     active[slot] = True
-                    new_gen[slot] = r.generated + 1
-                    new_ctx[slot] = r.context_len + 1
+                    base_gen[slot] = r.generated
+                    base_ctx[slot] = r.context_len
+                    rids[slot] = r.req_id
                     if self.cfg.respect_true_len:
                         true_len[slot] = r.true_out_len
                     r.state = RequestState.RUNNING
-                if self.cfg.fused_decode:
+                if self._spec_ok:
+                    # one verify-k dispatch: score the fed token plus all
+                    # drafts, accept the longest exact-match run, sample the
+                    # bonus token, terminate — one host sync for up to
+                    # spec_k+1 emitted tokens per lane
+                    s, n_emit, reasons = self.kv.decode_verify(
+                        self.params, tokens, n_drafts, active, base_gen,
+                        base_ctx, true_len, rids)
+                elif self.cfg.fused_decode:
                     # one dispatch: decode + sample + terminate on device
                     toks, reasons = self.kv.decode(
-                        self.params, tokens, active, new_gen, new_ctx,
-                        true_len)
+                        self.params, tokens, active, base_gen + 1,
+                        base_ctx + 1, true_len, rids)
                 else:
                     logits = self.kv.decode_logits(self.params, tokens,
                                                    active)
@@ -1004,10 +1067,17 @@ class ServingEngine:
                 dt = time.perf_counter() - t0
                 self.iter_times.append((t0, ctx_tokens, len(runnable), dt))
                 if self.bus is not None:
+                    extra = {}
+                    if self._spec_ok:
+                        extra = dict(
+                            drafted=int(n_drafts.sum()),
+                            accepted=int(sum(
+                                max(int(n_emit[sl]) - 1, 0)
+                                for sl in slot_of.values())))
                     self.bus.emit("decode_iter", t=self._span_t(now(), t0),
                                   dur=dt, replica=self.name,
                                   batch=len(runnable),
-                                  ctx_tokens=ctx_tokens)
+                                  ctx_tokens=ctx_tokens, **extra)
                 for r in runnable:
                     # the token must be accepted even if a neighbor's
                     # mem.grow() spill offloaded r mid-loop: this decode
@@ -1017,14 +1087,25 @@ class ServingEngine:
                     # "last sampled token's KV not yet written" invariant
                     # intact for the host-pool copy
                     slot = slot_of[r.req_id]
-                    if self.cfg.fused_decode:
+                    if self._spec_ok:
+                        m = int(n_emit[slot])
+                        r.spec_iters += 1
+                        r.spec_drafted += int(n_drafts[slot])
+                        r.spec_accepted += max(m - 1, 0)
+                        for i in range(m):
+                            last = i == m - 1
+                            self._accept_token(
+                                r, int(s[slot, i]), generated_of, now(),
+                                reason=(REASONS[int(reasons[slot])]
+                                        if last else ""))
+                    elif self.cfg.fused_decode:
                         self._accept_token(r, int(toks[slot]), generated_of,
                                            now(),
                                            reason=REASONS[int(reasons[slot])])
                     else:
                         tok, reason = self._sample_host(
-                            logits[slot], r.generated + 1, r.context_len + 1,
-                            self._true_len_of(r))
+                            logits[slot], r.req_id, r.generated + 1,
+                            r.context_len + 1, self._true_len_of(r))
                         self._accept_token(r, tok, generated_of, now(),
                                            reason=reason)
                 ran_any = True

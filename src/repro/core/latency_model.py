@@ -29,6 +29,12 @@ class LatencyModel:
     # (engine warmup fills this); when present, a bucketed chunk is priced
     # at its *dispatch* cost — the whole padded shape — instead of its raw
     # span, so EWT sees the same iteration times the engine will produce.
+    verify_cost: Optional[float] = None
+    # measured seconds of one fused verify-k decode dispatch (engine warmup
+    # fills this when speculative decoding is on); remaining-time estimates
+    # with ``tokens_per_iter > 1`` price each iteration at no less than
+    # this, so a lane that verifies k+1 positions per dispatch is not
+    # priced as if a wide dispatch were free.
 
     def prefill_time(self, s: int) -> float:
         return s * self.t0
@@ -107,17 +113,25 @@ class LatencyModel:
         return self.prefill_time(s) + self.decode_time(s, n)
 
     def remaining_time(self, s: int, generated: int, predicted: int,
-                       prefilled, chunk: Optional[int] = None) -> float:
+                       prefilled, chunk: Optional[int] = None,
+                       tokens_per_iter: float = 1.0) -> float:
         """Estimated remaining execution time (SRTF key).
 
         ``prefilled`` is the count of prompt tokens whose KV is already
         materialized (partially-prefilled jobs owe only their remaining
         chunks); legacy bool callers still work — True means fully
-        prefilled, False means cold."""
+        prefilled, False means cold.  ``tokens_per_iter`` is the request's
+        measured speculative emit rate (accepted drafts + 1 per verify-k
+        dispatch): remaining tokens divide into that many fewer
+        iterations, each priced at no less than the measured
+        ``verify_cost`` dispatch time."""
         if isinstance(prefilled, bool):
             prefilled = s if prefilled else 0
         rem_tokens = max(predicted - generated, 1)
-        t = rem_tokens * self.decode_iter_time(s + generated)
+        per_iter = self.decode_iter_time(s + generated)
+        if tokens_per_iter > 1.0 and self.verify_cost:
+            per_iter = max(per_iter, self.verify_cost)
+        t = (rem_tokens / max(tokens_per_iter, 1.0)) * per_iter
         t += self.prefill_time_remaining(s, prefilled, chunk)
         return t
 

@@ -79,6 +79,10 @@ class Request:
     swap_in_bytes: float = 0.0
     swap_out_bytes: float = 0.0
     recompute_tokens: int = 0
+    # --- speculative (verify-k) decode accounting ---
+    spec_iters: int = 0                    # verify-k dispatches run
+    spec_drafted: int = 0                  # draft tokens proposed
+    spec_accepted: int = 0                 # draft tokens accepted
 
     # ------------------------------------------------------------------
     @property
@@ -105,6 +109,15 @@ class Request:
     def remaining_tokens_pred(self) -> int:
         pred = self.predicted_len if self.predicted_len is not None else 128
         return max(pred - self.generated, 1)
+
+    def spec_tokens_per_iter(self) -> float:
+        """Measured decode tokens emitted per verify-k iteration (the
+        guaranteed sample plus accepted drafts).  1.0 before any verify-k
+        dispatch ran — the conservative non-speculative rate — so EWT
+        estimates only speed up once acceptance is actually observed."""
+        if self.spec_iters <= 0:
+            return 1.0
+        return 1.0 + self.spec_accepted / self.spec_iters
 
     @property
     def done(self) -> bool:
@@ -145,6 +158,9 @@ def reset_runtime_state(req: Request) -> None:
     req.swap_in_bytes = 0.0
     req.swap_out_bytes = 0.0
     req.recompute_tokens = 0
+    req.spec_iters = 0
+    req.spec_drafted = 0
+    req.spec_accepted = 0
 
 
 def reset_request_counter():

@@ -73,6 +73,10 @@ class SchedulerConfig:
                                      # short requests into one PrefillPack
                                      # dispatch (segment rows, masked)
     prefill_pack_width: int = 4      # fixed segment count per pack dispatch
+    decode_width: int = 1            # tokens a decode lane may emit per
+                                     # iteration (spec_k + 1 with verify-k
+                                     # speculative decoding on); each lane
+                                     # charges this against the token budget
 
 
 @dataclass
@@ -129,8 +133,13 @@ class PrefillPack:
 
 @dataclass
 class DecodeLane:
-    """One decode step for a fully-prefilled, HBM-resident request."""
+    """One decode step for a fully-prefilled, HBM-resident request.
+
+    ``width`` is the lane's speculative token width (1 + draft tokens the
+    verify-k dispatch scores): the budget charge, since the dispatch burns
+    compute for every scored position whether or not drafts accept."""
     req: Request
+    width: int = 1
 
 
 WorkItem = Union[PrefillChunk, PrefillPack, DecodeLane]
@@ -224,9 +233,16 @@ class Scheduler:
         else:
             prefilled = min(req.cached_prefix_hint,
                             max(req.prefill_target - 1, 0))
+        # verify-k: a request's measured accept rate turns into fewer
+        # remaining iterations (1 + accepted drafts per dispatch), so the
+        # speculative SRTF/EWT order sees acceptance-friendly requests as
+        # the shorter jobs they really are
+        tpi = (req.spec_tokens_per_iter()
+               if self.cfg.decode_width > 1 else 1.0)
         return self.latency.remaining_time(
             req.prompt_len, req.generated, req.remaining_tokens_pred(),
-            prefilled=prefilled, chunk=self.cfg.prefill_chunk)
+            prefilled=prefilled, chunk=self.cfg.prefill_chunk,
+            tokens_per_iter=tpi)
 
     def _clamp_level(self, req: Request, lvl: int) -> int:
         """SLO mapping: interactive jobs live in the top bands (§gateway)."""
@@ -423,9 +439,10 @@ class Scheduler:
                 left -= chunk.cost
                 plan.used_tokens += chunk.cost
             else:
-                plan.items.append(DecodeLane(r))
-                left -= 1
-                plan.used_tokens += 1
+                lane = DecodeLane(r, width=self.cfg.decode_width)
+                plan.items.append(lane)
+                left -= lane.width
+                plan.used_tokens += lane.width
         # admit new arrivals into free slots, FCFS order, memory permitting
         n_active = len(running)
         for r in queued:
@@ -499,9 +516,10 @@ class Scheduler:
                 left -= chunk.cost
                 plan.used_tokens += chunk.cost
             else:
-                plan.items.append(DecodeLane(r))
-                left -= 1
-                plan.used_tokens += 1
+                lane = DecodeLane(r, width=self.cfg.decode_width)
+                plan.items.append(lane)
+                left -= lane.width
+                plan.used_tokens += lane.width
 
         max_resident = self.cfg.max_resident or self.cfg.max_batch
         n_resident = sum(1 for r in live if self.mem.resident_hbm(r))
@@ -555,9 +573,10 @@ class Scheduler:
                 if (r.req_id not in planned
                         and self.mem.location_of(r) == KVLocation.HBM
                         and r.prefill_pending == 0):
-                    plan.items.append(DecodeLane(r))
-                    plan.used_tokens += 1
-                    left -= 1
+                    lane = DecodeLane(r, width=self.cfg.decode_width)
+                    plan.items.append(lane)
+                    plan.used_tokens += lane.width
+                    left -= lane.width
                     n_lanes += 1
 
         # HoL-blocking detection: a memory-blocked candidate whose SRTF

@@ -70,6 +70,14 @@ class SimConfig:
                                            # prefill cost)
     prefix_cache_pages: int = 4096         # index capacity (pages)
     prefix_page_size: int = 16
+    spec_decode: bool = False              # verify-k speculative decoding:
+                                           # lanes charge spec_k+1 budget
+                                           # tokens and emit 1 + accepted
+                                           # drafts per iteration
+    spec_k: int = 3                        # draft tokens per lane
+    spec_accept_rate: float = 0.6          # modeled per-draft accept
+                                           # probability (deterministic
+                                           # fractional accumulator, no RNG)
     drain_timeout: float = 600.0       # extra time after last arrival
     latency_model: Optional[LatencyModel] = None
     pretrain_requests: int = 512       # history corpus for predictor warmup
@@ -174,8 +182,13 @@ class ServingSimulator:
             iter_token_budget=cfg.iter_token_budget,
             prefill_buckets=cfg.prefill_buckets,
             prefill_pack=cfg.prefill_pack,
-            prefill_pack_width=cfg.prefill_pack_width)
+            prefill_pack_width=cfg.prefill_pack_width,
+            decode_width=(cfg.spec_k + 1 if cfg.spec_decode else 1))
         self.sched = Scheduler(sched_cfg, self.predictor, self.latency, self.mem)
+        # per-request fractional accepted-draft accumulator: the modeled
+        # accept rate emits extra tokens deterministically (no RNG), so
+        # repeated runs are bit-identical
+        self._spec_frac: Dict[int, float] = {}
         self.sched.bus = self.bus
         self.sched.replica = self.replica
         self.pred_overhead = 0.0
@@ -338,17 +351,48 @@ class ServingSimulator:
         triggers the strategy's preemption path."""
         finishing = [c.req for c in plan.chunks if c.last]
         recompute_ids = {r.req_id for r in finishing if r.generated > 0}
+        lanes = {it.req.req_id: it for it in plan.items
+                 if isinstance(it, DecodeLane)}
         for r in finishing + plan.decodes:
             if self.mem.location_of(r) != KVLocation.HBM:
                 continue    # became an OOM victim earlier this iteration
+            n_tok = 0
             if r.req_id in recompute_ids:
                 pass        # recompute rebuilds KV; no new token emitted
             else:
+                n_tok = 1
+                lane = lanes.get(r.req_id)
+                if (self.cfg.spec_decode and lane is not None
+                        and lane.width > 1):
+                    # modeled verify-k: each lane drafts width-1 tokens and
+                    # accepts at the configured rate, accumulated
+                    # fractionally so emission is deterministic
+                    drafted = lane.width - 1
+                    frac = (self._spec_frac.get(r.req_id, 0.0)
+                            + self.cfg.spec_accept_rate * drafted)
+                    extra = min(int(frac), drafted)
+                    self._spec_frac[r.req_id] = frac - extra
+                    cap = min(r.true_out_len,
+                              self.sched.cfg.max_new_tokens)
+                    extra = min(extra, max(cap - r.generated - 1, 0))
+                    r.spec_iters += 1
+                    r.spec_drafted += drafted
+                    r.spec_accepted += extra
+                    n_tok = 1 + extra
+            oom_lost = False
+            for _ in range(n_tok):
                 r.generated += 1
                 r.prefilled = r.prompt_len + max(r.generated - 1, 0)
                 if r.first_token_time is None:
                     r.first_token_time = now
-            if not self.mem.grow(r):
+                if not self.mem.grow(r):
+                    self._handle_oom(r, now)
+                    if self.mem.location_of(r) != KVLocation.HBM:
+                        oom_lost = True
+                        break
+            if oom_lost:
+                continue
+            if n_tok == 0 and not self.mem.grow(r):
                 self._handle_oom(r, now)
                 if self.mem.location_of(r) != KVLocation.HBM:
                     continue
@@ -356,6 +400,7 @@ class ServingSimulator:
             if (r.generated >= r.true_out_len
                     or r.generated >= self.sched.cfg.max_new_tokens):
                 self.sched.note_finished(r, now)
+                self._spec_frac.pop(r.req_id, None)
                 if self.bus is not None:
                     reason = ("true_len" if r.generated >= r.true_out_len
                               else "length")

@@ -74,7 +74,8 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
           target_tpot: float = 0.05, trace_out: Optional[str] = None,
           prefill_buckets=None, prefill_pack: bool = False,
           prefill_pack_width: int = 4,
-          warmup: bool = False, chunk_attn: str = "masked"):
+          warmup: bool = False, chunk_attn: str = "masked",
+          spec_decode: bool = False, spec_k: int = 3):
     cfg = get_smoke_config(arch)
     model = Model(cfg, attn_chunk=32, remat=False,
                   chunk_attn_impl=chunk_attn)
@@ -90,6 +91,7 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
         prefix_cache=prefix_cache,
         prefill_buckets=prefill_buckets, prefill_pack=prefill_pack,
         prefill_pack_width=prefill_pack_width,
+        spec_decode=spec_decode, spec_k=spec_k,
         warmup_compile=warmup), predictor=predictor)
     if trace_out:
         from repro.serving.observability import EventBus
@@ -137,7 +139,8 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                   metrics_interval: Optional[float] = None,
                   prefill_buckets=None, prefill_pack: bool = False,
                   prefill_pack_width: int = 4,
-                  warmup: bool = False, chunk_attn: str = "masked"):
+                  warmup: bool = False, chunk_attn: str = "masked",
+                  spec_decode: bool = False, spec_k: int = 3):
     """Replay a synthetic Poisson trace through the online Gateway and print
     per-class TTFT/E2E percentiles (and SLO attainment when targets are
     set).  ``virtual_dt=None`` serves in wall clock; ``pump`` selects the
@@ -158,6 +161,7 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
             prefix_cache=prefix_cache,
             prefill_buckets=prefill_buckets, prefill_pack=prefill_pack,
             prefill_pack_width=prefill_pack_width,
+            spec_decode=spec_decode, spec_k=spec_k,
             warmup_compile=warmup), predictor=predictor)
 
     reset_request_counter()
@@ -244,6 +248,16 @@ def main():
                     help="chunk-attention implementation: dense masked "
                          "attention or the flash_prefill Pallas "
                          "prefix-KV kernel")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="verify-k speculative decoding: model-free "
+                         "n-gram/prefix-index drafts scored k+1 positions "
+                         "at a time in one fused dispatch; outputs are "
+                         "bit-identical to plain decoding (greedy and "
+                         "sampled). Pair with --warmup so every k-shape "
+                         "is pre-compiled")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="draft tokens per decode lane per verify-k "
+                         "dispatch (paged backend: must be < page size)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="cross-request shared-prefix KV cache: repeated "
                          "prompt prefixes (multi-turn chats, shared "
@@ -316,6 +330,7 @@ def main():
                       prefill_pack_width=args.prefill_pack_width,
                       warmup=args.warmup,
                       chunk_attn=args.chunk_attn,
+                      spec_decode=args.spec_decode, spec_k=args.spec_k,
                       trace_out=args.trace_out,
                       metrics_interval=args.metrics_interval)
     else:
@@ -329,6 +344,7 @@ def main():
               prefill_buckets=buckets, prefill_pack=args.prefill_pack,
               prefill_pack_width=args.prefill_pack_width,
               warmup=args.warmup, chunk_attn=args.chunk_attn,
+              spec_decode=args.spec_decode, spec_k=args.spec_k,
               target_tpot=args.target_tpot, trace_out=args.trace_out)
 
 

@@ -468,7 +468,8 @@ class Model:
         return logits.astype(jnp.float32), new_cache
 
     def decode_step_sampled(self, params, cache, tokens, active, new_gen,
-                            new_ctx, true_len, key, *, greedy_sampling=True,
+                            new_ctx, true_len, rids, base_key, *,
+                            greedy_sampling=True,
                             temp: float = 1.0, top_k: int = 0,
                             eos_token: int = 1, max_new_tokens: int = 128,
                             max_seq_len: int = 256):
@@ -479,21 +480,116 @@ class Model:
         step, so the engine syncs one small ``(tokens, reasons)`` pair per
         iteration instead of one ``int(jnp.argmax(...))`` per slot.
 
+        ``rids`` (B,) int32 + ``base_key`` derive each lane's sampling key
+        via :func:`sampler.token_keys` — the token being sampled has
+        generation index ``new_gen - 1``, so the stream per (request,
+        index) is batch-composition- and speculation-independent.
+
         ``active`` (B,) bool masks slots with no live request: their cache
         ``lengths`` do not advance and their reason is forced to 0.
         Returns ``(sampled (B,) int32, reason (B,) int32, new_cache)``.
         """
-        from repro.serving.sampler import sample_and_reason
+        from repro.serving.sampler import sample_and_reason, token_keys
         logits, cache = self.decode_step(params, cache, tokens)
         lengths = cache["lengths"]
         cache = {**cache, "lengths": jnp.where(active, lengths, lengths - 1)}
+        keys = None if greedy_sampling else token_keys(
+            base_key, rids, new_gen - 1)
         tok, reason = sample_and_reason(
-            logits, key, greedy_sampling=greedy_sampling, temp=temp,
+            logits, keys, greedy_sampling=greedy_sampling, temp=temp,
             top_k=top_k, eos_token=eos_token, max_new_tokens=max_new_tokens,
             max_seq_len=max_seq_len, new_gen=new_gen, new_ctx=new_ctx,
             true_len=true_len)
         reason = jnp.where(active, reason, 0)
         return tok, reason, cache
+
+    # -------------------------------------------------- speculative decode
+    def supports_spec_decode(self) -> bool:
+        """Verify-k decode shares chunked prefill's requirements: an
+        attention-family decoder-only stack, where scoring k+1 positions
+        against cached KV is exactly a (tiny) prefill chunk."""
+        return self.supports_chunked_prefill()
+
+    def decode_verify(self, params, cache, tokens):
+        """Score K1 = k+1 decode positions per lane in one dispatch.
+
+        ``tokens``: (B, K1) int32 — column 0 is the lane's previous sampled
+        token, columns 1..k its draft tokens.  KV for ``tokens[:, i]`` is
+        written at index ``lengths + i``; attention is the same masked
+        chunk attention as resumable prefill (causal over ``q_pos =
+        lengths + i``), so position i sees exactly the context the
+        sequential path would have.  Returns ``(logits (B, K1, V) f32,
+        new_cache)`` with ``lengths`` unchanged — the caller commits
+        accepted positions by advancing ``lengths``; rejected positions'
+        KV stays past the watermark where nothing ever attends to it (and
+        the next dispatch overwrites it).
+        """
+        cfg = self.cfg
+        if not self.supports_spec_decode():
+            raise ValueError(f"verify-k decode unsupported for family="
+                             f"{cfg.family} enc_dec={cfg.is_encoder_decoder}")
+        lengths = cache["lengths"]
+        B, K1 = tokens.shape
+        Smax = cache["k"].shape[2]
+        x = self._embed_in(params, tokens)
+        x = shard_hint(x, "batch", None, None)
+        q_pos = lengths[:, None] + jnp.arange(K1)[None, :]    # (B, K1)
+        kv_pos = jnp.broadcast_to(jnp.arange(Smax)[None, :], (B, Smax))
+        rows = jnp.arange(B)[:, None]
+        ffn_kind = cfg.ffn_kind(0)
+
+        def body(h, inp):
+            p_l, k_l, v_l = inp                   # (B, Smax, KVH, hd)
+            h1 = L.apply_norm(cfg, p_l["ln1"], h)
+            q, k, v = L._project_qkv(cfg, p_l["attn"], h1, q_pos)
+            k_l = k_l.at[rows, q_pos].set(k.astype(k_l.dtype))
+            v_l = v_l.at[rows, q_pos].set(v.astype(v_l.dtype))
+            attn = self._chunk_attn(q, k_l, v_l, q_pos, kv_pos, lengths)
+            h = h + attn.reshape(B, K1, -1) @ p_l["attn"]["wo"]
+            h, _ = _apply_ffn_part(cfg, p_l, h, ffn_kind, self.moe_groups)
+            return h, (k_l, v_l)
+
+        x, (k_new, v_new) = lax.scan(body, x, (params["layers"],
+                                               cache["k"], cache["v"]))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = self._logits(params, x)                      # (B, K1, V)
+        return logits.astype(jnp.float32), {**cache, "k": k_new, "v": v_new}
+
+    def decode_verify_sampled(self, params, cache, tokens, n_drafts, active,
+                              base_gen, base_ctx, true_len, rids, base_key,
+                              *, greedy_sampling=True, temp: float = 1.0,
+                              top_k: int = 0, eos_token: int = 1,
+                              max_new_tokens: int = 128,
+                              max_seq_len: int = 256):
+        """Fused verify-k iteration on the dense backend: score k+1
+        positions, sample each with its own per-token key, accept the
+        longest exact-match draft prefix, and resolve termination — one
+        dispatch, one host sync.
+
+        ``base_gen``/``base_ctx``: (B,) generated count / context length
+        *before* this dispatch.  Accepted lanes advance ``lengths`` by
+        ``n_emit`` (the last emitted token's KV stays unwritten — the next
+        dispatch feeds it, same invariant as plain decode); inactive or
+        fully-rejected garbage stays past the watermark.  Returns
+        ``(samples (B, K1), n_emit (B,), reason (B,), new_cache)``.
+        """
+        from repro.serving.sampler import token_keys, verify_and_reason
+        logits, cache = self.decode_verify(params, cache, tokens)
+        B, K1 = tokens.shape
+        keys = None
+        if not greedy_sampling:
+            rr = jnp.repeat(jnp.asarray(rids, jnp.int32), K1)
+            ii = (jnp.asarray(base_gen, jnp.int32)[:, None]
+                  + jnp.arange(K1, dtype=jnp.int32)[None, :]).reshape(-1)
+            keys = token_keys(base_key, rr, ii).reshape(B, K1, -1)
+        s, n_emit, reason = verify_and_reason(
+            logits, tokens, jnp.asarray(n_drafts, jnp.int32), keys, active,
+            greedy_sampling=greedy_sampling, temp=temp, top_k=top_k,
+            eos_token=eos_token, max_new_tokens=max_new_tokens,
+            max_seq_len=max_seq_len, base_gen=base_gen, base_ctx=base_ctx,
+            true_len=true_len)
+        cache = {**cache, "lengths": cache["lengths"] + n_emit}
+        return s, n_emit, reason, cache
 
     # ------------------------------------------------------ chunked prefill
     def supports_chunked_prefill(self) -> bool:
@@ -821,26 +917,111 @@ class Model:
 
     def paged_decode_step_sampled(self, params, kv, tokens, block_tables,
                                   lengths, write_page, write_off, active,
-                                  new_gen, new_ctx, true_len, key, *,
-                                  attn_impl: str = "gather",
+                                  new_gen, new_ctx, true_len, rids, base_key,
+                                  *, attn_impl: str = "gather",
                                   interpret: bool = True,
                                   greedy_sampling=True, temp: float = 1.0,
                                   top_k: int = 0, eos_token: int = 1,
                                   max_new_tokens: int = 128,
                                   max_seq_len: int = 256):
         """Paged twin of :meth:`decode_step_sampled`: one fused dispatch
-        returning ``(sampled, reason, new_kv)``."""
-        from repro.serving.sampler import sample_and_reason
+        returning ``(sampled, reason, new_kv)``.  Per-lane sampling keys
+        derive from ``(rids, new_gen - 1)`` exactly as on the dense path."""
+        from repro.serving.sampler import sample_and_reason, token_keys
         logits, kv = self.paged_decode_step(
             params, kv, tokens, block_tables, lengths, write_page, write_off,
             attn_impl=attn_impl, interpret=interpret)
+        keys = None if greedy_sampling else token_keys(
+            base_key, rids, new_gen - 1)
         tok, reason = sample_and_reason(
-            logits, key, greedy_sampling=greedy_sampling, temp=temp,
+            logits, keys, greedy_sampling=greedy_sampling, temp=temp,
             top_k=top_k, eos_token=eos_token, max_new_tokens=max_new_tokens,
             max_seq_len=max_seq_len, new_gen=new_gen, new_ctx=new_ctx,
             true_len=true_len)
         reason = jnp.where(active, reason, 0)
         return tok, reason, kv
+
+    def paged_decode_verify(self, params, kv, tokens, block_tables, lengths,
+                            write_page, write_off):
+        """Paged twin of :meth:`decode_verify`: K1 positions per lane land
+        in the page pool at host-computed ``(write_page, write_off)``
+        destinations (real tail pages in place; positions past the last
+        allocated page on the lane's private scratch page, which the
+        backend promotes into the page table only on accept).
+
+        ``block_tables``: (B, max_pages + 1) with the lane scratch page
+        appended right after the lane's real pages, so a scratch-resident
+        position's gather index equals its logical position; stale scratch
+        offsets sit past every query position and are causally masked.
+        Attention is always the gather form — the Pallas paged kernel is
+        single-query — which keeps the verify math bit-identical to the
+        dense chunk attention.  Returns ``(logits (B, K1, V) f32, new_kv)``.
+        """
+        cfg = self.cfg
+        if not (self.supports_spec_decode() and self.supports_paged()):
+            raise ValueError(f"paged verify-k unsupported for family="
+                             f"{cfg.family} enc_dec={cfg.is_encoder_decoder}")
+        B, K1 = tokens.shape
+        page = kv["k"].shape[2]
+        n_pages = block_tables.shape[1]
+        Smax = n_pages * page
+        x = self._embed_in(params, tokens)
+        x = shard_hint(x, "batch", None, None)
+        q_pos = lengths[:, None] + jnp.arange(K1)[None, :]
+        kv_pos = jnp.broadcast_to(jnp.arange(Smax)[None, :], (B, Smax))
+        ffn_kind = cfg.ffn_kind(0)
+
+        def body(h, inp):
+            p_l, k_pool, v_pool = inp
+            h1 = L.apply_norm(cfg, p_l["ln1"], h)
+            q, k, v = L._project_qkv(cfg, p_l["attn"], h1, q_pos)
+            k_pool = k_pool.at[write_page, write_off].set(
+                k.astype(k_pool.dtype))
+            v_pool = v_pool.at[write_page, write_off].set(
+                v.astype(v_pool.dtype))
+            kg = k_pool[block_tables].reshape(B, Smax, *k_pool.shape[2:])
+            vg = v_pool[block_tables].reshape(B, Smax, *v_pool.shape[2:])
+            attn = self._chunk_attn(q, kg, vg, q_pos, kv_pos, lengths)
+            h = h + attn.reshape(B, K1, -1) @ p_l["attn"]["wo"]
+            h, _ = _apply_ffn_part(cfg, p_l, h, ffn_kind, self.moe_groups)
+            return h, (k_pool, v_pool)
+
+        x, (k_new, v_new) = lax.scan(body, x,
+                                     (params["layers"], kv["k"], kv["v"]))
+        x = L.apply_norm(cfg, params["final_norm"], x)
+        logits = self._logits(params, x)
+        return logits.astype(jnp.float32), {"k": k_new, "v": v_new}
+
+    def paged_decode_verify_sampled(self, params, kv, tokens, block_tables,
+                                    lengths, write_page, write_off, n_drafts,
+                                    active, base_gen, base_ctx, true_len,
+                                    rids, base_key, *, greedy_sampling=True,
+                                    temp: float = 1.0, top_k: int = 0,
+                                    eos_token: int = 1,
+                                    max_new_tokens: int = 128,
+                                    max_seq_len: int = 256):
+        """Fused paged verify-k iteration: score + sample + accept +
+        terminate, one dispatch.  Length bookkeeping is host-side on the
+        paged backend, so this returns ``(samples, n_emit, reason,
+        new_kv)`` and the backend commits page-table state after the sync
+        (rollback = simply not advancing the pool length)."""
+        from repro.serving.sampler import token_keys, verify_and_reason
+        logits, kv = self.paged_decode_verify(
+            params, kv, tokens, block_tables, lengths, write_page, write_off)
+        B, K1 = tokens.shape
+        keys = None
+        if not greedy_sampling:
+            rr = jnp.repeat(jnp.asarray(rids, jnp.int32), K1)
+            ii = (jnp.asarray(base_gen, jnp.int32)[:, None]
+                  + jnp.arange(K1, dtype=jnp.int32)[None, :]).reshape(-1)
+            keys = token_keys(base_key, rr, ii).reshape(B, K1, -1)
+        s, n_emit, reason = verify_and_reason(
+            logits, tokens, jnp.asarray(n_drafts, jnp.int32), keys, active,
+            greedy_sampling=greedy_sampling, temp=temp, top_k=top_k,
+            eos_token=eos_token, max_new_tokens=max_new_tokens,
+            max_seq_len=max_seq_len, base_gen=base_gen, base_ctx=base_ctx,
+            true_len=true_len)
+        return s, n_emit, reason, kv
 
     def _decode_hybrid(self, params, cache, x, lengths):
         cfg = self.cfg

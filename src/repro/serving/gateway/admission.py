@@ -45,6 +45,12 @@ from typing import Optional
 from repro.core.request import Request, SLOClass
 
 
+# finite stand-in for +inf in release_slack: no-target requests sort after
+# every targeted one, but the prefix-hint credit can still differentiate them
+# (inf - x == inf would erase it)
+_NO_TARGET_BASE = 1e12
+
+
 class Verdict(enum.Enum):
     ADMIT = "admit"
     DEFER = "defer"
@@ -75,6 +81,13 @@ class AdmissionConfig:
                                            # headroom first (FIFO among
                                            # no-target requests); "fifo"
                                            # keeps strict arrival order
+    prefix_hint_weight: float = 0.0        # release-priority credit per token
+                                           # of a deferred request's
+                                           # cached_prefix_hint: a held
+                                           # request whose shared prefix got
+                                           # published while it was parked
+                                           # releases ahead of colder peers
+                                           # (0 = cache-oblivious release)
 
     def __post_init__(self):
         if self.defer_high_watermark is not None \
@@ -163,12 +176,17 @@ class AdmissionController:
         """Predicted TTFT headroom for a deferred request:
         ``target - slack * expected_ttft``.  Smaller = more urgent, so the
         gateway releases ascending-slack (the request closest to missing its
-        target that can still make it goes first); requests without a target
-        sort to +inf and fall back to arrival order among themselves."""
+        target that can still make it goes first).  Requests without a
+        target sort after every targeted one; among themselves a warm
+        shared-prefix hit (``cached_prefix_hint``, weighted by
+        ``prefix_hint_weight``) releases first — its prefill is cheap *right
+        now*, before the cached pages age out — with arrival order as the
+        tie-break."""
         target = self.cfg.ttft_target(req.slo_class)
+        hint = self.cfg.prefix_hint_weight * req.cached_prefix_hint
         if target is None or expected_ttft is None:
-            return float("inf")
-        return target - self.cfg.ttft_slack * expected_ttft
+            return _NO_TARGET_BASE - hint
+        return target - self.cfg.ttft_slack * expected_ttft - hint
 
     def may_release_ttft(self, req: Request, expected_ttft: float,
                          intrinsic_ttft: float) -> bool:

@@ -357,10 +357,21 @@ class Gateway:
         """Candidates in release order: ascending predicted slack (the
         request with the least TTFT headroom that can still make its target
         dispatches first), arrival order as tie-break and as the whole
-        order when no TTFT target is configured or release_order="fifo"."""
+        order when no TTFT target is configured or release_order="fifo".
+        With ``prefix_hint_weight`` set, each parked request's shared-prefix
+        hint is re-probed first — a prefix published since the defer verdict
+        makes that request's prefill cheap *now*, so it releases ahead of
+        colder peers before the cached pages age out."""
         cfg = self.admission.cfg
+        if cfg.release_order == "slack" and cfg.prefix_hint_weight > 0:
+            alive = self.router.alive_drivers()
+            for r in self.deferred:
+                r.cached_prefix_hint = max(
+                    (d.engine.prefix_probe(r.prompt_tokens) for d in alive
+                     if hasattr(d.engine, "prefix_probe")), default=0)
         if cfg.release_order != "slack" or not any(
                 cfg.ttft_target(r.slo_class) is not None
+                or (cfg.prefix_hint_weight > 0 and r.cached_prefix_hint > 0)
                 for r in self.deferred):
             return list(self.deferred)
 

@@ -288,6 +288,8 @@ class KVBackendConfig:
     # rounded up to the nearest entry (instead of lazy pow2 bucketing), so
     # an explicit warmup pass can pre-compile every serve-time shape
     prefill_pack_width: int = 4    # segment rows per packed-prefill dispatch
+    spec_k: int = 0                # speculative verify-k draft width
+                                   # (0 = plain one-token fused decode)
 
 
 class KVBackend:
@@ -306,7 +308,9 @@ class KVBackend:
         self.cfg = cfg
         self.slot_req: List[Optional[int]] = [None] * cfg.max_slots
         self.prefix = None                 # shared-prefix cache (optional)
-        self._steps = 0
+        # sampling keys are derived per (request id, token index) inside the
+        # jitted dispatch (sampler.token_keys): the stream is independent of
+        # batch composition, warmup, preemption, and spec-on/off
         self._base_key = jax.random.PRNGKey(cfg.seed)
 
     # --------------------------------------------------------------- lanes
@@ -324,10 +328,6 @@ class KVBackend:
             if r is None:
                 return i
         return None
-
-    def _next_key(self):
-        self._steps += 1
-        return jax.random.fold_in(self._base_key, self._steps)
 
     def _sample_kwargs(self) -> dict:
         c = self.cfg
@@ -402,8 +402,29 @@ class KVBackend:
     def upload(self, rid: int, blob: dict) -> None:
         raise NotImplementedError
 
-    def decode(self, params, tokens, active, new_gen, new_ctx, true_len):
+    def decode(self, params, tokens, active, new_gen, new_ctx, true_len,
+               rids):
         """One fused iteration -> (sampled (B,), reason (B,)) numpy."""
+        raise NotImplementedError
+
+    def supports_spec_decode(self) -> bool:
+        """Whether :meth:`decode_verify` is available (``spec_k > 0`` and
+        the model family supports the verify-k dispatch)."""
+        return False
+
+    def decode_verify(self, params, tokens, n_drafts, active, base_gen,
+                      base_ctx, true_len, rids):
+        """One fused verify-k iteration.
+
+        ``tokens``: (B, spec_k+1) int — column 0 each lane's fed previous
+        token, columns 1..k its draft tokens (zero-padded past
+        ``n_drafts[b]``; padding is never matched).  ``base_gen``/
+        ``base_ctx``: per-lane generated count / context length *before*
+        the dispatch.  Returns ``(samples (B, spec_k+1), n_emit (B,),
+        reason (B,))`` numpy — the caller accepts ``samples[b, :n_emit[b]]``
+        and applies ``reason[b]`` to the last accepted token; KV/page state
+        for each lane advances by exactly ``n_emit[b]`` positions
+        (speculative writes past that are rolled back)."""
         raise NotImplementedError
 
     def decode_logits(self, params, tokens, active):
@@ -468,6 +489,11 @@ class DenseKVBackend(KVBackend):
         self._fused = jax.jit(functools.partial(
             model.decode_step_sampled, **self._sample_kwargs()),
             **_donate(1))
+        self._fused_verify = None
+        if cfg.spec_k > 0 and model.supports_spec_decode():
+            self._fused_verify = jax.jit(functools.partial(
+                model.decode_verify_sampled, **self._sample_kwargs()),
+                **_donate(1))
         self._decode = jax.jit(model.decode_step, **_donate(1))
         self._chunk = None
         if model.supports_chunked_prefill():
@@ -726,14 +752,33 @@ class DenseKVBackend(KVBackend):
         self._write_slot(slot, data)
         self.slot_req[slot] = rid
 
-    def decode(self, params, tokens, active, new_gen, new_ctx, true_len):
+    def decode(self, params, tokens, active, new_gen, new_ctx, true_len,
+               rids):
         tok, reason, cache = self._fused(
             params, self.cache, jnp.asarray(tokens), jnp.asarray(active),
             jnp.asarray(new_gen), jnp.asarray(new_ctx),
-            jnp.asarray(true_len), self._next_key())
+            jnp.asarray(true_len), jnp.asarray(rids), self._base_key)
         self.cache = cache
         tok, reason = jax.device_get((tok, reason))
         return np.asarray(tok), np.asarray(reason)
+
+    def supports_spec_decode(self) -> bool:
+        return self._fused_verify is not None
+
+    def decode_verify(self, params, tokens, n_drafts, active, base_gen,
+                      base_ctx, true_len, rids):
+        # rejected positions' KV writes land past each lane's post-accept
+        # watermark: never attended (causal masks + ``lengths``) and
+        # overwritten by the next dispatch before they could matter —
+        # rollback costs nothing on the dense stripes
+        s, n_emit, reason, cache = self._fused_verify(
+            params, self.cache, jnp.asarray(tokens), jnp.asarray(n_drafts),
+            jnp.asarray(active), jnp.asarray(base_gen),
+            jnp.asarray(base_ctx), jnp.asarray(true_len),
+            jnp.asarray(rids), self._base_key)
+        self.cache = cache
+        s, n_emit, reason = jax.device_get((s, n_emit, reason))
+        return np.asarray(s), np.asarray(n_emit), np.asarray(reason)
 
     def decode_logits(self, params, tokens, active):
         logits, cache = self._decode(params, self.cache, jnp.asarray(tokens))
@@ -762,19 +807,38 @@ class PagedKVBackend(KVBackend):
                 f"enc_dec={model.cfg.is_encoder_decoder})")
         if cfg.max_seq_len % cfg.page_size:
             raise ValueError("max_seq_len must be a page_size multiple")
+        if cfg.spec_k >= cfg.page_size:
+            raise ValueError(
+                f"spec_k ({cfg.spec_k}) must be < page_size "
+                f"({cfg.page_size}) so a lane's speculative span never "
+                "needs more than its one scratch page")
         acfg = model.cfg
+        spec_on = cfg.spec_k > 0 and model.supports_spec_decode()
         self.max_pages_per_seq = cfg.max_seq_len // cfg.page_size
         self.pool = PagedKVPool(PagedKVConfig(
-            num_pages=num_pages + 1,           # +1 sacrificial scratch page
+            # +1 sacrificial scratch page, plus one private scratch page
+            # per decode lane when verify-k is on (speculative KV lands
+            # there until accepted)
+            num_pages=num_pages + 1 + (cfg.max_slots if spec_on else 0),
             page_size=cfg.page_size, num_kv_heads=acfg.num_kv_heads,
             head_dim=acfg.hd, num_layers=acfg.num_layers,
             dtype=model.kv_dtype))
         self.scratch_page = self.pool.reserve_scratch()
+        # per-lane speculative scratch pages: commit swaps one into the
+        # request's page table and takes a fresh replacement from the pool
+        self.lane_scratch: List[int] = (
+            [self.pool.reserve_scratch() for _ in range(cfg.max_slots)]
+            if spec_on else [])
         # kv (arg 1) is the whole page pool, consumed and re-emitted: donate
         # so TPU writes pages in place (no-op on CPU)
         self._fused = jax.jit(functools.partial(
             model.paged_decode_step_sampled, attn_impl=cfg.attn_impl,
             interpret=_INTERPRET, **self._sample_kwargs()), **_donate(1))
+        self._fused_verify = None
+        if spec_on:
+            self._fused_verify = jax.jit(functools.partial(
+                model.paged_decode_verify_sampled, **self._sample_kwargs()),
+                **_donate(1))
         # chunked prefill always attends via the logical-order page gather
         # (bit-exact vs the dense stripe path); attn_impl only selects the
         # decode-step kernel
@@ -959,11 +1023,23 @@ class PagedKVBackend(KVBackend):
         self.slot_req[slot] = rid
 
     def pages_shortfall(self, rids: List[int]) -> int:
-        need_new = sum(1 for rid in rids
-                       if self.pool.lengths[rid] % self.cfg.page_size == 0)
+        pg = self.cfg.page_size
+        if self._fused_verify is not None:
+            # verify-k: a lane whose worst-case accepted span (k+1 tokens)
+            # would cross into its scratch page needs one free page for the
+            # post-commit scratch replacement
+            k1 = self.cfg.spec_k + 1
+            need_new = sum(
+                1 for rid in rids
+                if self.pool.lengths[rid] + k1
+                > len(self.pool.page_table[rid]) * pg)
+        else:
+            need_new = sum(1 for rid in rids
+                           if self.pool.lengths[rid] % pg == 0)
         return max(0, need_new - len(self.pool.free_pages))
 
-    def decode(self, params, tokens, active, new_gen, new_ctx, true_len):
+    def decode(self, params, tokens, active, new_gen, new_ctx, true_len,
+               rids):
         B, pg = self.cfg.max_slots, self.cfg.page_size
         maxp = self.max_pages_per_seq
         tables = np.full((B, maxp), self.scratch_page, np.int32)
@@ -988,7 +1064,64 @@ class PagedKVBackend(KVBackend):
             jnp.asarray(tokens), jnp.asarray(tables), jnp.asarray(lens),
             jnp.asarray(wp), jnp.asarray(wo), jnp.asarray(active),
             jnp.asarray(new_gen), jnp.asarray(new_ctx),
-            jnp.asarray(true_len), self._next_key())
+            jnp.asarray(true_len), jnp.asarray(rids), self._base_key)
         self.pool.k, self.pool.v = kv["k"], kv["v"]
         tok, reason = jax.device_get((tok, reason))
         return np.asarray(tok), np.asarray(reason)
+
+    def supports_spec_decode(self) -> bool:
+        return self._fused_verify is not None
+
+    def decode_verify(self, params, tokens, n_drafts, active, base_gen,
+                      base_ctx, true_len, rids):
+        B, pg = self.cfg.max_slots, self.cfg.page_size
+        K1 = self.cfg.spec_k + 1
+        maxp = self.max_pages_per_seq
+        # one extra table column holds the lane's scratch page right after
+        # its real pages: a scratch-resident write at logical position p
+        # (p // pg == len(table)) gathers back at exactly position p
+        tables = np.full((B, maxp + 1), self.scratch_page, np.int32)
+        lens = np.zeros((B,), np.int32)
+        wp = np.full((B, K1), self.scratch_page, np.int32)
+        wo = np.broadcast_to(np.arange(K1, dtype=np.int32) % pg,
+                             (B, K1)).copy()
+        for slot, rid in enumerate(self.slot_req):
+            if rid is None or not active[slot]:
+                continue
+            # NO pre-extend: speculative positions past the last real page
+            # land on the lane's scratch page, promoted only on accept
+            pos = self.pool.lengths[rid]
+            pt = self.pool.page_table[rid]
+            tables[slot, :len(pt)] = pt
+            tables[slot, len(pt)] = self.lane_scratch[slot]
+            lens[slot] = pos
+            for i in range(K1):
+                p = pos + i
+                wp[slot, i] = (pt[p // pg] if p // pg < len(pt)
+                               else self.lane_scratch[slot])
+                wo[slot, i] = p % pg
+        s, n_emit, reason, kv = self._fused_verify(
+            params, {"k": self.pool.k, "v": self.pool.v},
+            jnp.asarray(tokens), jnp.asarray(tables), jnp.asarray(lens),
+            jnp.asarray(wp), jnp.asarray(wo), jnp.asarray(n_drafts),
+            jnp.asarray(active), jnp.asarray(base_gen),
+            jnp.asarray(base_ctx), jnp.asarray(true_len),
+            jnp.asarray(rids), self._base_key)
+        self.pool.k, self.pool.v = kv["k"], kv["v"]
+        s, n_emit, reason = jax.device_get((s, n_emit, reason))
+        s, n_emit = np.asarray(s), np.asarray(n_emit)
+        # commit after the sync: lanes whose accepted span crossed into
+        # scratch promote it into the page table (pointer move, no copy)
+        # and take a fresh scratch page; rejected speculative writes are
+        # rolled back by simply not advancing the pool length
+        for slot, rid in enumerate(self.slot_req):
+            if rid is None or not active[slot] or n_emit[slot] == 0:
+                continue
+            pt = self.pool.page_table[rid]
+            new_len = self.pool.lengths[rid] + int(n_emit[slot])
+            if new_len > len(pt) * pg:
+                pt.append(self.lane_scratch[slot])
+                # caller guaranteed a free page via pages_shortfall
+                self.lane_scratch[slot] = self.pool.take_page()
+            self.pool.lengths[rid] = new_len
+        return s, n_emit, np.asarray(reason)

@@ -75,6 +75,8 @@ class PrefixCacheStats:
     inserted_pages: int = 0
     evicted_pages: int = 0
     cow_pages: int = 0
+    deduped_pages: int = 0        # duplicate physical pages freed when a
+                                  # publish found the span already indexed
 
     def as_dict(self) -> Dict[str, int]:
         return dict(self.__dict__)
@@ -303,7 +305,18 @@ class PagedPrefixCache:
     # ----------------------------------------------------------- publish
     def publish(self, rid: int, tokens, upto: int) -> int:
         """Index ``rid``'s pages covering ``tokens[:upto]`` (full pages
-        only); returns the number of newly-shared pages."""
+        only); returns the number of newly-shared pages.
+
+        Dedupe-on-publish: when the span (or part of it) is already
+        indexed — two requests with the same prompt prefilled
+        concurrently, so neither could hit the other's yet-unpublished
+        pages — the duplicate private pages are dropped *now* and the
+        request's table remapped onto the indexed survivors (one extra
+        refcount each).  Without this, each concurrent publisher pins its
+        own full copy of the shared prefix until it finishes decoding.
+        Remapped pages sit strictly below the request's prefilled
+        watermark, so decode (which writes at >= ``upto``) never touches
+        them."""
         pool = self.pool
         table = pool.page_table.get(rid)
         if not table:
@@ -313,6 +326,20 @@ class PagedPrefixCache:
         created = self.index.insert(tokens, upto, lambda i: table[i])
         for node in created:
             pool.incref(node.page)
+        full, _ = self.index.match(tokens, upto, touch=False)
+        deduped = 0
+        for i, node in enumerate(full):
+            if i < len(table) and table[i] != node.page:
+                pool.incref(node.page)
+                old = table[i]
+                table[i] = node.page
+                pool.decref(old)
+                deduped += 1
+        if deduped:
+            self.stats.deduped_pages += deduped
+            if self.bus is not None:
+                self.bus.emit("prefix_dedupe", req_id=rid,
+                              replica=self.replica, pages=deduped)
         self.stats.inserted_pages += len(created)
         return len(created)
 

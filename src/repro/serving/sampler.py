@@ -22,6 +22,26 @@ def greedy(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def token_keys(base_key, rids, idx):
+    """Per-token sampling keys: fold each lane's request id and the token's
+    generation index into the engine seed.
+
+    The stream for ``(rid, idx)`` is a pure function of those two values —
+    independent of batch composition, warmup traffic, preemption history,
+    and of whether the token was scored by a plain decode step or inside a
+    verify-k dispatch.  That last property is what makes speculative
+    temperature/top-k sampling reproduce the non-speculative token stream
+    exactly: an accepted draft position sees the same logits (same context)
+    and the same key as the step that would have sampled it one-at-a-time.
+
+    ``rids``/``idx``: (B,) int32 -> (B,) keys.
+    """
+    def one(r, i):
+        return jax.random.fold_in(jax.random.fold_in(base_key, r), i)
+    return jax.vmap(one)(jnp.asarray(rids, jnp.int32),
+                         jnp.asarray(idx, jnp.int32))
+
+
 def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
     if top_k > 0:
         vals, _ = jax.lax.top_k(logits, top_k)
@@ -30,32 +50,100 @@ def temperature(logits, key, temp: float = 1.0, top_k: int = 0):
     return jax.random.categorical(key, logits / max(temp, 1e-6)).astype(jnp.int32)
 
 
-def sample_tokens(logits, key, *, greedy_sampling: bool,
+def sample_tokens(logits, keys, *, greedy_sampling: bool,
                   temp: float = 1.0, top_k: int = 0):
-    """Batched sampling: logits (B, V) -> token ids (B,) int32."""
+    """Per-lane keyed sampling: logits (B, V), keys (B,) -> (B,) int32.
+
+    Each lane draws with its own :func:`token_keys` key, so a lane's sample
+    is independent of which other requests share the batch."""
     if greedy_sampling:
         return greedy(logits)
-    return temperature(logits, key, temp=temp, top_k=top_k)
+    return jax.vmap(lambda lg, k: temperature(lg, k, temp=temp,
+                                              top_k=top_k))(logits, keys)
 
 
-def sample_and_reason(logits, key, *, greedy_sampling: bool,
-                      temp: float, top_k: int, eos_token: int,
-                      max_new_tokens: int, max_seq_len: int,
-                      new_gen, new_ctx, true_len):
-    """Fused sampling + termination, fully device-side.
-
-    ``new_gen``/``new_ctx`` are each slot's generated count / context length
-    *after* accepting this token; ``true_len`` is the per-slot trace stop
-    (pass a huge value when ``respect_true_len`` is off).  Returns
-    ``(tokens (B,) int32, reason (B,) int32)`` with reason codes from
-    REASON_* (0 = keep decoding).
-    """
-    tok = sample_tokens(logits, key, greedy_sampling=greedy_sampling,
-                        temp=temp, top_k=top_k)
-    reason = jnp.where(
+def _reason_of(tok, new_gen, new_ctx, true_len, *, eos_token,
+               max_new_tokens, max_seq_len):
+    """Termination chain (eos > length > ctx > true_len), broadcastable."""
+    return jnp.where(
         tok == eos_token, REASON_EOS,
         jnp.where(new_gen >= max_new_tokens, REASON_LENGTH,
                   jnp.where(new_ctx >= max_seq_len - 1, REASON_CTX,
                             jnp.where(new_gen >= true_len,
                                       REASON_TRUE_LEN, REASON_NONE))))
+
+
+def sample_and_reason(logits, keys, *, greedy_sampling: bool,
+                      temp: float, top_k: int, eos_token: int,
+                      max_new_tokens: int, max_seq_len: int,
+                      new_gen, new_ctx, true_len):
+    """Fused sampling + termination, fully device-side.
+
+    ``keys``: (B,) per-lane keys from :func:`token_keys`.  ``new_gen``/
+    ``new_ctx`` are each slot's generated count / context length *after*
+    accepting this token; ``true_len`` is the per-slot trace stop (pass a
+    huge value when ``respect_true_len`` is off).  Returns
+    ``(tokens (B,) int32, reason (B,) int32)`` with reason codes from
+    REASON_* (0 = keep decoding).
+    """
+    tok = sample_tokens(logits, keys, greedy_sampling=greedy_sampling,
+                        temp=temp, top_k=top_k)
+    reason = _reason_of(tok, new_gen, new_ctx, true_len,
+                        eos_token=eos_token, max_new_tokens=max_new_tokens,
+                        max_seq_len=max_seq_len)
     return tok, reason.astype(jnp.int32)
+
+
+def verify_and_reason(logits, drafts, n_drafts, keys, active, *,
+                      greedy_sampling: bool, temp: float, top_k: int,
+                      eos_token: int, max_new_tokens: int, max_seq_len: int,
+                      base_gen, base_ctx, true_len):
+    """Verify-k acceptance + sampling + termination, fully device-side.
+
+    Exact-match verification: position ``i`` of each lane is sampled with
+    that token's own :func:`token_keys` key; draft ``drafts[:, i]`` (i >= 1)
+    is accepted iff it equals the sample at position ``i - 1`` and every
+    earlier draft was accepted.  Because an accepted position's logits come
+    from exactly the context the sequential path would have seen, the
+    emitted stream is token-identical to non-speculative decoding for *any*
+    sampling method — greedy or temperature/top-k.
+
+    ``logits``: (B, K1, V) — position i's next-token logits given the fed
+    token and drafts[:, 1:i+1]; ``drafts``: (B, K1) with column 0 the fed
+    previous token (never matched) and columns 1..k the draft tokens
+    (zero-padded past ``n_drafts``); ``keys``: (B, K1) per-position keys;
+    ``base_gen``/``base_ctx``: (B,) generated count / context length
+    *before* this dispatch, so the token emitted at position i has
+    ``new_gen = base_gen + 1 + i``.  Emission stops at the first terminal
+    token even when later drafts match.
+
+    Returns ``(samples (B, K1), n_emit (B,), reason (B,))`` — the caller
+    emits ``samples[b, :n_emit[b]]`` and applies ``reason[b]`` to the last
+    of them; inactive lanes emit nothing.
+    """
+    B, K1, _ = logits.shape
+    flat = logits.reshape(B * K1, logits.shape[-1])
+    if greedy_sampling:
+        s = greedy(flat).reshape(B, K1)
+    else:
+        kflat = keys.reshape(B * K1, *keys.shape[2:])
+        s = jax.vmap(lambda lg, k: temperature(lg, k, temp=temp,
+                                               top_k=top_k))(
+            flat, kflat).reshape(B, K1)
+    pos = jnp.arange(K1)[None, :]                          # (1, K1)
+    prev = jnp.roll(s, 1, axis=1)                          # prev[:, i] = s[:, i-1]
+    match = (pos == 0) | ((drafts == prev)
+                          & (pos <= n_drafts[:, None]))
+    acc = jnp.cumprod(match.astype(jnp.int32), axis=1)
+    m_cand = acc.sum(axis=1)                               # 1 + accepted drafts
+    new_gen = base_gen[:, None] + 1 + pos
+    new_ctx = base_ctx[:, None] + 1 + pos
+    reason = _reason_of(s, new_gen, new_ctx, true_len[:, None],
+                        eos_token=eos_token, max_new_tokens=max_new_tokens,
+                        max_seq_len=max_seq_len)
+    first_term = jnp.min(jnp.where(reason > 0, pos, K1), axis=1)
+    m = jnp.clip(jnp.minimum(m_cand, first_term + 1), 1, K1)
+    n_emit = jnp.where(active, m, 0).astype(jnp.int32)
+    last = jnp.take_along_axis(reason, (m - 1)[:, None], axis=1)[:, 0]
+    reason_out = jnp.where(active, last, 0).astype(jnp.int32)
+    return s, n_emit, reason_out
