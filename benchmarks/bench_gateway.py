@@ -20,6 +20,14 @@ overlaps one replica's swap stall with the others' compute, so wall-clock
 token throughput rises (on many-core hosts the XLA compute overlap adds
 further).  Token counts are asserted identical across both pumps.
 
+The **cluster_tier** section measures the shared host-RAM KV tier:
+N sessions each prefill turn 1 on replica 0 and are then re-routed to
+replica 1 for turn 2.  Tier-off, replica 1 re-prefills the whole
+conversation; tier-on it imports replica 0's published prefix pages at
+DMA cost and prefills only the suffix.  Asserts bit-identical greedy
+outputs tier-on/off, zero refcount leaks after the replicas drain, and
+zero serve-time recompiles.
+
 ``derived`` reports per-class TTFT p50/p99, TPOT p50, goodput, SLO
 attainment, and the wall-clock speedup.
 """
@@ -98,10 +106,16 @@ def run_wall_pump_comparison(model, params, cfg) -> dict:
     for i in range(3):
         warm.step(i * 0.01)
 
+    dev_ids: list = []
+
     def trial(concurrent: bool) -> float:
         gw = Gateway([mk_engine(), mk_engine()],
                      GatewayConfig(virtual_dt=None,
                                    concurrent_pump=concurrent))
+        # per-replica placement labels for the regression-flag row: a
+        # pump underperforming because both replicas share one device is
+        # a different bug than executor overhead on distinct devices
+        dev_ids[:] = [d.device or "?" for d in gw.router.drivers]
         t0 = time.perf_counter()
         streams = asyncio.run(gw.replay(mk_reqs()))
         wall = time.perf_counter() - t0
@@ -131,9 +145,11 @@ def run_wall_pump_comparison(model, params, cfg) -> dict:
     if flagged:
         emit("gateway/wall/pump_flag", 0.0,
              f"WARN:concurrent_pump_slower_than_lockstep;"
-             f"speedup={speedup:.2f}x;reps={reps}")
+             f"speedup={speedup:.2f}x;reps={reps};"
+             f"devices={','.join(dev_ids)}")
         note(f"[gateway] WARNING: concurrent pump UNDERPERFORMS lockstep "
-             f"({speedup:.2f}x < 1.0x) on the swap-churn workload — "
+             f"({speedup:.2f}x < 1.0x) on the swap-churn workload "
+             f"(replicas on {','.join(dev_ids)}) — "
              f"executor/step-lock overhead is eating the overlap win")
     note(f"[gateway] wall pump x2 replicas (swap-churn): lockstep "
          f"{toks/lock:.1f} tok/s -> concurrent {toks/conc:.1f} tok/s "
@@ -222,6 +238,139 @@ def run_trace_export(model, params, cfg) -> dict:
     return {"path": str(path), "events": len(evs), "quality": q}
 
 
+def run_cluster_tier(model, params, cfg) -> dict:
+    """Cross-replica prefix reuse through the shared host-RAM KV tier.
+
+    N independent sessions: turn 1 serves on replica 0 (publishing its
+    prefix pages into the tier at finish); turn 2 resends the whole
+    conversation but lands on replica 1 — the re-route a cluster router
+    performs under load imbalance.  Tier-off, replica 1 holds nothing
+    and re-prefills every token; tier-on it imports replica 0's pages
+    (upload-DMA shape, no prefill compute) and prefills only the
+    uncached suffix.  Wall-clock TTFT of the re-routed turn is the
+    metric; greedy outputs must be bit-identical tier-on/off, replicas
+    must drain without refcount leaks (tier pins included), and the
+    measured passes must trigger zero serve-time recompiles.
+    """
+    import numpy as np
+
+    from benchmarks.common import is_smoke
+    from repro.core.engine import EngineConfig, ServingEngine
+    from repro.core.predictor import OraclePredictor
+    from repro.core.request import Request, reset_request_counter
+    from repro.serving.kv_tier import HostKVTier
+    from repro.utils.compile_counter import CompileCounter
+
+    n_sessions = pick(6, 3)
+    prefix_len = pick(64, 32)          # turn-1 prompt: unique per session
+    user_len, out_len = 5, 6
+    counter = CompileCounter()
+
+    rng = np.random.default_rng(42)
+    prompts1 = [rng.integers(2, cfg.vocab_size,
+                             prefix_len + user_len).tolist()
+                for _ in range(n_sessions)]
+    follows = [rng.integers(2, cfg.vocab_size, user_len).tolist()
+               for _ in range(n_sessions)]
+    warm1 = rng.integers(2, cfg.vocab_size, prefix_len + user_len).tolist()
+    warm2 = rng.integers(2, cfg.vocab_size, user_len).tolist()
+
+    def mk_engines(tier_on: bool):
+        tier = HostKVTier(64e6, page_size=8) if tier_on else None
+        engs = []
+        for _ in range(2):
+            eng = ServingEngine(model, params, EngineConfig(
+                max_slots=2, max_seq_len=160, max_new_tokens=8,
+                strategy="alise", quantize_offload=False, prefill_chunk=6,
+                kv_backend="paged", page_size=8, prefix_cache=True),
+                predictor=OraclePredictor())
+            if tier is not None:
+                eng.attach_tier(tier)
+            engs.append(eng)
+        return engs, tier
+
+    def ttft_serve(eng, req):
+        """Submit + step to completion; wall seconds to the first token."""
+        t, ttft = 0.0, 0.0
+        eng.submit(req, t)
+        t0 = time.perf_counter()
+        while not req.done:
+            if req.output_tokens and ttft == 0.0:
+                ttft = time.perf_counter() - t0
+            eng.step(t)
+            t += 1e-3
+        return ttft or (time.perf_counter() - t0)
+
+    def session(e0, e1, p1, follow):
+        """Turn 1 on e0, turn 2 (whole conversation) re-routed to e1."""
+        r1 = Request(prompt_len=len(p1), arrival_time=0.0,
+                     true_out_len=out_len, prompt_tokens=list(p1))
+        e0.serve([r1])
+        conv = list(p1) + list(r1.output_tokens) + list(follow)
+        r2 = Request(prompt_len=len(conv), arrival_time=0.0,
+                     true_out_len=out_len, prompt_tokens=list(conv))
+        ttft = ttft_serve(e1, r2)
+        return ttft, [list(r1.output_tokens), list(r2.output_tokens)]
+
+    results: dict = {}
+    outs: dict = {}
+    tiers: dict = {}
+    engines: dict = {}
+    for mode, tier_on in (("off", False), ("on", True)):
+        reset_request_counter()
+        (e0, e1), tier = mk_engines(tier_on)
+        session(e0, e1, warm1, warm2)      # jit + tier-import shape warmup
+        if counter.available:
+            counter.reset()
+        ttfts, outputs = [], []
+        for p1, fl in zip(prompts1, follows):
+            ttft, toks = session(e0, e1, p1, fl)
+            ttfts.append(ttft)
+            outputs.append(toks)
+        if counter.available:
+            assert counter.count == 0, (
+                f"{counter.count} serve-time recompiles during measured "
+                f"cluster_tier ({mode}) sessions: {counter.events}")
+        outs[mode] = outputs
+        tiers[mode] = tier
+        engines[mode] = (e0, e1)
+        results[mode] = {"ttft_p50": float(np.median(ttfts)),
+                         "ttft_mean": float(np.mean(ttfts))}
+
+    assert outs["on"] == outs["off"], \
+        "shared KV tier changed greedy outputs"
+    tier = tiers["on"]
+    assert tier.stats.imports >= n_sessions, tier.stats.as_dict()
+    assert tier.pinned_pages() == 0, "tier handles leaked pins after drain"
+    for mode in ("off", "on"):
+        for eng in engines[mode]:
+            assert not eng.kv.pool.page_table, \
+                f"replica pages leaked after drain (tier {mode})"
+
+    off, on = results["off"]["ttft_p50"], results["on"]["ttft_p50"]
+    speedup = off / max(on, 1e-9)
+    if not is_smoke():
+        assert speedup > 1.0, (
+            f"tier import did not beat re-prefill on the re-routed turn: "
+            f"{off*1e3:.1f}ms -> {on*1e3:.1f}ms")
+    st = tier.stats
+    emit("gateway/cluster_tier/off", off * 1e6,
+         f"ttft_ms={off*1e3:.2f};sessions={n_sessions};"
+         f"prompt={prefix_len + user_len}")
+    emit("gateway/cluster_tier/on", on * 1e6,
+         f"ttft_ms={on*1e3:.2f};imports={st.imports};"
+         f"imported_pages={st.imported_pages};hit_bytes={st.hit_bytes};"
+         f"published_pages={st.published_pages}")
+    emit("gateway/cluster_tier/speedup", 0.0, f"{speedup:.2f}x")
+    note(f"[gateway/cluster_tier] re-routed-turn TTFT "
+         f"{off*1e3:.1f}ms -> {on*1e3:.1f}ms ({speedup:.2f}x) over "
+         f"{n_sessions} sessions; {st.imported_pages} pages imported, "
+         f"{st.published_pages} published, bit-identical outputs")
+    results["speedup"] = speedup
+    results["imports"] = st.imports
+    return results
+
+
 def run(arch: str = "granite-3-8b") -> dict:
     import jax
 
@@ -293,6 +442,8 @@ def run(arch: str = "granite-3-8b") -> dict:
     results["trace"] = run_trace_export(model, params, cfg)
     # --- wall-clock pump comparison (the concurrent-pump payoff)
     results["wall"] = run_wall_pump_comparison(model, params, cfg)
+    # --- shared host-RAM KV tier: cross-replica prefix import
+    results["cluster_tier"] = run_cluster_tier(model, params, cfg)
     return results
 
 

@@ -36,6 +36,7 @@ PERF_METRIC_PREFIXES = ("e2e/engine_decode/", "e2e/compile_count/",
                         "e2e/spec_decode/",
                         "gateway/wall/",
                         "gateway/trace/", "gateway/quality/",
+                        "gateway/cluster_tier/",
                         "hol/prefill_interleave/", "hol/shared_prefix/",
                         "hol/packed_prefill/", "hol/spec_decode/")
 

@@ -40,6 +40,12 @@ class ClusterConfig:
     fail_at: Optional[float] = None   # inject a replica failure at this time
     fail_replica: int = 0
     recover_at: Optional[float] = None
+    kv_tier: bool = False             # cluster-wide shared KV tier: one
+                                      # SimKVTier every replica publishes
+                                      # to and imports from (prefix pages
+                                      # move at DMA cost, not re-prefill)
+    tier_bytes: float = 1e9           # tier payload capacity
+    prefix_cache: bool = False        # per-replica prefix cache (modeled)
     seed: int = 0
 
 
@@ -63,14 +69,16 @@ class Replica:
     """One model replica = one ServingSimulator advanced in lockstep."""
 
     def __init__(self, rid: int, cfg: ClusterConfig,
-                 predictor: LengthPredictor):
+                 predictor: LengthPredictor, tier=None):
         self.rid = rid
         self.alive = True
         trace = SyntheticTrace(requests=[], cfg=TraceConfig(rate=1))
         sim_cfg = SimConfig(model=cfg.model, strategy=cfg.strategy,
                             hbm_bytes=cfg.hbm_bytes, max_batch=cfg.max_batch,
+                            prefix_cache=cfg.prefix_cache,
                             seed=cfg.seed + rid)
-        self.sim = ServingSimulator(sim_cfg, trace, predictor=predictor)
+        self.sim = ServingSimulator(sim_cfg, trace, predictor=predictor,
+                                    replica=f"sim{rid}", tier=tier)
         self.clock = 0.0
 
     def enqueue(self, req: Request, now: float) -> None:
@@ -139,7 +147,21 @@ class ClusterRouter:
     def __init__(self, cfg: ClusterConfig, predictor: LengthPredictor):
         self.cfg = cfg
         self.predictor = predictor
-        self.replicas = [Replica(i, cfg, predictor)
+        # the shared host-RAM KV tier is a *cluster* asset: one instance,
+        # every replica publishes/imports (it survives replica failures —
+        # host RAM outlives a crashed device process)
+        self.tier = None
+        if cfg.kv_tier:
+            from repro.configs import get_config
+            from repro.core.quantization import kv_bytes_per_token
+            from repro.serving.kv_tier import SimKVTier
+            arch = get_config(cfg.model)
+            bpt = kv_bytes_per_token(arch.num_layers, arch.num_kv_heads,
+                                     arch.hd)
+            pg = SimConfig().prefix_page_size
+            self.tier = SimKVTier(pg, max(1, int(cfg.tier_bytes // (pg * bpt))),
+                                  SimConfig().swap_bw)
+        self.replicas = [Replica(i, cfg, predictor, tier=self.tier)
                          for i in range(cfg.n_replicas)]
         self.journal: Dict[int, Request] = {}
         self._rr = 0
@@ -161,7 +183,8 @@ class ClusterRouter:
     def scale_up(self, n: int = 1) -> None:
         base = len(self.replicas)
         for i in range(n):
-            self.replicas.append(Replica(base + i, self.cfg, self.predictor))
+            self.replicas.append(Replica(base + i, self.cfg, self.predictor,
+                                         tier=self.tier))
 
     def scale_down(self, rid: int, now: float) -> None:
         """Drain a replica: re-route queued work, let running work finish."""

@@ -55,6 +55,7 @@ from repro.core.quantization import kv_bytes_per_token
 from repro.core.request import KVLocation, Request, RequestState
 from repro.core.scheduler import (DecodeLane, PrefillChunk, PrefillPack,
                                   Scheduler, SchedulerConfig)
+from repro.distributed.placement import default_device_label
 from repro.models.model import Model
 from repro.serving.kv_cache import (DenseKVBackend, KVBackendConfig,
                                     PagedKVBackend)
@@ -161,6 +162,13 @@ class EngineConfig:
     quantum_growth: float = 4.0
     age_threshold: float = 2.0
     respect_true_len: bool = True          # stop at trace's true_out_len
+    device: Optional[str] = None           # placement label ("cpu:1") this
+                                           # replica reports in gauges and
+                                           # router attribution; params/KV
+                                           # placement itself happens at
+                                           # construction (launch/serve.py
+                                           # builds each engine under
+                                           # placement.device_scope)
     seed: int = 0
 
 
@@ -314,6 +322,14 @@ class ServingEngine:
         # attribute-load + branch on the hot path
         self.bus = None
         self.name = ""                             # replica lane name
+        # cluster-wide host-RAM KV tier (serving/kv_tier.py): attached by
+        # the launcher/bench via attach_tier(); None keeps the tier paths
+        # to one attribute-load + branch
+        self.tier = None
+        # placement label for attribution (gauges, router WARN rows); the
+        # actual params/KV placement happened at construction time via
+        # distributed.placement.device_scope
+        self.device = cfg.device or default_device_label()
         self._step_wall0 = 0.0                     # perf_counter at step start
         if cfg.warmup_compile:
             self.warmup()
@@ -331,6 +347,19 @@ class ServingEngine:
         if self._prefix_ok:
             self.kv.prefix.bus = bus
             self.kv.prefix.replica = name
+        if self.tier is not None and self.tier.bus is None:
+            self.tier.bus = bus        # shared tier: first replica wires it
+
+    def attach_tier(self, tier) -> None:
+        """Join this replica to a cluster-wide host-RAM KV tier
+        (serving/kv_tier.py): local prefix publishes export their pages to
+        the tier, and fresh prefills import a peer replica's pages at
+        admit time instead of re-prefilling."""
+        self.tier = tier
+        if self._prefix_ok:
+            self.kv.prefix.tier = tier
+        if self.bus is not None and tier.bus is None:
+            tier.bus = self.bus
 
     def _span_t(self, t: float, t0: float) -> float:
         """Trace placement of an in-step span that started at wall clock
@@ -362,6 +391,10 @@ class ServingEngine:
                 if probes else 0.0)
             for k, v in st.items():
                 g[f"prefix_{k}"] = float(v)
+        if self.tier is not None:
+            g.update(self.tier.gauges())
+        dev_id = self.device.rsplit(":", 1)[-1]
+        g["device_index"] = float(dev_id) if dev_id.isdigit() else -1.0
         return g
 
     # -------------------------------------------------------------- prefill
@@ -446,7 +479,13 @@ class ServingEngine:
             # fresh prefill (or recompute): re-match the index *now* — the
             # submit-time hint may be stale in either direction (pages
             # published or evicted since).  A hit maps/copies the cached
-            # prefix in and moves the resume watermark forward.
+            # prefix in and moves the resume watermark forward.  When the
+            # cluster tier holds more of this prompt than the local index
+            # (a peer replica computed it), import the difference first —
+            # upload-DMA cost instead of prefill compute — so the local
+            # acquire below sees the extended index.
+            if self.tier is not None:
+                self._tier_import(rid, target_toks, t)
             hit = self.kv.prefix_acquire(rid, target_toks)
             if hit:
                 r.prefilled = hit
@@ -722,9 +761,57 @@ class ServingEngine:
         if need > 0:
             self._stall_debt += need
 
+    def _tier_import(self, rid: int, toks: List[int], t: float) -> int:
+        """Pull a cluster-tier prefix into the *local* prefix cache when
+        the tier holds more of ``toks`` than the local index.  The pages
+        land in the index under the same refcount discipline as a local
+        publish, so the caller's ``prefix_acquire`` then maps (paged) or
+        copies (dense) them like any local hit.  Returns the imported
+        token watermark (0 = tier adds nothing over the local cache)."""
+        cap = len(toks) - 1
+        if cap <= 0 or not self._prefix_ok:
+            return 0
+        local = self.kv.prefix_probe(toks)
+        want = self.tier.probe(toks, cap)
+        if want <= local:
+            return 0
+        handle = self.tier.acquire(toks, want)
+        if handle is None:
+            return 0
+        t0 = time.perf_counter()
+        try:
+            if handle.lossy:
+                # quantized tier: the imported prefix is INT8 round-
+                # tripped (divergent, like INT8 swap) — never publish
+                # pages derived from it back to the exact index/tier
+                self._lossy_kv.add(rid)
+            got = self.kv.tier_fill(toks, handle)
+        finally:
+            handle.release()
+        if got > local:
+            self.mem.note_tier_import(t, handle.nbytes)
+            if self.cfg.realtime_swap:
+                # the host copy stands in for a device<->host DMA; sleep
+                # off the modeled residual like any other swap transfer
+                need = (handle.nbytes / self.cfg.swap_bw
+                        - (time.perf_counter() - t0))
+                if need > 0:
+                    self._stall_debt += need
+            if self.bus is not None:
+                self.bus.emit("tier_import", t=t, req_id=rid,
+                              replica=self.name, tokens=got,
+                              bytes=handle.nbytes,
+                              pages=len(handle.payloads))
+        return got
+
     def _offload(self, req: Request) -> None:
         t0 = time.perf_counter()
         blob = self.kv.offload(req.req_id)
+        if not self.cfg.quantize_offload:
+            # exact payload: remember the tokens the blob covers so the
+            # backend's upload can re-match the radix index and re-link
+            # still-shared pages instead of forking private duplicates
+            blob["tokens"] = self._prefill_target_tokens(req)[:blob["lengths"]]
         self.host_pool[req.req_id] = blob
         if self.cfg.quantize_offload:
             self._lossy_kv.add(req.req_id)
@@ -904,12 +991,25 @@ class ServingEngine:
         suffix* is charged — a cache-hit long prompt gates like the short
         job it really is."""
         chunk = self.sched.cfg.prefill_chunk
-        hit = min(self.prefix_probe(prompt_tokens), max(prompt_len - 1, 0))
+        cap = max(prompt_len - 1, 0)
+        hit = min(self.prefix_probe(prompt_tokens), cap)
         if hit <= 0:
-            return self.latency.first_chunk_time(prompt_len, chunk)
-        rem = prompt_len - hit
-        return self.latency.prefill_chunk_time(
-            hit, min(rem, chunk) if chunk else rem)
+            est = self.latency.first_chunk_time(prompt_len, chunk)
+        else:
+            rem = prompt_len - hit
+            est = self.latency.prefill_chunk_time(
+                hit, min(rem, chunk) if chunk else rem)
+        if self.tier is not None and prompt_tokens:
+            # tier-aware pricing: a cluster-tier import is upload-DMA
+            # cost plus the first uncached chunk from the imported
+            # watermark — not prefill compute over the whole prompt
+            t_hit, t_bytes = self.tier.probe_bytes(prompt_tokens, cap)
+            if t_hit > hit:
+                rem = prompt_len - t_hit
+                est = min(est, t_bytes / self.cfg.swap_bw
+                          + self.latency.prefill_chunk_time(
+                              t_hit, min(rem, chunk) if chunk else rem))
+        return est
 
     def serve(self, requests: List[Request], realtime: bool = False,
               max_wall_s: float = 600.0) -> List[Request]:

@@ -68,6 +68,9 @@ class TieredKVManager:
         self.static_bytes = 0.0                     # fixed device charges
                                                     # (e.g. the dense prefix
                                                     # cache's private store)
+        self.tier_imports = 0                       # cluster-tier prefix
+        self.tier_import_bytes = 0.0                # imports through this
+                                                    # replica's DMA queue
 
     # ------------------------------------------------------------- helpers
     def _round_tokens(self, tokens: int) -> int:
@@ -177,6 +180,15 @@ class TieredKVManager:
         done = start + nbytes / self.cfg.swap_bw
         self._swap_free_at = done
         return done
+
+    def note_tier_import(self, now: float, nbytes: float) -> float:
+        """Account a cluster-tier prefix import: upload-DMA-shaped bytes
+        that ride the same single swap DMA queue as request swaps (so
+        imports and swaps contend for link time, like the hardware they
+        model).  Returns the modeled transfer-done time."""
+        self.tier_imports += 1
+        self.tier_import_bytes += nbytes
+        return self._swap_time(now, nbytes)
 
     def offload(self, req: Request, now: float) -> SwapOp:
         """HBM -> DRAM (quantized per config).  Paper Alg. 2 'preemptive offload'."""
@@ -298,6 +310,8 @@ class TieredKVManager:
             "prefix_cache_reclaimable": float(reclaimable),
             "prefix_cache_reclaimed_total": float(self.cache_reclaimed_pages),
             "swap_ops_total": float(len(self.swap_log)),
+            "tier_dma_imports_total": float(self.tier_imports),
+            "tier_dma_bytes_total": self.tier_import_bytes,
         }
 
     # -------------------------------------------------------------- checks

@@ -70,6 +70,13 @@ class SimConfig:
                                            # prefill cost)
     prefix_cache_pages: int = 4096         # index capacity (pages)
     prefix_page_size: int = 16
+    kv_tier: bool = False                  # cluster-wide host-RAM KV tier:
+                                           # a shared prefix pool peers
+                                           # import from at upload-DMA cost
+                                           # instead of re-prefilling (a
+                                           # SimKVTier is built per sim, or
+                                           # pass a shared one to __init__)
+    tier_bytes: float = 1e9                # tier payload capacity
     spec_decode: bool = False              # verify-k speculative decoding:
                                            # lanes charge spec_k+1 budget
                                            # tokens and emit 1 + accepted
@@ -141,10 +148,13 @@ def build_predictor(kind: str, trace_cfg: TraceConfig, n_history: int,
 class ServingSimulator:
     def __init__(self, cfg: SimConfig, trace: SyntheticTrace,
                  predictor: Optional[LengthPredictor] = None,
-                 bus=None, replica: str = "sim0"):
+                 bus=None, replica: str = "sim0", tier=None):
         """``bus``: an optional virtual-clock observability EventBus —
         simulated runs emit the same event schema as the real engine, so
-        trace exports and quality telemetry are comparable across both."""
+        trace exports and quality telemetry are comparable across both.
+        ``tier``: a shared :class:`~repro.serving.kv_tier.SimKVTier`
+        (cluster replicas pass one instance to every member); with
+        ``cfg.kv_tier`` and no instance, a private one is built."""
         self.cfg = cfg
         self.trace = trace
         self.bus = bus
@@ -199,6 +209,12 @@ class ServingSimulator:
                                                cfg.prefix_cache_pages)
             self.prefix_index.bus = self.bus
             self.prefix_index.replica = self.replica
+        self.tier = tier
+        if self.tier is None and cfg.kv_tier:
+            from repro.serving.kv_tier import SimKVTier
+            pg = cfg.prefix_page_size
+            self.tier = SimKVTier(pg, max(1, int(cfg.tier_bytes // (pg * bpt))),
+                                  cfg.swap_bw)
 
     # --------------------------------------------------- plan execution
     def execute_plan(self, plan: IterationPlan, now: float):
@@ -242,6 +258,7 @@ class ServingSimulator:
         t_iter = 0.0
         decode_ctx = 0
         ran_any = False
+        tier_dma = [0.0]               # cluster-tier import DMA seconds
 
         def chunk_prep(chunk) -> int:
             """Admission + shared-prefix matching; returns the chunk's
@@ -253,13 +270,34 @@ class ServingSimulator:
             if r.first_scheduled_time is None:
                 r.first_scheduled_time = now
             start = chunk.start
-            if (self.prefix_index is not None and chunk.start == 0
-                    and r.prefilled == 0 and r.prompt_tokens):
+            if (chunk.start == 0 and r.prefilled == 0 and r.prompt_tokens
+                    and (self.prefix_index is not None
+                         or self.tier is not None)):
                 # shared-prefix hit: the cached prefix costs nothing to
                 # "prefill" — only the uncached suffix is charged (same
                 # contract as the real engine's prefix_acquire)
-                hit = self.prefix_index.hit(r.prompt_tokens,
-                                            r.prefill_target - 1)
+                cap = r.prefill_target - 1
+                hit = (self.prefix_index.hit(r.prompt_tokens, cap)
+                       if self.prefix_index is not None else 0)
+                if (self.tier is not None
+                        and self.tier.probe(r.prompt_tokens, cap) > hit):
+                    # cluster-tier import: a peer replica computed this
+                    # prefix — charge upload DMA for the missing tokens
+                    # instead of their prefill compute (same contract as
+                    # the real engine's _tier_import)
+                    moved = self.tier.hit(r.prompt_tokens, cap) - hit
+                    if moved > 0:
+                        bpt = mem.cfg.bytes_per_token_fp
+                        tier_dma[0] += self.tier.import_time(moved, bpt)
+                        if self.prefix_index is not None:
+                            self.prefix_index.insert(r.prompt_tokens,
+                                                     hit + moved)
+                        if bus is not None:
+                            bus.emit("tier_import", t=now,
+                                     req_id=r.req_id,
+                                     replica=self.replica, tokens=moved,
+                                     bytes=moved * bpt)
+                        hit += moved
                 r.prefilled = hit
                 r.cached_prefix_hint = hit
                 start = min(hit, chunk.end)
@@ -271,10 +309,12 @@ class ServingSimulator:
         def chunk_finish(chunk) -> None:
             r = chunk.req
             r.prefilled = max(chunk.end, r.prefilled)
-            if chunk.last and self.prefix_index is not None \
-                    and r.prompt_tokens:
-                self.prefix_index.insert(r.prompt_tokens,
-                                         min(r.prefilled, r.prompt_len))
+            if chunk.last and r.prompt_tokens:
+                upto = min(r.prefilled, r.prompt_len)
+                if self.prefix_index is not None:
+                    self.prefix_index.insert(r.prompt_tokens, upto)
+                if self.tier is not None:
+                    self.tier.insert(r.prompt_tokens, upto)
 
         for item in plan.items:
             if isinstance(item, DecodeLane):
@@ -337,6 +377,8 @@ class ServingSimulator:
                          replica=self.replica, batch=decoders,
                          ctx_tokens=decode_ctx)
             t_iter += t_decode
+        t_iter += tier_dma[0]          # tier imports ride the DMA link,
+                                       # serialized with this iteration
         if bus is not None and plan.hol_blocked:
             for r in plan.hol_blocked:
                 bus.emit("hol_blocked", t=now, dur=t_iter,

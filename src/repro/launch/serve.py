@@ -25,8 +25,11 @@ from repro.core.engine import EngineConfig, ServingEngine
 from repro.core.predictor import OraclePredictor, RetrievalPredictor
 from repro.core.request import Request, SLOClass, reset_request_counter
 from repro.core.trace import TraceConfig, clamp_requests, generate_trace
+from repro.distributed.placement import (assign_devices, device_label,
+                                         device_scope, place_params)
 from repro.models.model import Model
 from repro.serving.gateway import AdmissionConfig, Gateway, GatewayConfig
+from repro.serving.kv_tier import HostKVTier
 
 
 def build_requests(cfg, n: int, seed: int = 0):
@@ -140,29 +143,57 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                   prefill_buckets=None, prefill_pack: bool = False,
                   prefill_pack_width: int = 4,
                   warmup: bool = False, chunk_attn: str = "masked",
-                  spec_decode: bool = False, spec_k: int = 3):
+                  spec_decode: bool = False, spec_k: int = 3,
+                  kv_tier: bool = False, tier_bytes: float = 256e6,
+                  tier_quantize: bool = False,
+                  devices: Optional[str] = None):
     """Replay a synthetic Poisson trace through the online Gateway and print
     per-class TTFT/E2E percentiles (and SLO attainment when targets are
     set).  ``virtual_dt=None`` serves in wall clock; ``pump`` selects the
-    concurrent per-engine pump or the lockstep barrier there."""
+    concurrent per-engine pump or the lockstep barrier there.
+
+    ``devices`` places each engine replica on its own JAX device
+    (round-robin over the resolved spec; see distributed/placement.py) so
+    the concurrent pump overlaps replica *compute*, not just swap DMA.
+    ``kv_tier`` joins every replica to one shared host-RAM prefix pool
+    (serving/kv_tier.py): re-routed sessions import a peer's prefix pages
+    at DMA cost instead of re-prefilling."""
     cfg = get_smoke_config(arch)
     model = Model(cfg, attn_chunk=32, remat=False,
                   chunk_attn_impl=chunk_attn)
     params = model.init(jax.random.PRNGKey(seed))
 
-    def mk_engine():
+    dev_list = assign_devices(n_engines, devices)
+    # only commit params per replica when placement is explicit or there
+    # is real device diversity — the single-device default stays the
+    # uncommitted layout (bit-identical to prior releases)
+    place = devices is not None or len({(d.platform, d.id)
+                                        for d in dev_list}) > 1
+    tier = None
+    if kv_tier:
+        tier = HostKVTier(tier_bytes, EngineConfig().page_size,
+                          quantize=tier_quantize)
+
+    def mk_engine(i: int):
         predictor = (OraclePredictor() if predictor_kind == "oracle"
                      else RetrievalPredictor(seed=seed))
-        return ServingEngine(model, params, EngineConfig(
-            max_slots=max_slots, max_seq_len=96, max_new_tokens=48,
-            strategy=strategy, quantize_offload=False,
-            kv_backend=kv_backend, prefill_chunk=prefill_chunk,
-            iter_token_budget=iter_token_budget,
-            prefix_cache=prefix_cache,
-            prefill_buckets=prefill_buckets, prefill_pack=prefill_pack,
-            prefill_pack_width=prefill_pack_width,
-            spec_decode=spec_decode, spec_k=spec_k,
-            warmup_compile=warmup), predictor=predictor)
+        dev = dev_list[i % len(dev_list)] if place else None
+        with device_scope(dev):
+            eng = ServingEngine(model, place_params(params, dev),
+                                EngineConfig(
+                max_slots=max_slots, max_seq_len=96, max_new_tokens=48,
+                strategy=strategy, quantize_offload=False,
+                kv_backend=kv_backend, prefill_chunk=prefill_chunk,
+                iter_token_budget=iter_token_budget,
+                prefix_cache=prefix_cache,
+                prefill_buckets=prefill_buckets, prefill_pack=prefill_pack,
+                prefill_pack_width=prefill_pack_width,
+                spec_decode=spec_decode, spec_k=spec_k,
+                device=device_label(dev) if dev is not None else None,
+                warmup_compile=warmup), predictor=predictor)
+        if tier is not None:
+            eng.attach_tier(tier)
+        return eng
 
     reset_request_counter()
     trace = generate_trace(TraceConfig(dataset=dataset, rate=rate,
@@ -175,7 +206,7 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
         if rng.random() < interactive_frac:
             r.slo_class = SLOClass.INTERACTIVE
 
-    gw = Gateway([mk_engine() for _ in range(n_engines)],
+    gw = Gateway([mk_engine(i) for i in range(n_engines)],
                  GatewayConfig(virtual_dt=virtual_dt, router_policy=router,
                                concurrent_pump=(pump == "concurrent"),
                                trace=bool(trace_out),
@@ -190,9 +221,19 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
     streams = asyncio.run(gw.replay(reqs))
     done = sum(1 for s in streams if s.finished)
     clock = "virtual" if virtual_dt is not None else f"wall/{pump}"
-    print(f"[gateway] {strategy}/{router} x{n_engines} engines ({clock}), "
-          f"{dataset}@{rate}/s: {done}/{len(reqs)} streams finished")
+    placement = (" [" + ", ".join(
+        device_label(dev_list[i % len(dev_list)]) for i in range(n_engines))
+        + "]") if place else ""
+    print(f"[gateway] {strategy}/{router} x{n_engines} engines{placement} "
+          f"({clock}), {dataset}@{rate}/s: {done}/{len(reqs)} streams "
+          f"finished")
     print(gw.metrics.format())
+    if tier is not None:
+        s = tier.stats
+        print(f"[kv-tier] {tier.bytes / 1e6:.1f}/{tier.capacity_bytes / 1e6:.1f} MB, "
+              f"{s.published_pages} pages published, {s.imports} imports "
+              f"({s.imported_pages} pages, {s.hit_bytes / 1e6:.1f} MB), "
+              f"{s.evicted_pages} evicted")
     if trace_out:
         _export_trace(gw.bus, gw.quality(), trace_out)
     return streams, gw
@@ -263,6 +304,25 @@ def main():
                          "prompt prefixes (multi-turn chats, shared "
                          "system prompts) reuse cached KV instead of "
                          "re-prefilling; greedy outputs are unchanged")
+    ap.add_argument("--kv-tier", action="store_true",
+                    help="gateway mode: join every replica to one shared "
+                         "host-RAM prefix pool — re-routed sessions import "
+                         "a peer's prefix pages at DMA cost instead of "
+                         "re-prefilling (implies --prefix-cache)")
+    ap.add_argument("--tier-bytes", type=float, default=256e6,
+                    help="shared tier payload capacity in bytes "
+                         "(default 256e6; LRU-evicts unpinned pages)")
+    ap.add_argument("--tier-quantize", action="store_true",
+                    help="store tier payloads INT8 via the kv_quant path "
+                         "(~2x prefixes per byte; lossy — greedy tier-"
+                         "on/off bit-identity no longer holds)")
+    ap.add_argument("--devices", default=None, metavar="SPEC",
+                    help="gateway mode: place each engine replica on its "
+                         "own JAX device, round-robin over SPEC — 'auto' "
+                         "(all devices), a platform ('cpu'), or an "
+                         "explicit list ('cpu:0,cpu:2' or '0,2').  Use "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N for a multi-device CPU fallback")
     ap.add_argument("--gateway", action="store_true",
                     help="online mode: replay a Poisson trace through the "
                          "streaming gateway instead of a pre-built batch")
@@ -309,6 +369,11 @@ def main():
     if args.gateway and budget == "auto":
         print("[serve] --iter-token-budget auto is batch-mode only "
               "(per-replica profiling); gateway runs unbounded")
+    if args.kv_tier and not args.prefix_cache:
+        args.prefix_cache = True       # the tier extends the prefix cache
+    if (args.kv_tier or args.devices) and not args.gateway:
+        print("[serve] --kv-tier/--devices are gateway-mode only "
+              "(batch mode runs a single replica); ignoring")
     if args.gateway:
         serve_gateway(args.arch, args.strategy, args.dataset, args.rate,
                       args.n_requests, args.n_engines, args.max_slots,
@@ -331,6 +396,9 @@ def main():
                       warmup=args.warmup,
                       chunk_attn=args.chunk_attn,
                       spec_decode=args.spec_decode, spec_k=args.spec_k,
+                      kv_tier=args.kv_tier, tier_bytes=args.tier_bytes,
+                      tier_quantize=args.tier_quantize,
+                      devices=args.devices,
                       trace_out=args.trace_out,
                       metrics_interval=args.metrics_interval)
     else:

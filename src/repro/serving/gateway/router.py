@@ -31,6 +31,7 @@ class EngineDriver:
     engine: ServingEngine
     name: str = ""
     alive: bool = True
+    device: str = ""      # placement label ("cpu:1") for attribution
 
     def queue_depth(self) -> int:
         return self.engine.queue_depth()
@@ -43,7 +44,8 @@ class GatewayRouter:
     def __init__(self, engines: List[ServingEngine], policy: str = "ewt"):
         self.policy = policy
         self.drivers: List[EngineDriver] = [
-            EngineDriver(engine=e, name=f"engine{i}")
+            EngineDriver(engine=e, name=f"engine{i}",
+                         device=getattr(e, "device", ""))
             for i, e in enumerate(engines)]
         for d in self.drivers:
             d.engine.stream_events = True
@@ -61,7 +63,8 @@ class GatewayRouter:
 
     def add_engine(self, engine: ServingEngine) -> EngineDriver:
         engine.stream_events = True
-        d = EngineDriver(engine=engine, name=f"engine{len(self.drivers)}")
+        d = EngineDriver(engine=engine, name=f"engine{len(self.drivers)}",
+                         device=getattr(engine, "device", ""))
         self.drivers.append(d)
         return d
 
@@ -83,6 +86,18 @@ class GatewayRouter:
         """Resolve the configured policy to a driver (no side effects)."""
         alive = self.alive_drivers()
         if self.policy == "prefix_ewt" and req is not None:
+            if any(d.engine.tier is not None for d in alive):
+                # tier-aware affinity: with a shared cluster tier every
+                # replica can *import* the prefix at upload-DMA cost, so
+                # raw hit-length affinity over-rewards the original
+                # replica.  Price the actual expected TTFT instead —
+                # prefill_estimate already folds in local hits and tier
+                # imports (DMA, not prefill compute) per replica.
+                return min(alive,
+                           key=lambda d: (d.predicted_backlog()
+                                          + d.engine.prefill_estimate(
+                                              req.prompt_len,
+                                              req.prompt_tokens)))
             # prefix affinity: longest cached-prefix hit wins; predicted
             # backlog (EWT) breaks ties and decides when nobody has a hit
             return min(alive,

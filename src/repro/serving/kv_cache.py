@@ -688,6 +688,33 @@ class DenseKVBackend(KVBackend):
                                    self.cache["k"][:, slot],
                                    self.cache["v"][:, slot])
 
+    def tier_fill(self, tokens, handle) -> int:
+        """Land a cluster-tier prefix import in the private dense prefix
+        store.  Dense slots can't alias host pages, so the import is a
+        normal publish whose source is the tier payload instead of a
+        slot stripe; the caller's ``prefix_acquire`` then copy-fetches
+        it like any local hit.  Returns the cached token watermark."""
+        if self.prefix is None or handle is None:
+            return 0
+        pg = self.prefix.page_size
+        toks = list(tokens)[:handle.tokens]
+        n = len(toks) // pg
+        if n <= 0:
+            return 0
+        mats = handle.materialize(self.cache["k"].dtype)[:n]
+        k_np = np.concatenate([np.asarray(m[0]) for m in mats], axis=1)
+        v_np = np.concatenate([np.asarray(m[1]) for m in mats], axis=1)
+        # pow2 token-span bucket (zero pad) so the publish scatter keeps
+        # a bounded compile family across import sizes
+        nb = 1 << (n - 1).bit_length()
+        if nb > n:
+            pad = ((0, 0), (0, (nb - n) * pg), (0, 0), (0, 0))
+            k_np = np.pad(k_np, pad)
+            v_np = np.pad(v_np, pad)
+        self.prefix.publish(toks, n * pg, jnp.asarray(k_np),
+                            jnp.asarray(v_np))
+        return n * pg
+
     def clear(self, rid: int) -> None:
         slot = self.slot_of(rid)
         if slot is None:
@@ -1002,11 +1029,27 @@ class PagedKVBackend(KVBackend):
         slot = self.free_slot()
         assert slot is not None
         length = blob["lengths"]
-        short = (self.pool.pages_needed(length)
-                 - len(self.pool.free_pages))
+        toks = blob.get("tokens")
+        shared: List[int] = []
+        if toks is not None and self.prefix is not None:
+            # swap round-trips rejoin the shared prefix pool: pages of
+            # this sequence's prefix still in the radix index are mapped
+            # in place (refcount +1) instead of forked into private
+            # duplicates that drift from the index
+            full, _ = self.prefix.index.match(
+                list(toks), min(length, len(toks)), touch=False)
+            shared = [n.page for n in full]
+            for p in shared:
+                # pin before reclaim: a refcount-1 index page is exactly
+                # what prefix_reclaim would evict out from under us
+                self.pool.incref(p)
+        n_need = self.pool.pages_needed(length)
+        short = n_need - len(shared) - len(self.pool.free_pages)
         if short > 0:       # cached-but-unreferenced pages yield first
             self.prefix_reclaim(short)
-        pages = self.pool.allocate(rid, length)
+        fresh = [self.pool.take_page() for _ in range(n_need - len(shared))]
+        self.pool.page_table[rid] = shared + fresh
+        self.pool.lengths[rid] = length
         for key in ("k", "v"):
             item = blob[key]
             if item[0] == "q8":
@@ -1014,13 +1057,65 @@ class PagedKVBackend(KVBackend):
             else:
                 src = jnp.asarray(item[1])
             # the blob carries the pow2-padded page bucket; surplus rows
-            # scatter into the scratch page (shape-stable, harmless)
-            idx = jnp.asarray(pages + [self.scratch_page]
-                              * (src.shape[1] - len(pages)))
+            # scatter into the scratch page (shape-stable, harmless), and
+            # so do rows covering re-linked shared pages — their device
+            # KV is already exact and may be serving other requests
+            idx = jnp.asarray([self.scratch_page] * len(shared) + fresh
+                              + [self.scratch_page]
+                              * (src.shape[1] - n_need))
             arr = getattr(self.pool, key)
             setattr(self.pool, key,
                     arr.at[:, idx].set(src.astype(arr.dtype)))
         self.slot_req[slot] = rid
+
+    def tier_fill(self, tokens, handle) -> int:
+        """Land a cluster-tier prefix import in the local prefix cache.
+
+        Only pages past the local radix match transfer; each lands in a
+        fresh pool page through the same pow2 scratch-padded scatter
+        shape family as ``upload``, so a warmed swap round-trip already
+        compiled the program.  The fresh pages enter the index owning
+        their single refcount (index-held, like any published page) and
+        the caller's ``prefix_acquire`` then maps them zero-copy.
+        Returns the token watermark now cached locally."""
+        if self.prefix is None or handle is None:
+            return 0
+        pg = self.cfg.page_size
+        toks = list(tokens)[:handle.tokens]
+        n = len(toks) // pg
+        if n <= 0:
+            return 0
+        full, _ = self.prefix.index.match(toks, n * pg, touch=False)
+        have = len(full)
+        if have >= n:
+            return have * pg        # local cache already covers the hit
+        short = (n - have) - len(self.pool.free_pages)
+        if short > 0:
+            self.prefix_reclaim(short)
+        n = min(n, have + len(self.pool.free_pages))
+        if n <= have:
+            return have * pg        # pool too tight to land the import
+        mats = handle.materialize(self.pool.k.dtype)[have:n]
+        fresh = [self.pool.take_page() for _ in range(n - have)]
+        nb = 1 << (len(fresh) - 1).bit_length()
+        nb = min(max(nb, len(fresh)), self.max_pages_per_seq)
+        idx = jnp.asarray(fresh + [self.scratch_page] * (nb - len(fresh)))
+        for j, key in enumerate(("k", "v")):
+            parts = [np.asarray(m[j]) for m in mats]
+            src = np.zeros((parts[0].shape[0], nb) + parts[0].shape[1:],
+                           dtype=parts[0].dtype)
+            src[:, :len(parts)] = np.stack(parts, axis=1)
+            arr = getattr(self.pool, key)
+            setattr(self.pool, key,
+                    arr.at[:, idx].set(jnp.asarray(src).astype(arr.dtype)))
+        created = self.prefix.index.insert(toks, n * pg,
+                                           lambda i: fresh[i - have])
+        used = {node.page for node in created}
+        for p in fresh:             # chain clipped early: hand pages back
+            if p not in used:
+                self.pool.decref(p)
+        self.prefix.stats.inserted_pages += len(created)
+        return n * pg
 
     def pages_shortfall(self, rids: List[int]) -> int:
         pg = self.cfg.page_size

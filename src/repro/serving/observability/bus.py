@@ -61,6 +61,8 @@ KINDS = (
     "preempt", "drop", "hol_blocked",
     # prefix cache
     "prefix_hit", "prefix_publish", "prefix_evict", "prefix_cow",
+    # cluster KV tier
+    "tier_import", "tier_evict",
     # terminal
     "finish",
 )

@@ -240,6 +240,7 @@ class PagedPrefixCache:
         self.stats = PrefixCacheStats()
         self.bus = None                # observability EventBus (None = off)
         self.replica = ""
+        self.tier = None               # cluster HostKVTier (None = off)
 
     # ------------------------------------------------------------- probe
     def probe(self, tokens) -> int:
@@ -341,6 +342,16 @@ class PagedPrefixCache:
                 self.bus.emit("prefix_dedupe", req_id=rid,
                               replica=self.replica, pages=deduped)
         self.stats.inserted_pages += len(created)
+        if self.tier is not None and created:
+            # re-export the span to the cluster tier; the tier consults
+            # fetch_page only for pages it does not already hold, so
+            # re-publishing a cluster-known prefix copies nothing.  The
+            # traced page index keeps the eager gather to one compiled
+            # program across all page ids.
+            def fetch_page(i):
+                idx = jnp.asarray(table[i])
+                return jax.device_get((pool.k[:, idx], pool.v[:, idx]))
+            self.tier.publish(tokens, upto, fetch_page)
         return len(created)
 
     # ------------------------------------------------------------- evict
@@ -400,6 +411,7 @@ class DensePrefixCache:
         self.stats = PrefixCacheStats()
         self.bus = None                # observability EventBus (None = off)
         self.replica = ""
+        self.tier = None               # cluster HostKVTier (None = off)
         # one jitted, store-donated dispatch per publish: gather every new
         # page out of the stripe (vmapped dynamic slice) and scatter them
         # into the store in one go — not one full-store copy per page
@@ -494,6 +506,16 @@ class DensePrefixCache:
             if page not in used:
                 self.free_pages.append(page)
         self.stats.inserted_pages += len(created)
+        if self.tier is not None and created:
+            # re-export to the cluster tier (fetch_page consulted only
+            # for pages the tier lacks); traced starts keep the eager
+            # stripe slices to one compiled program per source shape
+            def fetch_page(i):
+                s = jnp.asarray(i * pg)
+                return jax.device_get(
+                    (jax.lax.dynamic_slice_in_dim(k_src, s, pg, axis=1),
+                     jax.lax.dynamic_slice_in_dim(v_src, s, pg, axis=1)))
+            self.tier.publish(tokens, upto, fetch_page)
         return len(created)
 
     def _evict(self, n: int) -> int:
