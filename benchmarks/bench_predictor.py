@@ -17,23 +17,26 @@ def _eval_predictor(kind: str, dataset: str, n_eval: int = 400, seed: int = 0):
                      max_requests=n_eval, seed=seed + 1)
     trace = generate_trace(tc)
     pred = build_predictor(kind, tc, 1024, seed=seed)
-    errs, accs, lats = [], [], []
+    errs, accs, lats, covs = [], [], [], []
     for r in trace.requests:
         p = pred.predict(r.prompt_tokens, true_len=r.true_out_len)
         errs.append(abs(p.length - r.true_out_len) / r.true_out_len)
         accs.append(int(np.digitize(p.length, BINS)
                         == np.digitize(r.true_out_len, BINS)))
         lats.append(p.latency_s)
+        if p.p90 is not None:
+            covs.append(int(r.true_out_len <= p.p90))
         pred.update(r.prompt_tokens, r.true_out_len)
+    cov90 = float(np.mean(covs)) if covs else None
     return (float(np.mean(accs)), float(np.mean(errs)),
-            float(np.mean(lats)) * 1e3, pred)
+            float(np.mean(lats)) * 1e3, pred, cov90)
 
 
 def run(model: str = "opt-13b") -> dict:
     out = {}
     for dataset in pick(("alpaca", "sharegpt"), ("alpaca",)):
-        for kind in ("proxy", "retrieval"):
-            acc, err, lat_ms, pred = _eval_predictor(
+        for kind in ("proxy", "retrieval", "online"):
+            acc, err, lat_ms, pred, cov90 = _eval_predictor(
                 kind, dataset, n_eval=pick(400, 40))
             # downstream throughput: same trace served with this predictor
             tc = TraceConfig(dataset=dataset,
@@ -45,9 +48,18 @@ def run(model: str = "opt-13b") -> dict:
             res = sim.run()
             out[(dataset, kind)] = dict(acc=acc, err=err, lat_ms=lat_ms,
                                         norm_ms=res.normalized_latency * 1e3)
-            emit(f"predictor/{dataset}/{kind}", lat_ms * 1e3,
-                 f"accuracy={acc:.3f};pred_error={err:.3f};"
-                 f"norm_latency_ms={res.normalized_latency*1e3:.2f}")
+            derived = (f"accuracy={acc:.3f};pred_error={err:.3f};"
+                       f"norm_latency_ms={res.normalized_latency*1e3:.2f}")
+            if kind == "online":
+                # quantile surface: rolling pinball losses, empirical p90
+                # coverage over the eval stream, per-class MAE
+                pb50, pb90 = pred.pinball(0.5), pred.pinball(0.9)
+                mae = pred.mae("batch")
+                derived += (f";pinball50={-1.0 if pb50 is None else pb50:.3f}"
+                            f";pinball90={-1.0 if pb90 is None else pb90:.3f}"
+                            f";cov90={-1.0 if cov90 is None else cov90:.3f}"
+                            f";mae_batch={-1.0 if mae is None else mae:.1f}")
+            emit(f"predictor/{dataset}/{kind}", lat_ms * 1e3, derived)
         a, b = out[(dataset, "retrieval")], out[(dataset, "proxy")]
         note(f"[tab2] {dataset}: retrieval acc={a['acc']:.3f} err={a['err']:.3f} "
              f"lat={a['lat_ms']:.2f}ms | proxy acc={b['acc']:.3f} "

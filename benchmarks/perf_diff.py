@@ -27,7 +27,10 @@ from pathlib import Path
 TRACKED = {"tok_per_s": "higher", "ttft_p50_ms": "lower",
            "ttft_p99_ms": "lower", "ttft_hit_p50_ms": "lower",
            "ttft_cold_p50_ms": "lower", "ttft_long_ms": "lower",
-           "tpot_p99_ms": "lower"}
+           "tpot_p99_ms": "lower",
+           # scheduling-quality surface (hol/predictor_quality/*): tail
+           # E2E latency and SLO attainment under the served predictor
+           "p99_e2e_ms": "lower", "attainment": "higher"}
 
 
 def load_metrics(path: str) -> dict:

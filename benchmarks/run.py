@@ -38,7 +38,8 @@ PERF_METRIC_PREFIXES = ("e2e/engine_decode/", "e2e/compile_count/",
                         "gateway/trace/", "gateway/quality/",
                         "gateway/cluster_tier/",
                         "hol/prefill_interleave/", "hol/shared_prefix/",
-                        "hol/packed_prefill/", "hol/spec_decode/")
+                        "hol/packed_prefill/", "hol/spec_decode/",
+                        "hol/predictor_quality/", "predictor/")
 
 
 def _perf_metrics() -> dict:

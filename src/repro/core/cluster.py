@@ -110,6 +110,9 @@ class Replica:
                 continue
             self.clock += t_iter
             sim.account_tokens(plan, self.clock)
+            # apply queued predictor feedback between iterations (same
+            # off-dispatch-path placement as engine.step / simulator.run)
+            sim.predictor.drain_feedback()
         self.clock = max(self.clock, t)
         return self.sim.sched.finished[finished_before:]
 

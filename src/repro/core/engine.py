@@ -310,6 +310,7 @@ class ServingEngine:
         self.step_lock = threading.RLock()
         self._events_lock = threading.Lock()
         self._backlog_cache = 0.0                  # refreshed under step_lock
+        self._backlog_q90 = 0.0                    # p90 surface (admission)
         self._stall_debt = 0.0                     # modeled swap DMA seconds
         # submit mailbox: lock-free-for-the-loop intake drained at the next
         # step(), so the gateway never blocks on step_lock behind an
@@ -393,6 +394,7 @@ class ServingEngine:
                 g[f"prefix_{k}"] = float(v)
         if self.tier is not None:
             g.update(self.tier.gauges())
+        g.update(self.predictor.gauges())
         dev_id = self.device.rsplit(":", 1)[-1]
         g["device_index"] = float(dev_id) if dev_id.isdigit() else -1.0
         return g
@@ -856,14 +858,17 @@ class ServingEngine:
         engine (drain / re-route) resumes from its existing ``output_tokens``
         via the recompute path, so no generated token is lost or re-emitted."""
         with self.step_lock:
-            self.sched.submit(req, now)
             self._generated_of[req.req_id] = list(req.output_tokens)
             if self._prefix_ok and req.prompt_tokens:
                 # speculative pricing: the scheduler/EWT charge only the
-                # uncached suffix (re-matched for real at prefill time)
+                # uncached suffix (re-matched for real at prefill time).
+                # Probed *before* sched.submit so the hit-aware predictor
+                # sees the cache watermark at predict time.
                 req.cached_prefix_hint = self.kv.prefix_probe(
                     self._prefill_target_tokens(req))
-            self._backlog_cache = self.sched.predicted_backlog()
+            self.sched.submit(req, now)
+            self._backlog_cache, self._backlog_q90 = \
+                self.sched.backlog_quantiles()
 
     def submit_nowait(self, req: Request, now: float = 0.0) -> None:
         """Non-blocking intake for the concurrent pump: park the request in
@@ -912,7 +917,8 @@ class ServingEngine:
             self.sched.release(req)
             self._generated_of.pop(req_id, None)
             req.state = RequestState.QUEUED
-            self._backlog_cache = self.sched.predicted_backlog()
+            self._backlog_cache, self._backlog_q90 = \
+                self.sched.backlog_quantiles()
             return req
 
     def drain(self) -> List[Request]:
@@ -950,7 +956,7 @@ class ServingEngine:
     def queue_depth(self) -> int:
         return len(self.sched.live) + len(self._submit_box)
 
-    def predicted_backlog(self) -> float:
+    def predicted_backlog(self, quantile: Optional[float] = None) -> float:
         """Predicted remaining seconds of live work (routing/admission).
 
         Returns the snapshot refreshed under ``step_lock`` at the end of
@@ -958,12 +964,14 @@ class ServingEngine:
         never race a step mutating scheduler state in an executor thread.
         Between engine-state changes the cache is exact, which keeps
         virtual-clock routing decisions bit-identical to a fresh compute.
-        Mailbox arrivals not yet scheduled contribute their remaining
-        prefill estimate (the chunked-prefill cost model over the actual
-        prefill target — prompt plus recompute tokens for a re-routed
-        request, minus anything already materialized) so back-to-back
-        dispatches don't all see a stale zero and wall-mode routing doesn't
-        mis-estimate parked work."""
+        ``quantile >= 0.9`` reads the p90 remaining-length surface — the
+        admission gate's conservative backlog — while routing/EWT keep the
+        p50 default.  Mailbox arrivals not yet scheduled contribute their
+        remaining prefill estimate (the chunked-prefill cost model over the
+        actual prefill target — prompt plus recompute tokens for a
+        re-routed request, minus anything already materialized) so
+        back-to-back dispatches don't all see a stale zero and wall-mode
+        routing doesn't mis-estimate parked work."""
         chunk = self.sched.cfg.prefill_chunk
         with self._submit_lock:
             pending = sum(self.latency.prefill_time_remaining(
@@ -971,7 +979,10 @@ class ServingEngine:
                               max(req.prefilled, req.cached_prefix_hint),
                               chunk)
                           for req, _ in self._submit_box)
-        return self._backlog_cache + pending
+        base = self._backlog_q90 if (quantile is not None
+                                     and quantile >= 0.9) \
+            else self._backlog_cache
+        return base + pending
 
     def prefix_probe(self, prompt_tokens) -> int:
         """Expected shared-prefix cache hit for a prompt on *this* replica
@@ -1219,8 +1230,13 @@ class ServingEngine:
                     self.bus.emit("hol_blocked", t=now(), dur=iter_dt,
                                   req_id=r.req_id, replica=self.name,
                                   level=r.priority_level)
-            self._backlog_cache = self.sched.predicted_backlog()
+            self._backlog_cache, self._backlog_q90 = \
+                self.sched.backlog_quantiles()
             stall, self._stall_debt = self._stall_debt, 0.0
+        # learning happens here — outside step_lock, after the iteration's
+        # dispatch work is done — so a slow (or pathological) predictor
+        # update can never stall token emission or a concurrent submit
+        self.predictor.drain_feedback()
         if stall > 0:
             time.sleep(stall)              # modeled swap DMA, lock released
         return ran_any
@@ -1284,6 +1300,7 @@ class ServingEngine:
                               replica=self.name, reason=reason,
                               generated=req.generated,
                               predicted=req.predicted_len,
+                              cached_prefix=req.cached_prefix_hint,
                               arrival_t=req.arrival_time,
                               first_token_t=req.first_token_time,
                               preempts=req.preempt_count,

@@ -14,9 +14,11 @@ OraclePredictor (perfect lengths).
 """
 from __future__ import annotations
 
+import threading
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -125,16 +127,51 @@ class MLPDecoder:
 @dataclass
 class Prediction:
     length: int
-    source: str           # "retrieval" | "mlp" | "oracle" | "default"
+    source: str           # "retrieval" | "mlp" | "oracle" | "default" | ...
     latency_s: float      # wall time spent predicting
+    # quantile surface (None/0 for point predictors): p90 is the calibrated
+    # upper length quantile; spread = p90/p50 - 1 is the scale-free
+    # uncertainty the scheduler's skip-join robustness gates on
+    p90: Optional[int] = None
+    spread: float = 0.0
+
+
+@dataclass
+class Feedback:
+    """One completed- or in-flight-request observation, snapshotted off the
+    request so the bounded queue never pins live scheduler state.  A
+    ``censored`` item only asserts the true length *exceeds* ``length``
+    (the request is still generating) — quantile learners use the
+    under-prediction side of the pinball gradient; point learners skip it."""
+    length: int                                  # generated so far / total
+    prompt_len: int
+    tokens: Optional[Sequence[int]] = None       # None = length-only request
+    features: Optional[object] = None            # predict-time feature vector
+    censored: bool = False
+    cached_prefix_hint: int = 0
+    slo_class: str = "batch"
+
+
+def _len_bucket(prompt_len: int) -> int:
+    """Log2 prompt-length bucket for the dedicated length-feature path."""
+    return max(prompt_len, 1).bit_length()
 
 
 class LengthPredictor:
-    """Interface used by the scheduler."""
+    """Interface used by the scheduler.
+
+    Prediction is synchronous (it prices the request being submitted);
+    *learning* is not: finish/overrun feedback lands in a bounded queue via
+    :meth:`observe` and is applied by :meth:`drain_feedback`, which the
+    engine/simulator call between iterations — a slow or throwing
+    ``update()`` can no longer stall the dispatch path.  Update latency is
+    tracked separately from prediction latency so ``mean_latency_s`` (the
+    TTFT admission term) stays an honest measure of on-path cost."""
 
     name = "base"
     _lat_sum = 0.0
     _lat_n = 0
+    feedback_capacity = 4096        # bounded queue: oldest feedback dropped
 
     def predict(self, tokens: Sequence[int], true_len: Optional[int] = None) -> Prediction:
         raise NotImplementedError
@@ -142,6 +179,122 @@ class LengthPredictor:
     def update(self, tokens: Sequence[int], true_len: int) -> None:
         pass
 
+    # ------------------------------------------------- request-level entry
+    def predict_for(self, req) -> Prediction:
+        """Predict from a :class:`~repro.core.request.Request`: the token
+        path when prompt ids exist, else the dedicated length-feature path
+        (length-only simulator/replay traces are **not** encoded as a fake
+        single-token prompt)."""
+        if req.prompt_tokens:
+            return self.predict(req.prompt_tokens, true_len=req.true_out_len)
+        return self.predict_length_only(req.prompt_len,
+                                        true_len=req.true_out_len)
+
+    def predict_length_only(self, prompt_len: int,
+                            true_len: Optional[int] = None) -> Prediction:
+        """Length-feature path: per-log2-prompt-length-bucket running mean
+        of observed output lengths, falling back to a constant prior while
+        a bucket is cold.  Subclasses with a real length conditioner
+        (oracle truth, learned features) override."""
+        t0 = time.perf_counter()
+        stats = self.__dict__.setdefault("_len_stats", {})
+        n, s = stats.get(_len_bucket(prompt_len), (0, 0.0))
+        est = (s / n) if n >= 4 else 128.0
+        lat = time.perf_counter() - t0
+        self._note_latency(lat)
+        return Prediction(length=max(int(round(est)), 1),
+                          source="len_bucket" if n >= 4 else "default",
+                          latency_s=lat)
+
+    def update_length_only(self, prompt_len: int, true_len: int) -> None:
+        stats = self.__dict__.setdefault("_len_stats", {})
+        b = _len_bucket(prompt_len)
+        n, s = stats.get(b, (0, 0.0))
+        stats[b] = (n + 1, s + float(true_len))
+
+    def repredict(self, req) -> Optional[int]:
+        """Mid-flight re-estimate once generation crosses the current
+        prediction.  None = no better information; the scheduler falls back
+        to its legacy doubling."""
+        return None
+
+    # ---------------------------------------------- bounded feedback queue
+    def _fb_state(self):
+        d = self.__dict__
+        if "_feedback" not in d:
+            d["_feedback"] = deque(maxlen=self.feedback_capacity)
+            d["_feedback_lock"] = threading.Lock()
+            d["_upd_lat_sum"] = 0.0
+            d["_upd_n"] = 0
+            d["_upd_errors"] = 0
+        return d["_feedback"], d["_feedback_lock"]
+
+    def observe(self, req, done: bool = True) -> None:
+        """Enqueue feedback from a finished (``done``) or still-running
+        (censored) request.  O(1), allocation-bounded, never calls
+        ``update()`` — safe on the dispatch hot path."""
+        fb, lock = self._fb_state()
+        item = Feedback(
+            length=req.generated, prompt_len=req.prompt_len,
+            tokens=req.prompt_tokens, features=req.features,
+            censored=not done, cached_prefix_hint=req.cached_prefix_hint,
+            slo_class=getattr(req.slo_class, "value", str(req.slo_class)))
+        with lock:
+            fb.append(item)
+
+    def drain_feedback(self, max_items: int = 64) -> int:
+        """Apply at most ``max_items`` queued observations (called between
+        iterations, off the dispatch path).  Exceptions are swallowed into
+        a counter — learning must never kill a serve."""
+        fb, lock = self._fb_state()
+        applied = 0
+        while applied < max_items:
+            with lock:
+                item = fb.popleft() if fb else None
+            if item is None:
+                break
+            t0 = time.perf_counter()
+            try:
+                self._apply_feedback(item)
+            except Exception:
+                self.__dict__["_upd_errors"] = \
+                    self.__dict__.get("_upd_errors", 0) + 1
+            self.__dict__["_upd_lat_sum"] = \
+                self.__dict__.get("_upd_lat_sum", 0.0) \
+                + (time.perf_counter() - t0)
+            self.__dict__["_upd_n"] = self.__dict__.get("_upd_n", 0) + 1
+            applied += 1
+        return applied
+
+    def _apply_feedback(self, item: Feedback) -> None:
+        """Default application: legacy point predictors learn only from
+        completed requests (a censored length would bias their mean)."""
+        if item.censored:
+            return
+        if item.tokens:
+            self.update(item.tokens, item.length)
+        else:
+            self.update_length_only(item.prompt_len, item.length)
+
+    def feedback_depth(self) -> int:
+        fb, lock = self._fb_state()
+        with lock:
+            return len(fb)
+
+    def mean_update_latency_s(self) -> float:
+        n = self.__dict__.get("_upd_n", 0)
+        return self.__dict__.get("_upd_lat_sum", 0.0) / n if n else 0.0
+
+    def gauges(self) -> Dict[str, float]:
+        """Telemetry snapshot merged into the replica gauge stream."""
+        return {
+            "predictor_feedback_depth": float(self.feedback_depth()),
+            "predictor_update_lat_ms": self.mean_update_latency_s() * 1e3,
+            "predictor_update_errors":
+                float(self.__dict__.get("_upd_errors", 0)),
+        }
+
+    # ------------------------------------------------------------- latency
     def _note_latency(self, latency_s: float) -> None:
         self._lat_sum += latency_s
         self._lat_n += 1
@@ -149,7 +302,9 @@ class LengthPredictor:
     def mean_latency_s(self) -> float:
         """Running mean of observed prediction latency.  The gateway's
         TTFT-attainment admission adds this to its expected-TTFT estimate
-        (the paper's Table 2 counts prediction time against TTFT)."""
+        (the paper's Table 2 counts prediction time against TTFT).  Only
+        on-path ``predict*`` time counts — queued-update application time
+        is tracked separately in :meth:`mean_update_latency_s`."""
         return self._lat_sum / self._lat_n if self._lat_n else 0.0
 
 
@@ -239,7 +394,11 @@ class OraclePredictor(LengthPredictor):
 
     def predict(self, tokens, true_len=None) -> Prediction:
         assert true_len is not None, "oracle needs ground truth"
-        return Prediction(length=int(true_len), source="oracle", latency_s=0.0)
+        return Prediction(length=int(true_len), source="oracle", latency_s=0.0,
+                          p90=int(true_len))
+
+    def predict_length_only(self, prompt_len, true_len=None) -> Prediction:
+        return self.predict(None, true_len)
 
 
 class DefaultPredictor(LengthPredictor):
@@ -252,3 +411,6 @@ class DefaultPredictor(LengthPredictor):
 
     def predict(self, tokens, true_len=None) -> Prediction:
         return Prediction(length=self.const, source="default", latency_s=0.0)
+
+    def predict_length_only(self, prompt_len, true_len=None) -> Prediction:
+        return self.predict(None, true_len)

@@ -49,7 +49,14 @@ class Request:
     slo_class: SLOClass = SLOClass.BATCH        # online-serving service class
 
     # --- prediction / scheduling state ---
-    predicted_len: Optional[int] = None
+    predicted_len: Optional[int] = None    # p50 (point prior for legacy
+                                           # predictors) — SRTF prices this
+    predicted_p90: Optional[int] = None    # calibrated upper quantile (None
+                                           # for point predictors); admission
+                                           # gates P90 TTFT on it
+    pred_spread: float = 0.0               # p90/p50 - 1 uncertainty; high
+                                           # spread triggers MLFQ skip-join
+    repredictions: int = 0                 # mid-flight re-estimates taken
     priority_level: int = 0
     level_enter_time: float = 0.0          # for virtual aging
     demotions: int = 0
@@ -106,8 +113,15 @@ class Request:
     def remaining_tokens_true(self) -> int:
         return max(self.true_out_len - self.generated, 0)
 
-    def remaining_tokens_pred(self) -> int:
+    def remaining_tokens_pred(self, quantile: Optional[float] = None) -> int:
+        """Predicted tokens still to generate.  Default (None) prices the
+        p50 point prediction — the SRTF/EWT surface; ``quantile >= 0.9``
+        reads the calibrated p90 head when the predictor exports one (the
+        admission gate's conservative backlog), falling back to p50."""
         pred = self.predicted_len if self.predicted_len is not None else 128
+        if quantile is not None and quantile >= 0.9 \
+                and self.predicted_p90 is not None:
+            pred = max(self.predicted_p90, pred)
         return max(pred - self.generated, 1)
 
     def spec_tokens_per_iter(self) -> float:
@@ -141,6 +155,10 @@ class Request:
 def reset_runtime_state(req: Request) -> None:
     """Clear everything a prior run mutated (traces are reusable objects)."""
     req.predicted_len = None
+    req.predicted_p90 = None
+    req.pred_spread = 0.0
+    req.repredictions = 0
+    req.features = None
     req.priority_level = 0
     req.level_enter_time = 0.0
     req.demotions = 0

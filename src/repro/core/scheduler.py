@@ -77,6 +77,22 @@ class SchedulerConfig:
                                      # iteration (spec_k + 1 with verify-k
                                      # speculative decoding on); each lane
                                      # charges this against the token budget
+    skip_join_spread: Optional[float] = 1.5
+    # FastServe-style mispredict robustness: an arrival whose predictor
+    # uncertainty (p90/p50 - 1) exceeds this skips joining the band its
+    # optimistic p50 earned and enters the deeper band its p90 prices —
+    # a wildly-underestimated long job can't squat in Q0 starving real
+    # short work.  None disables; point predictors (spread 0) never trigger.
+    pricing_quantile: Optional[float] = 0.9
+    # Mispredict-robust pricing: when a quantile predictor supplies a
+    # calibrated p90, band joins, SRTF ordering, and the overrun-demotion
+    # trigger all price at this quantile instead of the optimistic p50.
+    # The cost asymmetry motivates it — over-pricing a short job delays
+    # only that job one band, under-pricing a long one lets it squat in a
+    # top band blocking everything until demotion churns it out (and a p50
+    # price *by construction* under-prices half of all jobs).  Point
+    # predictors (p90 None) are unaffected; None reverts to p50 pricing
+    # with the spread-gated skip-join above as the only robustness.
 
 
 @dataclass
@@ -205,14 +221,49 @@ class Scheduler:
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request, now: float) -> None:
-        pred = self.predictor.predict(req.prompt_tokens or [req.prompt_len],
-                                      true_len=req.true_out_len)
+        pred = self.predictor.predict_for(req)
         req.predicted_len = min(pred.length, self.cfg.max_new_tokens)
+        req.predicted_p90 = (min(pred.p90, self.cfg.max_new_tokens)
+                             if pred.p90 is not None else None)
+        req.pred_spread = pred.spread
         req.state = RequestState.QUEUED
-        req.priority_level = self._level_of(req, now) if not self.is_fcfs else 0
+        skip_join = False
+        if self.is_fcfs:
+            req.priority_level = 0
+        else:
+            pq = self._price_q(req)
+            lvl50 = self._level_of(req, now)
+            lvl = lvl50 if pq is None else self._level_of(req, now,
+                                                          quantile=pq)
+            spread_cap = self.cfg.skip_join_spread
+            if (spread_cap is not None and req.pred_spread > spread_cap
+                    and req.predicted_p90 is not None):
+                if pq is None:
+                    # p50 pricing: the spread-gated skip-join is the only
+                    # robustness against an optimistic join
+                    lvl90 = self._level_of(req, now, quantile=0.9)
+                    if lvl90 > lvl:
+                        skip_join, lvl = True, lvl90
+                elif lvl > lvl50:
+                    # robust pricing already joined the deeper band; still
+                    # surface that this high-spread arrival skipped the
+                    # band its optimistic p50 would have earned
+                    skip_join = True
+            req.priority_level = lvl
         req.level_enter_time = now
         self.live[req.req_id] = req
         if self.bus is not None:
+            self.bus.emit("predict", t=now, req_id=req.req_id,
+                          replica=self.replica, p50=req.predicted_len,
+                          p90=req.predicted_p90, spread=req.pred_spread,
+                          source=pred.source, latency_s=pred.latency_s,
+                          prefix_hint=req.cached_prefix_hint,
+                          slo_class=req.slo_class.value)
+            if skip_join:
+                self.bus.emit("skip_join", t=now, req_id=req.req_id,
+                              replica=self.replica,
+                              level=req.priority_level,
+                              spread=req.pred_spread)
             self.bus.emit("queue_join", t=now, req_id=req.req_id,
                           replica=self.replica, level=req.priority_level,
                           predicted_len=req.predicted_len,
@@ -220,7 +271,8 @@ class Scheduler:
                           prefix_hint=req.cached_prefix_hint)
 
     # ------------------------------------------------------------ priority
-    def _remaining(self, req: Request) -> float:
+    def _remaining(self, req: Request,
+                   quantile: Optional[float] = None) -> float:
         """Eq. 3-5 remaining time, counting partially-prefilled jobs as
         owing only their unfinished chunks (not the whole prompt).  A job
         with no KV yet is still priced from its shared-prefix cache hint:
@@ -240,9 +292,18 @@ class Scheduler:
         tpi = (req.spec_tokens_per_iter()
                if self.cfg.decode_width > 1 else 1.0)
         return self.latency.remaining_time(
-            req.prompt_len, req.generated, req.remaining_tokens_pred(),
+            req.prompt_len, req.generated,
+            req.remaining_tokens_pred(quantile),
             prefilled=prefilled, chunk=self.cfg.prefill_chunk,
             tokens_per_iter=tpi)
+
+    def _price_q(self, req: Request) -> Optional[float]:
+        """The quantile this request is *priced* at: the configured robust
+        quantile when the predictor exported a calibrated p90 for it, else
+        None (p50 point pricing)."""
+        pq = self.cfg.pricing_quantile
+        return pq if (pq is not None
+                      and req.predicted_p90 is not None) else None
 
     def _clamp_level(self, req: Request, lvl: int) -> int:
         """SLO mapping: interactive jobs live in the top bands (§gateway)."""
@@ -251,8 +312,9 @@ class Scheduler:
                                 self.cfg.n_queues - 1))
         return lvl
 
-    def _level_of(self, req: Request, now: float) -> int:
-        rem = self._remaining(req)
+    def _level_of(self, req: Request, now: float,
+                  quantile: Optional[float] = None) -> int:
+        rem = self._remaining(req, quantile)
         lvl = 0
         bound = self.cfg.base_quantum
         while rem > bound and lvl < self.cfg.n_queues - 1:
@@ -273,27 +335,66 @@ class Scheduler:
                           new_level=req.priority_level)
 
     def note_generated(self, req: Request, now: float) -> None:
-        """Called after each decoded token: misprediction demotion."""
+        """Called after each decoded token: misprediction demotion, fed by
+        a live mid-flight re-prediction when the predictor offers one."""
         if self.is_fcfs:
             return
-        if req.generated >= (req.predicted_len or 1):
+        # overrun fires at the *priced* estimate: under p50 pricing half of
+        # all jobs overrun by construction and churn through demotion —
+        # robust pricing only demotes the true ~10% tail past p90
+        bound = (req.predicted_p90 if self._price_q(req) is not None
+                 else req.predicted_len)
+        if req.generated >= (bound or 1):
             old = req.priority_level
-            req.predicted_len = min((req.predicted_len or 1) * 2,
+            # survival past the prediction is censored feedback ("true
+            # length exceeds generated") — queued, drained off hot path
+            self.predictor.observe(req, done=False)
+            new_pred = self.predictor.repredict(req)
+            source = "residual_quantile"
+            if new_pred is None:
+                # legacy mispredict handling: double and demote
+                new_pred = (req.predicted_len or 1) * 2
+                source = "double"
+            req.repredictions += 1
+            req.predicted_len = min(max(new_pred, req.generated + 1),
                                     self.cfg.max_new_tokens)
+            if req.predicted_p90 is not None:
+                req.predicted_p90 = min(
+                    max(req.predicted_p90, req.predicted_len),
+                    self.cfg.max_new_tokens)
             req.priority_level = self._clamp_level(
                 req, min(req.priority_level + 1, self.cfg.n_queues - 1))
             req.level_enter_time = now
             req.demotions += 1
             if self.bus is not None:
+                self.bus.emit("repredict", t=now, req_id=req.req_id,
+                              replica=self.replica, source=source,
+                              generated=req.generated,
+                              p50=req.predicted_len, p90=req.predicted_p90,
+                              repredictions=req.repredictions)
                 self.bus.emit("demote", t=now, req_id=req.req_id,
                               replica=self.replica, old_level=old,
                               new_level=req.priority_level,
                               new_predicted_len=req.predicted_len)
 
-    def predicted_backlog(self) -> float:
+    def predicted_backlog(self, quantile: Optional[float] = None) -> float:
         """Sum of predicted remaining execution time over live jobs (the
-        cluster/gateway EWT routing + admission watermark signal)."""
-        return sum(self._remaining(r) for r in self.live.values())
+        cluster/gateway EWT routing + admission watermark signal).
+        ``quantile`` selects the prediction surface: None/0.5 prices p50
+        (routing), >= 0.9 the calibrated p90 heads (conservative admission)."""
+        return sum(self._remaining(r, quantile) for r in self.live.values())
+
+    def backlog_quantiles(self) -> Tuple[float, float]:
+        """(p50, p90) backlog in one pass over live requests — the engine
+        refreshes both cached surfaces per state change.  A request with
+        no p90 head contributes its p50 remaining to both."""
+        b50 = b90 = 0.0
+        for r in self.live.values():
+            rem = self._remaining(r)
+            b50 += rem
+            b90 += self._remaining(r, 0.9) if r.predicted_p90 is not None \
+                else rem
+        return b50, b90
 
     def release(self, req: Request) -> None:
         """Remove a live job without finishing it (cancel / replica drain);
@@ -308,8 +409,10 @@ class Scheduler:
         self.mem.free(req)
         self.live.pop(req.req_id, None)
         self.finished.append(req)
-        self.predictor.update(req.prompt_tokens or [req.prompt_len],
-                              req.generated)
+        # learning is off the dispatch path: enqueue bounded feedback here,
+        # applied by predictor.drain_feedback() between iterations — a slow
+        # (or throwing) update can no longer stall the finishing iteration
+        self.predictor.observe(req, done=True)
 
     # ------------------------------------------------------------------ EWT
     def _ewt_table(self, ordered: List[Request], rem: Dict[int, float],
@@ -329,7 +432,8 @@ class Scheduler:
         return table
 
     def ewt(self, req: Request, ordered: List[Request], now: float = 0.0) -> float:
-        rem = {r.req_id: self._remaining(r) for r in ordered}
+        rem = {r.req_id: self._remaining(r, self._price_q(r))
+               for r in ordered}
         return self._ewt_table(ordered, rem, now).get(req.req_id, 0.0)
 
     # --------------------------------------------------------- item packing
@@ -470,7 +574,9 @@ class Scheduler:
             if r.state != RequestState.RUNNING:
                 self._apply_aging(r, now)
 
-        rem = {r.req_id: self._remaining(r) for r in live}
+        # remaining time at each job's *priced* quantile — robust pricing
+        # orders by p90 so a 50%-probable underestimate can't jump the line
+        rem = {r.req_id: self._remaining(r, self._price_q(r)) for r in live}
         # SRTF candidate order: (level, remaining, arrival)
         candidates = sorted(
             live, key=lambda r: (r.priority_level, rem[r.req_id],

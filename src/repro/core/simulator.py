@@ -47,6 +47,8 @@ class SimConfig:
     model: str = "opt-13b"
     strategy: str = "alise"            # alise | orca | vllm | oracle | alise-defer | alise-recompute
     predictor: str = "retrieval"       # retrieval | proxy | oracle | default
+                                       # | online (hit-aware quantile
+                                       # regressor, serving/prediction)
     hbm_bytes: float = 8e9             # KV budget (32GB V100 minus weights)
     dram_bytes: float = 1024e9
     swap_bw: float = 32e9
@@ -138,6 +140,12 @@ def build_predictor(kind: str, trace_cfg: TraceConfig, n_history: int,
     lens = np.array([r.true_out_len for r in hist.requests], np.float32)
     if kind == "proxy":
         p = ProxyPredictor(seed=seed)
+        p.pretrain(toks, lens)
+        return p
+    if kind == "online":
+        # lazy import: core stays importable without the serving package
+        from repro.serving.prediction import OnlineQuantilePredictor
+        p = OnlineQuantilePredictor(seed=seed)
         p.pretrain(toks, lens)
         return p
     p = RetrievalPredictor(seed=seed)
@@ -450,6 +458,7 @@ class ServingSimulator:
                                   replica=self.replica, reason=reason,
                                   generated=r.generated,
                                   predicted=r.predicted_len,
+                                  cached_prefix=r.cached_prefix_hint,
                                   arrival_t=r.arrival_time,
                                   first_token_t=r.first_token_time,
                                   preempts=r.preempt_count,
@@ -498,6 +507,11 @@ class ServingSimulator:
 
             now += t_iter
             self.account_tokens(plan, now)
+            # learning off the dispatch path, same placement as the real
+            # engine: feedback queued by note_finished/overruns is applied
+            # between iterations (its wall cost is tracked separately and
+            # never folds into the simulated clock)
+            self.predictor.drain_feedback()
 
         return self._result(now, n_total)
 

@@ -30,6 +30,15 @@ from repro.distributed.placement import (assign_devices, device_label,
 from repro.models.model import Model
 from repro.serving.gateway import AdmissionConfig, Gateway, GatewayConfig
 from repro.serving.kv_tier import HostKVTier
+from repro.serving.prediction import OnlineQuantilePredictor
+
+
+def _mk_predictor(kind: str, seed: int = 0):
+    if kind == "oracle":
+        return OraclePredictor()
+    if kind == "online":
+        return OnlineQuantilePredictor(seed=seed)
+    return RetrievalPredictor(seed=seed)
 
 
 def build_requests(cfg, n: int, seed: int = 0):
@@ -83,8 +92,7 @@ def serve(arch: str = "granite-3-8b", strategy: str = "alise",
     model = Model(cfg, attn_chunk=32, remat=False,
                   chunk_attn_impl=chunk_attn)
     params = model.init(jax.random.PRNGKey(seed))
-    predictor = (OraclePredictor() if predictor_kind == "oracle"
-                 else RetrievalPredictor(seed=seed))
+    predictor = _mk_predictor(predictor_kind, seed)
     autotune = iter_token_budget == "auto"
     eng = ServingEngine(model, params, EngineConfig(
         max_slots=max_slots, max_seq_len=96, max_new_tokens=48,
@@ -134,6 +142,7 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                   ttft_target_interactive: Optional[float] = None,
                   ttft_target_batch: Optional[float] = None,
                   ttft_miss_policy: str = "shed",
+                  ttft_quantile: float = 0.5,
                   kv_backend: str = "dense",
                   prefill_chunk: Optional[int] = None,
                   iter_token_budget: Optional[int] = None,
@@ -175,8 +184,7 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                           quantize=tier_quantize)
 
     def mk_engine(i: int):
-        predictor = (OraclePredictor() if predictor_kind == "oracle"
-                     else RetrievalPredictor(seed=seed))
+        predictor = _mk_predictor(predictor_kind, seed)
         dev = dev_list[i % len(dev_list)] if place else None
         with device_scope(dev):
             eng = ServingEngine(model, place_params(params, dev),
@@ -217,7 +225,8 @@ def serve_gateway(arch: str = "granite-3-8b", strategy: str = "alise",
                      defer_high_watermark=4 * n_engines * max_slots,
                      ttft_target_interactive=ttft_target_interactive,
                      ttft_target_batch=ttft_target_batch,
-                     ttft_miss_policy=ttft_miss_policy))
+                     ttft_miss_policy=ttft_miss_policy,
+                     ttft_quantile=ttft_quantile))
     streams = asyncio.run(gw.replay(reqs))
     done = sum(1 for s in streams if s.finished)
     clock = "virtual" if virtual_dt is not None else f"wall/{pump}"
@@ -248,7 +257,12 @@ def main():
     ap.add_argument("--n-requests", type=int, default=12)
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--predictor", default="oracle",
-                    choices=["oracle", "retrieval"])
+                    choices=["oracle", "retrieval", "online"],
+                    help="length predictor: 'oracle' (true lengths), "
+                         "'retrieval' (static hashed-ngram KNN), or "
+                         "'online' (hit-aware p50/p90 quantile regressor "
+                         "that learns from served traffic and calibrates "
+                         "its p90 coverage online)")
     ap.add_argument("--kv-backend", default="dense",
                     choices=["dense", "paged"],
                     help="device KV storage: dense slotted cache or the "
@@ -347,6 +361,13 @@ def main():
     ap.add_argument("--ttft-target-batch", type=float, default=None)
     ap.add_argument("--ttft-miss-policy", default="shed",
                     choices=["shed", "defer", "observe"])
+    ap.add_argument("--ttft-quantile", type=float, default=0.5,
+                    help="backlog quantile the TTFT admission gate prices: "
+                         "0.5 = the routing/EWT p50 surface (default); "
+                         "0.9 = the calibrated-P90 remaining-length "
+                         "surface (conservative exactly when the length "
+                         "predictor is uncertain; needs --predictor "
+                         "online to differ from 0.5)")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="record the full request lifecycle on the "
                          "observability event bus and export a Chrome/"
@@ -385,6 +406,7 @@ def main():
                       ttft_target_interactive=args.ttft_target_interactive,
                       ttft_target_batch=args.ttft_target_batch,
                       ttft_miss_policy=args.ttft_miss_policy,
+                      ttft_quantile=args.ttft_quantile,
                       kv_backend=args.kv_backend,
                       prefill_chunk=args.prefill_chunk,
                       iter_token_budget=(None if budget == "auto"

@@ -75,6 +75,16 @@ class AdmissionConfig:
     ttft_target_batch: Optional[float] = None
     ttft_miss_policy: MissPolicy = MissPolicy.SHED    # interactive misses
     ttft_slack: float = 1.0                # gate on slack * expected_ttft
+    ttft_quantile: float = 0.5             # backlog quantile the TTFT gate
+                                           # prices: 0.5 reads the p50/EWT
+                                           # surface (routing's view); 0.9
+                                           # reads the calibrated-p90
+                                           # remaining-length surface, so
+                                           # admission is conservative
+                                           # exactly when predictions are
+                                           # uncertain (no effect with a
+                                           # point predictor — p90 falls
+                                           # back to p50)
     release_order: str = "slack"           # deferred-queue release ordering:
                                            # "slack" dispatches the request
                                            # with the least predicted TTFT

@@ -36,8 +36,8 @@ class EngineDriver:
     def queue_depth(self) -> int:
         return self.engine.queue_depth()
 
-    def predicted_backlog(self) -> float:
-        return self.engine.predicted_backlog()
+    def predicted_backlog(self, quantile: Optional[float] = None) -> float:
+        return self.engine.predicted_backlog(quantile)
 
 
 class GatewayRouter:

@@ -175,15 +175,18 @@ class Gateway:
         on (the rest of the prompt interleaves with resident decode rather
         than serializing behind the backlog), whole-prompt when monolithic,
         and only the *uncached suffix* when the target replica's shared-
-        prefix cache already holds a prefix of the prompt.  None with no
-        live replicas."""
+        prefix cache already holds a prefix of the prompt.  The queueing
+        term reads the backlog at ``AdmissionConfig.ttft_quantile`` — 0.9
+        gates on the calibrated-P90 remaining-length surface while routing
+        keeps pricing p50.  None with no live replicas."""
         target = self.router.peek_driver(req)
         if target is None:
             return None
         eng = target.engine
         intrinsic = (eng.prefill_estimate(req.prompt_len, req.prompt_tokens)
                      + eng.predictor.mean_latency_s())
-        return target.predicted_backlog(), intrinsic
+        return target.predicted_backlog(self.admission.cfg.ttft_quantile), \
+            intrinsic
 
     def expected_ttft(self, req: Request) -> Optional[float]:
         """Per-request TTFT estimate for admission.  Returns None when no

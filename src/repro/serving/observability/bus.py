@@ -54,8 +54,10 @@ KINDS = (
     # gateway
     "arrival", "admission", "defer_release", "dispatch", "first_token",
     "shed", "timeout", "gauge",
-    # scheduler
-    "queue_join", "promote", "demote",
+    # scheduler (predict/repredict/skip_join come from the length-prediction
+    # subsystem: arrival-time quantile estimate, mid-flight re-estimate on
+    # overrun, uncertainty-driven deep-band join)
+    "queue_join", "promote", "demote", "predict", "repredict", "skip_join",
     # engine / simulator execution
     "prefill_chunk", "decode_iter", "swap_out", "swap_in",
     "preempt", "drop", "hol_blocked",

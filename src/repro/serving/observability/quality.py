@@ -51,6 +51,8 @@ def analyze_quality(events: Union[EventBus, Iterable[TraceEvent]]) -> dict:
     finish_t: Dict[int, float] = {}
     expected_ttft: Dict[int, float] = {}
     predicted_len: Dict[int, int] = {}
+    predicted_p90: Dict[int, int] = {}
+    cached_prefix: Dict[int, int] = {}       # hit watermark at predict time
     generated: Dict[int, int] = {}
     prefill_exec: Dict[int, float] = {}      # sum of chunk durs pre-first-token
     swap_stall: Dict[int, float] = {}
@@ -68,6 +70,13 @@ def analyze_quality(events: Union[EventBus, Iterable[TraceEvent]]) -> dict:
                 expected_ttft.setdefault(rid, float(e))
         elif ev.kind == "dispatch":
             dispatch_t.setdefault(rid, ev.t)
+        elif ev.kind == "predict":
+            p90 = ev.data.get("p90")
+            if isinstance(p90, (int, float)):
+                predicted_p90.setdefault(rid, int(p90))
+            h = ev.data.get("prefix_hint")
+            if isinstance(h, (int, float)):
+                cached_prefix.setdefault(rid, int(h))
         elif ev.kind == "queue_join":
             join_t.setdefault(rid, ev.t)
             r = ev.data.get("remaining_est")
@@ -103,6 +112,9 @@ def analyze_quality(events: Union[EventBus, Iterable[TraceEvent]]) -> dict:
             p = ev.data.get("predicted")
             if isinstance(p, (int, float)):
                 predicted_len.setdefault(rid, int(p))
+            c = ev.data.get("cached_prefix")
+            if isinstance(c, (int, float)):
+                cached_prefix.setdefault(rid, int(c))
 
     # ---- queueing-delay decomposition (requests that reached 1st token)
     defer_s, sched_s, prefill_s, swap_s, hol_s, other_s, ttft_s = \
@@ -145,12 +157,29 @@ def analyze_quality(events: Union[EventBus, Iterable[TraceEvent]]) -> dict:
             if actual > 1e-9:
                 exec_ape.append(abs(actual - rem) / actual)
 
+    # Length error is computed against ``generated`` — the suffix the
+    # request actually produced — which for a prefix-cache hit is exactly
+    # the work the predictor priced (the cached prefix was never
+    # generated).  The hit/cold split keeps hit-aware prediction honest:
+    # a predictor that ignores the hit watermark shows its bias in the
+    # ``_hit`` fold while the ``_cold`` fold stays clean.
     len_err, len_ape = [], []
+    len_err_hit, len_ape_hit, len_err_cold, len_ape_cold = [], [], [], []
+    p90_cover = []                     # calibrated-coverage check: g <= p90
     for rid, pred in predicted_len.items():
         if rid in generated and generated[rid] > 0:
             g = generated[rid]
             len_err.append(g - pred)
             len_ape.append(abs(g - pred) / g)
+            if cached_prefix.get(rid, 0) > 0:
+                len_err_hit.append(g - pred)
+                len_ape_hit.append(abs(g - pred) / g)
+            else:
+                len_err_cold.append(g - pred)
+                len_ape_cold.append(abs(g - pred) / g)
+            p90 = predicted_p90.get(rid)
+            if p90 is not None:
+                p90_cover.append(1.0 if g <= p90 else 0.0)
 
     return {
         "n_requests_seen": len(set(arrival) | set(join_t) | set(finish_t)),
@@ -171,11 +200,19 @@ def analyze_quality(events: Union[EventBus, Iterable[TraceEvent]]) -> dict:
             "exec_ape": _dist(exec_ape),
             "len_signed_tok": _dist([float(x) for x in len_err]),
             "len_ape": _dist(len_ape),
+            "len_signed_tok_hit": _dist([float(x) for x in len_err_hit]),
+            "len_ape_hit": _dist(len_ape_hit),
+            "len_signed_tok_cold": _dist([float(x) for x in len_err_cold]),
+            "len_ape_cold": _dist(len_ape_cold),
         },
+        "p90_coverage": (float(np.mean(p90_cover)) if p90_cover
+                         else float("nan")),
         "hol_blocked_total_s": float(sum(hol_wait.values())),
         "scheduler": {
             "promotions": counts.get("promote", 0),
             "demotions": counts.get("demote", 0),
+            "repredictions": counts.get("repredict", 0),
+            "skip_joins": counts.get("skip_join", 0),
             "preemptions": counts.get("preempt", 0),
             "sheds": counts.get("shed", 0),
             "timeouts": counts.get("timeout", 0),

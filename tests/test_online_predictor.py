@@ -1,0 +1,459 @@
+"""Online hit-aware quantile length prediction: head learning, calibrated
+P90 coverage, hit-aware features, the dedicated length-only path, the
+bounded off-hot-path feedback queue, mispredict-robust pricing (skip-join,
+p90 overrun, residual-quantile repredict), P90 admission gating, the
+quality analyzer's hit/cold decomposition, and greedy bit-identity of the
+served tokens with the learned predictor on both KV backends."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.latency_model import LatencyModel
+from repro.core.memory_manager import MemoryConfig, TieredKVManager
+from repro.core.predictor import (Feedback, LengthPredictor, OraclePredictor,
+                                  Prediction)
+from repro.core.request import Request, SLOClass, reset_request_counter
+from repro.core.scheduler import Scheduler, SchedulerConfig
+from repro.core.trace import TraceConfig, generate_trace
+from repro.serving.observability import EventBus, TraceEvent, analyze_quality
+from repro.serving.prediction import OnlineQuantilePredictor
+from repro.serving.prediction.features import (CTX_DIM, TOKEN_DIM,
+                                               LengthFeaturizer, knn_log_of)
+from repro.serving.prediction.online import OnlineConfig
+from repro.serving.prediction.quantile import QuantileHeads, pinball_loss
+
+LM = LatencyModel(t0=1e-4, alpha=1e-6, beta=0.01)
+
+
+def mixed_corpus(n_per=256, seed_base=10_000):
+    toks, lens = [], []
+    for ds, seed in (("alpaca", seed_base), ("sharegpt", seed_base + 1)):
+        tc = TraceConfig(dataset=ds, rate=10.0, duration=1e9,
+                         max_requests=n_per, seed=seed)
+        for r in generate_trace(tc).requests:
+            toks.append(r.prompt_tokens)
+            lens.append(r.true_out_len)
+    return toks, np.asarray(lens, np.float32)
+
+
+def eval_stream(n_per=128):
+    reqs = []
+    for ds, seed in (("alpaca", 0), ("sharegpt", 1)):
+        tc = TraceConfig(dataset=ds, rate=10.0, duration=1e9,
+                         max_requests=n_per, seed=seed)
+        reqs.extend(generate_trace(tc).requests)
+    reqs.sort(key=lambda r: r.arrival_time)
+    return reqs
+
+
+# ---------------------------------------------------------- quantile heads
+def test_quantile_heads_learn_and_stay_ordered():
+    rng = np.random.default_rng(0)
+    dim = 8
+    X = rng.normal(size=(400, dim)).astype(np.float32)
+    X[:, 0] = 1.0                              # bias column
+    y = 4.0 + 1.5 * X[:, 1]                    # log-lengths
+    heads = QuantileHeads(dim, (0.5, 0.9), lr=0.1, init_log_len=0.0)
+    before = np.mean([pinball_loss(float(yy), float(
+        heads.predict_log(x)[0]), 0.5) for x, yy in zip(X, y)])
+    heads.fit(X, np.exp(y), epochs=6, seed=0)
+    after = np.mean([pinball_loss(float(yy), float(
+        heads.predict_log(x)[0]), 0.5) for x, yy in zip(X, y)])
+    assert after < before * 0.5
+    # monotone surface: p90 head never dips below p50
+    for x in X[:50]:
+        logs = heads.predict_log(x)
+        assert logs[1] >= logs[0]
+
+
+def test_censored_update_only_pushes_up():
+    heads = QuantileHeads(4, (0.5, 0.9), lr=0.2, init_log_len=1.0)
+    x = np.array([1.0, 0.0, 0.0, 0.0], np.float32)
+    p0 = heads.predict_log(x).copy()
+    heads.update(x, 0.2, censored=True)        # below both: no info
+    assert np.allclose(heads.predict_log(x), p0)
+    heads.update(x, 5.0, censored=True)        # above: exceedance applies
+    assert (heads.predict_log(x) > p0).all()
+
+
+# ----------------------------------------------------- calibrated coverage
+def test_p90_coverage_calibrated_after_warm_phase():
+    """Acceptance: empirical P90 coverage within +-10 points of nominal
+    once the predictor is warm."""
+    toks, lens = mixed_corpus()
+    p = OnlineQuantilePredictor(seed=0)
+    p.pretrain(toks, lens)
+    covered = []
+    for r in eval_stream():
+        pred = p.predict(r.prompt_tokens)
+        covered.append(int(r.true_out_len <= pred.p90))
+        p.update(r.prompt_tokens, r.true_out_len)
+    assert 0.8 <= np.mean(covered) <= 1.0
+    # rolling telemetry agrees
+    assert 0.8 <= p.coverage("batch") <= 1.0
+    g = p.gauges()
+    assert "predictor_pinball90" in g and "predictor_cov90_batch" in g
+
+
+def test_prediction_carries_quantile_surface():
+    toks, lens = mixed_corpus(n_per=64)
+    p = OnlineQuantilePredictor(seed=0)
+    p.pretrain(toks, lens)
+    pred = p.predict(toks[0])
+    assert pred.p90 is not None and pred.p90 >= pred.length >= 1
+    assert pred.spread == pytest.approx(pred.p90 / pred.length - 1.0)
+
+
+# --------------------------------------------------------------- features
+def test_hit_aware_features_and_prediction():
+    feat = LengthFeaturizer(seed=0)
+    toks = list(range(40, 80))
+    cold = feat.features(toks, len(toks), cached_prefix_hint=0)
+    hit = feat.features(toks, len(toks), cached_prefix_hint=30)
+    assert not np.allclose(cold, hit)          # hit watermark is a feature
+    c = feat.token_dim
+    assert hit[c + 13] == 1.0 and hit[c + 12] > 0  # flag + fraction slots
+    # end-to-end: teach the predictor that hits mean short continuations
+    p = OnlineQuantilePredictor(OnlineConfig(lr=0.3, seed=0))
+    for _ in range(120):
+        p._apply_feedback(Feedback(length=4, prompt_len=len(toks),
+                                   tokens=toks, cached_prefix_hint=30))
+        p._apply_feedback(Feedback(length=200, prompt_len=len(toks),
+                                   tokens=toks, cached_prefix_hint=0))
+    r_hit = Request(prompt_len=len(toks), arrival_time=0.0, true_out_len=4,
+                    prompt_tokens=toks)
+    r_hit.cached_prefix_hint = 30
+    r_cold = Request(prompt_len=len(toks), arrival_time=0.0, true_out_len=4,
+                     prompt_tokens=toks)
+    assert p.predict_for(r_hit).length < p.predict_for(r_cold).length
+
+
+def test_length_only_path_is_dedicated():
+    """Length-only requests ride the context block — never a fake
+    single-token prompt, and never the retrieval DB."""
+    feat = LengthFeaturizer(seed=0)
+    v = feat.features(None, 77)
+    assert np.abs(v[:TOKEN_DIM]).sum() == 0.0      # empty token block
+    assert v[TOKEN_DIM + 15] == 1.0                # _LENGTH_ONLY flag
+    assert knn_log_of(v) == 0.0
+    p = OnlineQuantilePredictor(seed=0)
+    pred = p.predict_length_only(77)
+    assert pred.length >= 1 and pred.p90 >= pred.length
+    for _ in range(30):
+        p.update_length_only(77, 12)
+    after = p.predict_length_only(77)
+    assert after.length < pred.length              # it learns from lengths
+    r = Request(prompt_len=77, arrival_time=0.0, true_out_len=12,
+                prompt_tokens=[])
+    assert p.predict_for(r).length == after.length
+
+
+# ------------------------------------------------- bounded feedback queue
+def test_feedback_queue_bounded_and_drained():
+    p = OnlineQuantilePredictor(OnlineConfig(feedback_capacity=32, seed=0))
+    p.feedback_capacity = 32
+    r = Request(prompt_len=4, arrival_time=0.0, true_out_len=8,
+                prompt_tokens=[5, 6, 7, 8])
+    r.generated = 8
+    for _ in range(500):
+        p.observe(r, done=True)
+    assert p.feedback_depth() <= 32                # oldest dropped, bounded
+    applied = 0
+    while p.feedback_depth():
+        applied += p.drain_feedback()
+    assert applied <= 32 and p.stats["updates"] == applied
+
+
+def test_slow_or_throwing_update_cannot_stall_finish():
+    """Satellite: learning is off the dispatch path — a pathological
+    ``_apply_feedback`` neither slows ``note_finished`` nor escapes
+    ``drain_feedback``."""
+    class PathologicalPredictor(OnlineQuantilePredictor):
+        def _apply_feedback(self, item):
+            time.sleep(0.05)
+            raise RuntimeError("pathological update")
+
+    mem = TieredKVManager(MemoryConfig(hbm_bytes=100 * 100,
+                                       bytes_per_token_fp=100,
+                                       admit_headroom=0.0))
+    pred = PathologicalPredictor(seed=0)
+    sched = Scheduler(SchedulerConfig(max_batch=4), pred, LM, mem)
+    reset_request_counter()
+    r = Request(prompt_len=4, arrival_time=0.0, true_out_len=8,
+                prompt_tokens=[5, 6, 7, 8])
+    sched.submit(r, 0.0)
+    r.generated = 8
+    t0 = time.perf_counter()
+    sched.note_finished(r, 1.0)
+    assert time.perf_counter() - t0 < 0.02      # enqueue only, no update()
+    assert pred.feedback_depth() == 1
+    n = pred.drain_feedback()                   # exception swallowed here
+    assert n == 1
+    assert pred.gauges()["predictor_update_errors"] == 1.0
+
+
+# ------------------------------------------- mispredict-robust scheduling
+class StubQuantilePredictor(LengthPredictor):
+    """Fixed (p50, p90) surface for scheduler-level tests."""
+
+    def __init__(self, p50, p90=None):
+        self.p50, self.p90 = p50, p90
+        self.repredict_calls = 0
+
+    def predict_for(self, req):
+        spread = self.p90 / self.p50 - 1.0 if self.p90 is not None else 0.0
+        return Prediction(length=self.p50, source="stub", latency_s=0.0,
+                          p90=self.p90, spread=spread)
+
+    def repredict(self, req):
+        self.repredict_calls += 1
+        return None
+
+
+def mk_sched(pred, **over):
+    mem = TieredKVManager(MemoryConfig(hbm_bytes=1000 * 100,
+                                       bytes_per_token_fp=100,
+                                       admit_headroom=0.0))
+    cfg = SchedulerConfig(max_batch=4, base_quantum=0.1, quantum_growth=4.0,
+                          **over)
+    return Scheduler(cfg, pred, LM, mem)
+
+
+def mk_req(out_len=100, prompt=8):
+    return Request(prompt_len=prompt, arrival_time=0.0, true_out_len=out_len,
+                   prompt_tokens=list(range(2, 2 + prompt)))
+
+
+def test_skip_join_joins_p90_band_and_emits_event():
+    # both robustness paths surface the same observable: a high-spread
+    # arrival skips the band its optimistic p50 earned (spread-gated
+    # skip-join under p50 pricing; subsumed-but-reported under robust)
+    for pq in (None, 0.9):
+        sched = mk_sched(StubQuantilePredictor(p50=4, p90=2000),
+                         skip_join_spread=1.5, pricing_quantile=pq)
+        bus = EventBus()
+        sched.bus = bus
+        reset_request_counter()
+        r = mk_req()
+        sched.submit(r, 0.0)
+        skips = [e for e in bus.snapshot() if e.kind == "skip_join"]
+        assert len(skips) == 1 and skips[0].data["spread"] > 1.5
+        # deeper than an identical arrival from a point predictor
+        point_sched = mk_sched(StubQuantilePredictor(p50=4),
+                               skip_join_spread=1.5, pricing_quantile=pq)
+        reset_request_counter()
+        p50_only = mk_req()
+        point_sched.submit(p50_only, 0.0)
+        assert r.priority_level > p50_only.priority_level
+
+
+def test_robust_pricing_overrun_fires_at_p90():
+    pred = StubQuantilePredictor(p50=4, p90=40)
+    sched = mk_sched(pred, pricing_quantile=0.9)
+    reset_request_counter()
+    r = mk_req()
+    sched.submit(r, 0.0)
+    sched.mem.admit(r)
+    r.generated = 4                       # past p50: NOT an overrun
+    sched.note_generated(r, 1.0)
+    assert r.demotions == 0 and pred.repredict_calls == 0
+    r.generated = 40                      # past p90: demote + repredict
+    sched.note_generated(r, 2.0)
+    assert r.demotions == 1 and pred.repredict_calls == 1
+
+
+def test_p50_pricing_overrun_fires_at_p50():
+    pred = StubQuantilePredictor(p50=4, p90=40)
+    sched = mk_sched(pred, pricing_quantile=None, skip_join_spread=None)
+    reset_request_counter()
+    r = mk_req()
+    sched.submit(r, 0.0)
+    sched.mem.admit(r)
+    r.generated = 4
+    sched.note_generated(r, 1.0)
+    assert r.demotions == 1
+
+
+def test_repredict_reads_decaying_residual_quantile():
+    p = OnlineQuantilePredictor(OnlineConfig(min_residual_n=4, seed=0))
+    for y in (10, 20, 40, 80, 160, 320):
+        p._apply_feedback(Feedback(length=y, prompt_len=4))
+    r = mk_req()
+    r.generated = 15
+    r.predicted_p90 = 12
+    est1 = p.repredict(r)
+    assert est1 is not None and est1 > r.generated
+    assert r.predicted_p90 >= est1
+    r.repredictions = 2                   # deeper overrun: more conservative
+    est3 = p.repredict(r)
+    assert est3 >= est1
+    assert p.stats["repredicts"] == 2
+
+
+def test_backlog_quantile_surface_orders():
+    toks, lens = mixed_corpus(n_per=64)
+    pred = OnlineQuantilePredictor(seed=0)
+    pred.pretrain(toks, lens)
+    sched = mk_sched(pred)
+    reset_request_counter()
+    for t in toks[:6]:
+        r = Request(prompt_len=len(t), arrival_time=0.0, true_out_len=10,
+                    prompt_tokens=list(t))
+        sched.submit(r, 0.0)
+    b50, b90 = sched.backlog_quantiles()
+    assert b90 >= b50 > 0.0
+    assert sched.predicted_backlog(0.9) == pytest.approx(b90)
+    assert sched.predicted_backlog() == pytest.approx(b50)
+
+
+# -------------------------------------------------- quality analyzer folds
+def test_analyze_quality_hit_cold_decomposition_and_coverage():
+    evs = [
+        # hit request: predicted 10 vs generated 12, p90 covers
+        TraceEvent("predict", t=0.0, req_id=1,
+                   data={"p50": 10, "p90": 20, "prefix_hint": 32}),
+        TraceEvent("finish", t=1.0, req_id=1,
+                   data={"generated": 12, "predicted": 10, "arrival_t": 0.0,
+                         "first_token_t": 0.1}),
+        # cold request: predicted 50 vs generated 30, p90 misses
+        TraceEvent("predict", t=0.0, req_id=2,
+                   data={"p50": 50, "p90": 25, "prefix_hint": 0}),
+        TraceEvent("finish", t=2.0, req_id=2,
+                   data={"generated": 30, "predicted": 50, "arrival_t": 0.0,
+                         "first_token_t": 0.2}),
+        TraceEvent("repredict", t=0.5, req_id=1, data={}),
+        TraceEvent("skip_join", t=0.0, req_id=2, data={}),
+    ]
+    q = analyze_quality(evs)
+    est = q["estimate_error"]
+    assert est["len_signed_tok_hit"]["n"] == 1
+    assert est["len_signed_tok_hit"]["mean"] == pytest.approx(2.0)
+    assert est["len_signed_tok_cold"]["n"] == 1
+    assert est["len_signed_tok_cold"]["mean"] == pytest.approx(-20.0)
+    assert est["len_signed_tok"]["n"] == 2
+    assert q["p90_coverage"] == pytest.approx(0.5)
+    assert q["scheduler"]["repredictions"] == 1
+    assert q["scheduler"]["skip_joins"] == 1
+
+
+def test_finish_cached_prefix_fallback_splits_hit_cold():
+    """Engine-only streams (no gateway predict events) still decompose via
+    the finish event's ``cached_prefix`` field."""
+    q = analyze_quality([
+        TraceEvent("finish", t=1.0, req_id=1,
+                   data={"generated": 8, "predicted": 6, "cached_prefix": 16,
+                         "arrival_t": 0.0, "first_token_t": 0.1}),
+        TraceEvent("finish", t=1.0, req_id=2,
+                   data={"generated": 8, "predicted": 6, "cached_prefix": 0,
+                         "arrival_t": 0.0, "first_token_t": 0.1}),
+    ])
+    est = q["estimate_error"]
+    assert est["len_signed_tok_hit"]["n"] == 1
+    assert est["len_signed_tok_cold"]["n"] == 1
+
+
+# ------------------------------------------------------ simulator serving
+def test_simulator_online_learns_during_serve():
+    from repro.core.simulator import ServingSimulator, SimConfig, \
+        build_predictor
+    reset_request_counter()
+    tc = TraceConfig(dataset="alpaca", rate=8.0, duration=6.0, seed=0)
+    trace = generate_trace(tc)
+    cfg = SimConfig(model="opt-13b", strategy="alise", predictor="online")
+    sim = ServingSimulator(cfg, trace,
+                           predictor=build_predictor("online", tc, 128))
+    res = sim.run()
+    assert res.completed > 0
+    # served feedback drained between iterations, off the dispatch path
+    assert sim.predictor.stats["updates"] >= res.completed
+    assert sim.predictor.feedback_depth() == 0
+
+
+# ----------------------------------------- engine greedy bit-identity
+@pytest.fixture(scope="module")
+def model_and_params():
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models.model import Model
+    cfg = get_smoke_config("granite-3-8b")
+    model = Model(cfg, attn_chunk=32, remat=False)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _engine_reqs(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    reset_request_counter()
+    reqs = []
+    for out in (40, 3, 16, 3, 24, 3):
+        plen = int(rng.integers(6, 12))
+        reqs.append(Request(prompt_len=plen, arrival_time=0.0,
+                            true_out_len=out,
+                            prompt_tokens=rng.integers(
+                                2, cfg.vocab_size, plen).tolist()))
+    return reqs
+
+
+@pytest.mark.parametrize("backend", ["dense", "paged"])
+def test_greedy_bit_identity_learned_on_off(model_and_params, backend):
+    """Acceptance: the learned predictor only reorders work — greedy
+    outputs are bit-identical with it on or off, on both KV backends."""
+    from repro.core.engine import EngineConfig, ServingEngine
+    cfg, model, params = model_and_params
+
+    def serve(pred):
+        reqs = _engine_reqs(cfg)
+        kw = dict(max_slots=2, max_seq_len=64, max_new_tokens=48,
+                  strategy="alise", quantize_offload=False,
+                  kv_backend=backend)
+        if backend == "paged":
+            kw["page_size"] = 8
+        eng = ServingEngine(model, params, EngineConfig(**kw),
+                            predictor=pred)
+        eng.serve(reqs)
+        return {i: list(r.output_tokens) for i, r in enumerate(reqs)}
+
+    toks, lens = mixed_corpus(n_per=32)
+    learned = OnlineQuantilePredictor(seed=0)
+    learned.pretrain(toks, lens)
+    assert serve(learned) == serve(OraclePredictor())
+
+
+def test_admission_gates_on_configured_ttft_quantile(model_and_params):
+    """The TTFT admission gate prices the backlog at
+    ``AdmissionConfig.ttft_quantile`` (0.9 = calibrated-P90 surface) while
+    routing keeps its p50 view."""
+    from repro.core.engine import EngineConfig, ServingEngine
+    from repro.serving.gateway import (AdmissionConfig, Gateway,
+                                       GatewayConfig)
+    cfg, model, params = model_and_params
+    for q in (0.5, 0.9):
+        eng = ServingEngine(model, params, EngineConfig(
+            max_slots=2, max_seq_len=64, max_new_tokens=24,
+            strategy="alise", quantize_offload=False),
+            predictor=OraclePredictor())
+        gw = Gateway([eng], GatewayConfig(virtual_dt=0.05),
+                     AdmissionConfig(ttft_target_batch=1.0,
+                                     ttft_quantile=q))
+        drv = gw.router.drivers[0]
+        seen = []
+        orig = drv.predicted_backlog
+        drv.predicted_backlog = \
+            lambda quantile=None: (seen.append(quantile), orig(quantile))[1]
+        reset_request_counter()
+        r = Request(prompt_len=6, arrival_time=0.0, true_out_len=4,
+                    prompt_tokens=[2] * 6)
+        assert gw.expected_ttft(r) is not None
+        # routing peeks the p50 surface; the TTFT gate reads its quantile
+        assert seen[-1] == q
+    # engine surface: the p90 backlog is the conservative one
+    eng2 = ServingEngine(model, params, EngineConfig(
+        max_slots=2, max_seq_len=64, max_new_tokens=24, strategy="alise",
+        quantize_offload=False), predictor=OraclePredictor())
+    reset_request_counter()
+    for i in range(3):
+        eng2.submit(Request(prompt_len=6, arrival_time=0.0, true_out_len=12,
+                            prompt_tokens=[3] * 6), 0.0)
+    assert eng2.predicted_backlog(0.9) >= eng2.predicted_backlog() > 0.0

@@ -74,6 +74,7 @@ def test_misprediction_demotes_and_doubles():
     r = mk_req(out_len=100)
     sched.submit(r, 0.0)
     r.predicted_len = 4
+    r.predicted_p90 = None      # point predictor: p50 IS the priced estimate
     mem.admit(r)
     r.generated = 4
     lvl = r.priority_level
